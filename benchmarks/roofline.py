@@ -1,0 +1,123 @@
+"""Roofline report: reads the dry-run cell JSONs and emits the per-(arch ×
+shape × mesh) three-term roofline table (EXPERIMENTS.md §Roofline).
+
+Hardware constants (v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+  compute    = flops_per_device / 197e12          [s]
+  memory     = hbm_traffic_est_per_device / 819e9 [s]  (write+read proxy)
+  collective = collective_bytes_per_device / 50e9 [s]
+
+Dominant term = the bottleneck; roofline fraction = compute / max(all) —
+i.e. how much of the step is MXU-limited rather than stalled on HBM or ICI.
+Useful ratio = MODEL_FLOPS / (HLO flops × chips) — remat/padding/dispatch
+overhead visibility.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh: str = None):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        c = json.load(open(p))
+        if mesh and c.get("mesh") != mesh:
+            continue
+        cells.append(c)
+    return cells
+
+
+def terms(c):
+    """Returns (t_compute, t_memory, t_collective, dominant, frac, useful).
+
+    ``frac`` = dominant / (sum of terms): how close a perfectly-overlapped
+    step runs to its single-resource roofline (1.0 = one resource binds, the
+    others ride under it).  For train cells the *compute* term should
+    dominate; for decode, *memory* domination IS the roofline.  ``mfu_bound``
+    (= compute/max) is reported separately in the summary.
+    """
+    f = c["cost"]["flops_per_device"]
+    b = c["cost"]["bytes_traffic_est_per_device"]
+    k = c["collective_bytes_per_device"]
+    t_c = f / PEAK_FLOPS
+    t_m = b / HBM_BW
+    t_k = k / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_k, "collective"))
+    tot = t_c + t_m + t_k
+    frac = dom[0] / tot if tot > 0 else 0.0
+    useful = c["model_flops_global"] / max(f * c["n_chips"], 1.0)
+    return t_c, t_m, t_k, dom[1], frac, useful
+
+
+def mfu_bound(c) -> float:
+    t_c, t_m, t_k, *_ = terms(c)
+    m = max(t_c, t_m, t_k)
+    return t_c / m if m > 0 else 0.0
+
+
+def table(cells, fmt="md"):
+    hdr = ["arch", "shape", "mesh", "status", "mem GiB/dev", "compute s",
+           "memory s", "collective s", "dominant", "roofline frac",
+           "mfu bound", "useful ratio"]
+    rows = []
+    for c in cells:
+        if c["status"] == "skipped":
+            rows.append([c["arch"], c["shape"], c["mesh"], "skip(§7)",
+                         "-", "-", "-", "-", "-", "-", "-", "-"])
+            continue
+        if c["status"] != "ok":
+            rows.append([c["arch"], c["shape"], c["mesh"], "ERROR"] + ["-"] * 8)
+            continue
+        t_c, t_m, t_k, dom, frac, useful = terms(c)
+        rows.append([
+            c["arch"], c["shape"], c["mesh"], "ok",
+            f"{c['memory']['total_nonalias_bytes']/2**30:.2f}",
+            f"{t_c:.3f}", f"{t_m:.3f}", f"{t_k:.3f}", dom,
+            f"{frac:.3f}", f"{mfu_bound(c):.3f}", f"{useful:.3f}",
+        ])
+    if fmt == "md":
+        out = ["| " + " | ".join(hdr) + " |",
+               "|" + "---|" * len(hdr)]
+        out += ["| " + " | ".join(str(x) for x in r) + " |" for r in rows]
+        return "\n".join(out)
+    return "\n".join(",".join(str(x) for x in r) for r in [hdr] + rows)
+
+
+def main():
+    mesh = None
+    fmt = "md"
+    args = sys.argv[1:]
+    if "--csv" in args:
+        fmt = "csv"
+    if "--mesh" in args:
+        mesh = args[args.index("--mesh") + 1]
+    cells = load_cells(mesh)
+    if not cells:
+        print("no dry-run cells found — run: python -m repro.launch.dryrun --all")
+        return 1
+    print(table(cells, fmt))
+    ok = [c for c in cells if c["status"] == "ok"]
+    if ok:
+        trains = [c for c in ok if c["shape"].startswith("train")]
+        worst = min(trains or ok, key=mfu_bound)
+        coll = max(ok, key=lambda c: terms(c)[2])
+        print(f"\nworst train mfu bound:  {worst['arch']} {worst['shape']} "
+              f"{worst['mesh']} ({mfu_bound(worst):.3f})")
+        print(f"most collective-bound:  {coll['arch']} {coll['shape']} "
+              f"{coll['mesh']} ({terms(coll)[2]:.2f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

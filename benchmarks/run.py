@@ -1,0 +1,121 @@
+"""Benchmark harness.  Prints ``name,us_per_call,derived`` CSV.
+
+Sections:
+  paper.*    — the paper's quantitative claims (benchmarks/paper_claims.py);
+               derived = paper's own value where it states one.
+  micro.*    — CPU microbenchmarks of the PCILT fetch paths vs direct
+               multiplication at several shapes/cardinalities.
+  lm.*       — PCILT decode-projection table memory for the assigned archs
+               (the paper's memory feasibility analysis applied to the zoo).
+  roofline.* — summary terms per hillclimbed cell (full table:
+               ``python -m benchmarks.roofline``).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _timeit(fn, reps=5, warmup=2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def paper_rows():
+    from benchmarks.paper_claims import all_claims
+
+    out = []
+    for name, ours, paper, _ in all_claims():
+        out.append((f"paper.{name}", ours, paper if paper is not None else ""))
+    return out
+
+
+def micro_rows():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (QuantSpec, calibrate, build_grouped_tables,
+                            pcilt_linear, quantize, dequantize)
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for (bits, group, n, out, batch) in [(1, 8, 2048, 256, 256),
+                                         (2, 4, 2048, 256, 256),
+                                         (4, 2, 1024, 256, 256)]:
+        spec = QuantSpec(bits)
+        x = jnp.asarray(np.abs(rng.normal(size=(batch, n))), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(n, out)), jnp.float32)
+        s = calibrate(x, spec)
+        T = build_grouped_tables(w, spec, s, group)
+        xq = dequantize(quantize(x, spec, s), spec, s)
+
+        dm = jax.jit(lambda xq, w: xq @ w)
+        ga = jax.jit(lambda x, T: pcilt_linear(x, T, spec, s, group, path="gather"))
+        oh = jax.jit(lambda x, T: pcilt_linear(x, T, spec, s, group, path="onehot"))
+        dm(xq, w).block_until_ready()
+        t_dm = _timeit(lambda: dm(xq, w).block_until_ready())
+        t_ga = _timeit(lambda: ga(x, T).block_until_ready())
+        t_oh = _timeit(lambda: oh(x, T).block_until_ready())
+        tag = f"b{bits}g{group}_{n}x{out}"
+        rows.append((f"micro.dm_{tag}", t_dm, ""))
+        rows.append((f"micro.lut_gather_{tag}", t_ga, f"{t_dm/t_ga:.2f}x vs dm"))
+        rows.append((f"micro.lut_onehot_{tag}", t_oh, f"{t_dm/t_oh:.2f}x vs dm"))
+    return rows
+
+
+def lm_rows():
+    from repro.configs import ARCHS, get_config
+    from repro.core.serving import mlp_table_bytes
+
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        if not cfg.d_ff:
+            continue
+        b = mlp_table_bytes(cfg.d_model, cfg.d_ff, act_bits=4, group=2)
+        rows.append((f"lm.mlp_tables_{arch}", b / 2**20,
+                     "MiB/layer @INT4 g=2 — why ext.3 sharing matters"))
+    return rows
+
+
+def roofline_rows():
+    import glob
+    import json
+    import os
+    from benchmarks.roofline import terms, DRYRUN_DIR
+
+    rows = []
+    targets = [
+        ("llama4-maverick-400b-a17b", "train_4k", "pod16x16"),
+        ("qwen3-0.6b", "train_4k", "pod16x16"),
+        ("granite-moe-3b-a800m", "decode_32k", "pod16x16"),
+    ]
+    for arch, shape, mesh in targets:
+        safe = arch.replace(".", "_")
+        p = os.path.join(DRYRUN_DIR, f"{safe}__{shape}__{mesh}.json")
+        if not os.path.exists(p):
+            continue
+        c = json.load(open(p))
+        if c["status"] != "ok":
+            continue
+        t_c, t_m, t_k, dom, frac, useful = terms(c)
+        rows.append((f"roofline.{arch}.{shape}.step_s",
+                     (max(t_c, t_m, t_k)) * 1e6,
+                     f"dom={dom} frac={frac:.3f} useful={useful:.3f}"))
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for section in (paper_rows, micro_rows, lm_rows, roofline_rows):
+        for name, val, derived in section():
+            print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

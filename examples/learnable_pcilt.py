@@ -1,0 +1,55 @@
+"""Extension 4 demo — "Using PCILTs as Weights".
+
+Trains table entries directly (no filter weights) on a small regression
+task at each of the paper's four adjustment granularities, then reconstructs
+classic filters from the trained tables ("analyze the final PCILT values and
+build back from them weight-adjusted input filters").
+
+    PYTHONPATH=src python examples/learnable_pcilt.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    QuantSpec, calibrate, init_learnable_pcilt, apply_learnable_pcilt,
+    effective_tables, extract_filters,
+)
+
+
+def main():
+    spec = QuantSpec(bits=2)
+    key = jax.random.PRNGKey(0)
+    n_in, n_out, batch = 16, 4, 64
+    x = jnp.abs(jax.random.normal(key, (batch, n_in)))
+    w_true = jax.random.normal(jax.random.fold_in(key, 1), (n_in, n_out))
+    y = x @ w_true
+    scale = float(calibrate(x, spec))
+
+    for gran in ("filter", "table", "offset", "entry"):
+        params = init_learnable_pcilt(
+            jax.random.fold_in(key, 2), n_in, n_out, spec, scale, group=2,
+            granularity=gran)
+
+        def loss(p):
+            return jnp.mean((apply_learnable_pcilt(p, x, spec, scale, 2) - y) ** 2)
+
+        l0 = float(loss(params))
+        for _ in range(150):
+            g = jax.grad(loss)(params)
+            params = jax.tree.map(lambda a, b: a - 0.03 * b, params, g)
+        print(f"granularity={gran:7s}  loss {l0:8.4f} -> {float(loss(params)):8.4f}"
+              f"   (params adjusted: "
+              f"{[k for k in params if k != 'base']})")
+
+    # reconstruct classic filters from the entry-trained tables
+    w_rec = extract_filters(effective_tables(params), spec, scale, 2)
+    err = float(jnp.mean((x @ w_rec - apply_learnable_pcilt(
+        params, x, spec, scale, 2)) ** 2))
+    print(f"\nfilters rebuilt from tables: surrogate-DM vs LUT mse={err:.5f} "
+          "(exact when tables stay in the product manifold; the residual is "
+          "the extra expressivity per-entry training bought)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Continuous-batching serving demo: batched requests through the slot
+engine (prefill + decode with KV cache recycling).
+
+    PYTHONPATH=src python examples/serve_engine.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen3-0.6b", "--requests", "6", "--max-new", "12",
+          "--slots", "3"])

@@ -1,0 +1,2 @@
+"""Sharded / elastic / async checkpointing."""
+from .checkpoint import save, restore, latest_step, Checkpointer

@@ -1,0 +1,32 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B backbone: 32L d4096 32H (GQA
+kv=8) d_ff 14336 vocab 32000, sliding window 4096.  Vision frontend STUBBED
+per assignment: input_specs supplies projected patch embeddings (anyres
+tiling resolved host-side); 576 image tokens prepended (early fusion).
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+
+The 4096-token sliding window makes decode a rolling KV buffer ->
+``long_500k`` runs with constant memory (DESIGN.md §7).
+"""
+
+from .base import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="llava-next-mistral-7b", family="vlm",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=14336, vocab=32000, head_dim=128,
+        window=4096, n_img_tokens=576,
+        rope_theta=1000000.0,
+        remat_policy="full", loss_chunk=2048,
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="llava-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=256, head_dim=16,
+        window=32, n_img_tokens=8,
+        remat_policy="none", loss_chunk=0,
+    )

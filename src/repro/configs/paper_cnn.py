@@ -1,0 +1,17 @@
+"""The paper's own 5-layer CNN example (50-80-120-200-350 channels, 5x5
+filters, INT8/INT4 activations) — the faithful reproduction target.  Not an
+assigned LM cell; exercised by examples/quickstart.py and benchmarks.
+"""
+
+from repro.models.cnn import PaperCNN
+from repro.core import QuantSpec
+
+
+def config():
+    return PaperCNN(in_channels=1, n_classes=10,
+                    act_spec=QuantSpec(bits=8), group=1)
+
+
+def smoke_config():
+    return PaperCNN(in_channels=1, n_classes=10, channels=(8, 12),
+                    act_spec=QuantSpec(bits=2), group=1)

@@ -1,0 +1,29 @@
+"""whisper-medium [audio] — enc-dec, 24+24L d1024 16H (MHA) d_ff 4096,
+vocab 51865, LayerNorm+GELU, sinusoidal positions, conv frontend STUBBED:
+input_specs supplies precomputed 1500-frame embeddings (30 s of audio).
+[arXiv:2212.04356; unverified]
+"""
+
+from .base import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="whisper-medium", family="audio",
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=4096, vocab=51865,
+        encoder_layers=24, encoder_len=1500,
+        pos_embed="sinusoidal",
+        remat_policy="full", loss_chunk=1024,
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="whisper-smoke", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256,
+        encoder_layers=2, encoder_len=16,
+        pos_embed="sinusoidal",
+        remat_policy="none", loss_chunk=0,
+    )

@@ -1,0 +1,193 @@
+"""PCILT inference layers.
+
+Each layer executes the paper's fetch-instead-of-multiply semantics through
+one of three interchangeable paths that produce bit-identical arithmetic:
+
+* ``path="gather"`` — the literal algorithm: offsets address table rows
+  (paper Fig. 2/6).  Reference semantics; also the right shape for CPU.
+* ``path="onehot"`` — ``T[off] == onehot(off) @ T``: re-expresses every fetch
+  as an MXU matmul.  This is the TPU-idiomatic lookup (DESIGN.md §2) and the
+  path the distributed dry-run lowers, since it partitions like any einsum.
+* ``path="kernel"`` — the Pallas TPU kernel (``repro.kernels``): tables tiled
+  into VMEM via BlockSpec, offsets packed on the VPU.
+
+The convolution layers reduce to the linear case by im2col — a PCILT is
+indexed by (segment, offset) regardless of whether the segment came from a
+flattened conv receptive field or a projection row.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantization import QuantSpec, quantize
+from .offsets import SegmentPlan, pack_offsets
+from .pcilt import build_grouped_tables
+
+__all__ = [
+    "lut_lookup",
+    "pcilt_linear",
+    "pcilt_conv2d",
+    "pcilt_depthwise_conv1d",
+    "im2col",
+]
+
+
+def lut_lookup(tables: jax.Array, offsets: jax.Array, path: str = "gather") -> jax.Array:
+    """Fetch-and-sum: ``sum_s T[s, off[..., s], :]``.
+
+    tables: ``[G, V, O]`` grouped PCILTs.  offsets: integer ``[..., G]``.
+    Returns ``[..., O]``.
+    """
+    G, V, O = tables.shape
+    if path == "gather":
+        # Literal table addressing.  [..., G, O] partials, then the adder tree.
+        partial = jnp.take_along_axis(
+            tables[(None,) * (offsets.ndim - 1)],
+            offsets[..., None, None].astype(jnp.int32),
+            axis=-2,
+        )[..., 0, :]
+        return jnp.sum(partial, axis=-2)
+    if path == "onehot":
+        oh = jax.nn.one_hot(offsets, V, dtype=tables.dtype)  # [..., G, V]
+        return jnp.einsum("...gv,gvo->...o", oh, tables)
+    if path == "kernel":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        flat = offsets.reshape(-1, G)
+        out = ops.pcilt_gemv(flat.astype(jnp.int32), tables)
+        return out.reshape(*offsets.shape[:-1], O)
+    raise ValueError(f"unknown path {path!r}")
+
+
+def pcilt_linear(
+    x: jax.Array,
+    tables: jax.Array,
+    spec: QuantSpec,
+    scale,
+    group: int,
+    plan: Optional[SegmentPlan] = None,
+    path: str = "gather",
+) -> jax.Array:
+    """Quantize -> pack offsets -> fetch -> sum.   ``x: [..., n] -> [..., out]``."""
+    codes = quantize(x, spec, scale)
+    if plan is None:
+        offsets = pack_offsets(codes, spec.bits, group)
+    else:
+        offsets = plan.pack(codes, spec.bits)
+    return lut_lookup(tables, offsets, path=path)
+
+
+def im2col(
+    x: jax.Array, kh: int, kw: int, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """NHWC ``[B,H,W,C] -> [B,Ho,Wo,kh*kw*C]`` patch extraction."""
+    pads = ((0, 0),) * 4
+    if padding == "SAME":
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        pads = ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0))
+    xp = jnp.pad(x, pads)
+    B, H, W, C = xp.shape
+    Ho = (H - kh) // stride + 1
+    Wo = (W - kw) // stride + 1
+    # Extract with a static double loop over the (small) kernel extent; XLA
+    # fuses these slices.  Patch layout [kh, kw, C] flattened, matching the
+    # filter flattening in pcilt_conv2d.
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(
+                jax.lax.slice(
+                    xp,
+                    (0, i, j, 0),
+                    (B, i + (Ho - 1) * stride + 1, j + (Wo - 1) * stride + 1, C),
+                    (1, stride, stride, 1),
+                )
+            )
+    return jnp.concatenate(cols, axis=-1).reshape(B, Ho, Wo, kh * kw * C)
+
+
+def pcilt_conv2d(
+    x: jax.Array,
+    filters: jax.Array,
+    spec: QuantSpec,
+    scale,
+    group: int,
+    stride: int = 1,
+    padding: str = "SAME",
+    tables: Optional[jax.Array] = None,
+    path: str = "gather",
+) -> jax.Array:
+    """PCILT convolution, NHWC ``[B,H,W,Cin] -> [B,Ho,Wo,Cout]``.
+
+    filters: ``[kh, kw, Cin, Cout]``.  Tables may be passed pre-built (the
+    normal deployment: built once, reused for the network lifetime); when
+    omitted they are built on the fly (tests / calibration).
+    """
+    kh, kw, cin, cout = filters.shape
+    n = kh * kw * cin
+    pad_n = (-n) % group
+    wflat = filters.reshape(n, cout)
+    if pad_n:
+        wflat = jnp.concatenate([wflat, jnp.zeros((pad_n, cout), wflat.dtype)], 0)
+    if tables is None:
+        tables = build_grouped_tables(wflat, spec, scale, group)
+    patches = im2col(x, kh, kw, stride, padding)
+    if pad_n:
+        zeros = jnp.zeros((*patches.shape[:-1], pad_n), patches.dtype)
+        patches = jnp.concatenate([patches, zeros], axis=-1)
+    return pcilt_linear(patches, tables, spec, scale, group, path=path)
+
+
+def pcilt_depthwise_conv1d(
+    x: jax.Array,
+    filters: jax.Array,
+    spec: QuantSpec,
+    scale,
+    tables: Optional[jax.Array] = None,
+    path: str = "gather",
+) -> jax.Array:
+    """Causal depthwise conv1d where *one fetch produces one output element*.
+
+    x: ``[B, T, C]``; filters: ``[k, C]`` (k taps per channel).  The k taps of
+    a channel form exactly one PCILT segment, so the packed offset of the k
+    input codes addresses a ``[C, K**k]`` table directly — the cleanest TPU
+    incarnation of the paper's claim that small filters over large data are
+    the technique's sweet spot (Mamba/Zamba frontends: k=4).
+    """
+    k, C = filters.shape
+    B, T, _ = x.shape
+    codes = quantize(x, spec, scale)  # [B, T, C]
+    # Causal tap window: stack codes of t-k+1..t  ->  [B, T, C, k]
+    padded = jnp.pad(codes, ((0, 0), (k - 1, 0), (0, 0)))
+    taps = jnp.stack([padded[:, i : i + T] for i in range(k)], axis=-1)
+    shifts = jnp.arange(k, dtype=jnp.int32) * spec.bits
+    offsets = jnp.sum(
+        jnp.left_shift(taps.astype(jnp.int32), shifts[None, None, None]), axis=-1
+    )  # [B, T, C]
+    if tables is None:
+        # Table per channel: [C, V].  Segment j-th slot corresponds to tap j
+        # (slot j in the offset == codes at time t-k+1+j  ⇒ weight = filt[j]).
+        from .offsets import offset_grid
+        from .quantization import code_values
+
+        vals = code_values(spec, scale)[offset_grid(spec.bits, k)]  # [V, k]
+        tables = jnp.einsum("vk,kc->cv", vals, filters.astype(vals.dtype))
+    if path == "gather":
+        return jnp.take_along_axis(
+            jnp.broadcast_to(tables, (B, T) + tables.shape),
+            offsets[..., None],
+            axis=-1,
+        )[..., 0]
+    if path == "onehot":
+        V = tables.shape[-1]
+        oh = jax.nn.one_hot(offsets, V, dtype=tables.dtype)  # [B,T,C,V]
+        return jnp.einsum("btcv,cv->btc", oh, tables)
+    if path == "kernel":
+        from repro.kernels import ops
+
+        return ops.pcilt_dwconv1d(offsets, tables)
+    raise ValueError(f"unknown path {path!r}")

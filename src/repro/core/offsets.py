@@ -1,0 +1,127 @@
+"""Activation -> PCILT-offset pre-processing (paper extension 1, Figs. 5-7).
+
+A PCILT *offset* is the integer address into a lookup table.  In the basic
+algorithm the offset is a single activation code.  The extension packs ``g``
+codes of cardinality ``K = 2**bits`` into one offset in ``[0, K**g)`` so a
+single fetch retrieves the pre-summed partial dot-product of a whole filter
+segment — the paper's BoolHash instance packs 8 booleans into an 8-bit offset.
+
+On the paper's ASIC this packing is "separate circuitry ... through fast
+operations (bit shifting and masking)".  On TPU we do exactly that on the VPU:
+left-shifts and adds when ``K`` is a power of two (always true here).
+
+The generalized form (paper: "activations ... a bitstream that can be
+reprocessed into PCILT offsets in any needed way", Fig. 7) is expressed by a
+``SegmentPlan``: an index map that may group *non-adjacent* positions, skip
+positions entirely, or use one position in several segments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .quantization import QuantSpec
+
+__all__ = ["pack_offsets", "unpack_offsets", "offset_grid", "SegmentPlan"]
+
+
+def _group_count(n: int, g: int) -> int:
+    if n % g != 0:
+        raise ValueError(f"reduction length {n} not divisible by group size {g}")
+    return n // g
+
+
+def pack_offsets(codes: jax.Array, bits: int, group: int) -> jax.Array:
+    """Pack the trailing axis of ``codes`` into offsets, ``group`` at a time.
+
+    codes: integer codes in [0, 2**bits), shape ``[..., n]`` with ``n % group == 0``.
+    Returns offsets of shape ``[..., n // group]`` with values in
+    ``[0, 2**(bits*group))``, packed little-endian (slot ``j`` occupies bits
+    ``[j*bits, (j+1)*bits)``) via shift-or — the paper's shift/mask circuitry.
+    """
+    if bits * group > 30:
+        raise ValueError(f"offset width {bits * group} bits exceeds int32 packing")
+    n = codes.shape[-1]
+    G = _group_count(n, group)
+    c = codes.astype(jnp.int32).reshape(*codes.shape[:-1], G, group)
+    shifts = (jnp.arange(group, dtype=jnp.int32) * bits)[(None,) * (c.ndim - 1)]
+    return jnp.sum(jnp.left_shift(c, shifts), axis=-1).astype(jnp.int32)
+
+
+def unpack_offsets(offsets: jax.Array, bits: int, group: int) -> jax.Array:
+    """Inverse of :func:`pack_offsets`: ``[..., G] -> [..., G*group]`` codes."""
+    mask = (1 << bits) - 1
+    shifts = jnp.arange(group, dtype=jnp.int32) * bits
+    codes = jnp.bitwise_and(
+        jnp.right_shift(offsets[..., None], shifts[(None,) * offsets.ndim]), mask
+    )
+    return codes.reshape(*offsets.shape[:-1], offsets.shape[-1] * group)
+
+
+def offset_grid(bits: int, group: int) -> jax.Array:
+    """All ``K**group`` offsets unpacked into their per-slot codes.
+
+    Shape ``[K**group, group]`` — row ``v`` holds the ``group`` activation
+    codes whose packed offset equals ``v``.  This is the enumeration the table
+    builder convolves with a weight segment (paper Fig. 5).
+    """
+    n_off = 1 << (bits * group)
+    return unpack_offsets(jnp.arange(n_off, dtype=jnp.int32)[:, None], bits, group)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPlan:
+    """Generalized activation->segment mapping (paper Fig. 7).
+
+    ``index[G, group]`` gives, for each segment slot, which flattened input
+    position feeds it; ``-1`` marks an unused slot (reads as code 0 with a
+    zero weight — the paper's "zero values are omitted").  A position may
+    appear in more than one segment ("weights ... used in segments more than
+    once", weighting it beyond the nominal filter range), and positions may be
+    skipped entirely ("eliminating non-important filter positions").
+    """
+
+    index: np.ndarray  # int32 [G, group]
+
+    @staticmethod
+    def contiguous(n: int, group: int) -> "SegmentPlan":
+        G = _group_count(n, group)
+        return SegmentPlan(np.arange(n, dtype=np.int32).reshape(G, group))
+
+    @property
+    def n_segments(self) -> int:
+        return self.index.shape[0]
+
+    @property
+    def group(self) -> int:
+        return self.index.shape[1]
+
+    def gather_codes(self, codes: jax.Array) -> jax.Array:
+        """``[..., n] -> [..., G, group]`` codes per segment slot (skips -> 0)."""
+        idx = jnp.asarray(np.where(self.index < 0, 0, self.index))
+        g = jnp.take(codes, idx.reshape(-1), axis=-1)
+        g = g.reshape(*codes.shape[:-1], *self.index.shape)
+        return jnp.where(jnp.asarray(self.index >= 0), g, 0)
+
+    def gather_weights(self, w: jax.Array) -> jax.Array:
+        """``[n, ...] -> [G, group, ...]`` weight per segment slot (skips -> 0)."""
+        idx = jnp.asarray(np.where(self.index < 0, 0, self.index))
+        g = jnp.take(w, idx.reshape(-1), axis=0)
+        g = g.reshape(*self.index.shape, *w.shape[1:])
+        mask = jnp.asarray(self.index >= 0).reshape(
+            *self.index.shape, *([1] * (w.ndim - 1))
+        )
+        return jnp.where(mask, g, 0)
+
+    def pack(self, codes: jax.Array, bits: int) -> jax.Array:
+        """Codes ``[..., n] -> offsets [..., G]`` following the plan."""
+        seg = self.gather_codes(codes).astype(jnp.int32)
+        shifts = (jnp.arange(self.group, dtype=jnp.int32) * bits)[
+            (None,) * (seg.ndim - 1)
+        ]
+        return jnp.sum(jnp.left_shift(seg, shifts), axis=-1).astype(jnp.int32)

@@ -1,0 +1,246 @@
+"""Pre-Calculated Inference Lookup Table (PCILT) construction.
+
+"Prior to the learning start, the multiplications of the filter values by all
+possible activation values are calculated and placed in pre-calculated lookup
+tables" (paper, §Basic Version).  This module builds those tables, in all the
+paper's flavors:
+
+* **scalar tables** — one table per weight, ``T[k, a] = f(w_k, val(a))``
+  (basic algorithm, Fig. 1);
+* **grouped tables** — one table per weight *segment*, entries hold the
+  pre-summed partial dot product of the whole segment against one packed
+  offset (extension 1, Fig. 5);
+* **shared tables** — tables dedupe to the weight's *actual* cardinality;
+  layers keep integer pointers into a shared pool (extension 3), with an
+  optional second indirection level onto unique table *values*;
+* **custom convolutional functions** — ``f`` need not be multiplication
+  (extension 2); any ``f(w, a_val)`` builds at the same cost and executes at
+  zero extra inference cost.
+
+Memory accounting lives here too (``table_bytes`` and friends) — the paper's
+own feasibility argument is a memory argument, and ``benchmarks/paper_claims``
+reproduces its 1.65 GB / ~100 MB / ~75 MB / ~25 MB / ~18 MB examples from
+these formulas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .quantization import QuantSpec, code_values
+from .offsets import SegmentPlan, offset_grid
+
+__all__ = [
+    "mul_fn",
+    "log_mul_fn",
+    "build_scalar_tables",
+    "build_grouped_tables",
+    "SharedTables",
+    "build_shared_tables",
+    "table_bytes",
+    "grouped_table_bytes",
+    "shared_table_bytes",
+    "build_cost_multiplies",
+]
+
+# ----------------------------------------------------------------------------
+# Convolutional functions (extension 2).  A convolutional function maps a
+# (weight, activation-value) pair to the number that enters the adder tree.
+# The classic choice is multiplication; anything else rides for free because
+# only the table build evaluates it.
+# ----------------------------------------------------------------------------
+
+
+def mul_fn(w, a):
+    """The classic convolution: plain product."""
+    return w * a
+
+
+def log_mul_fn(w, a, gamma: float = 1.0):
+    """A paper-suggested custom function: log-compressed product.
+
+    Rescales the inferred value range non-uniformly (paper: "re-scale and
+    modify the range of the inferred values and their distribution").
+    """
+    p = w * a
+    return jnp.sign(p) * jnp.log1p(gamma * jnp.abs(p)) / gamma
+
+
+# ----------------------------------------------------------------------------
+# Table builders
+# ----------------------------------------------------------------------------
+
+
+def build_scalar_tables(
+    w: jax.Array,
+    spec: QuantSpec,
+    scale,
+    fn: Callable = mul_fn,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Basic PCILT: per-weight tables.
+
+    w: ``[n, out]`` reduction-major weights (a conv filter is flattened to
+      ``n = kh*kw*cin`` per output channel).
+    Returns ``T[n, K, out]`` with ``T[k, a, o] = fn(w[k, o], val(a))``.
+    """
+    vals = code_values(spec, scale, dtype)  # [K]
+    return fn(w[:, None, :].astype(dtype), vals[None, :, None])
+
+
+def build_grouped_tables(
+    w: jax.Array,
+    spec: QuantSpec,
+    scale,
+    group: int,
+    plan: Optional[SegmentPlan] = None,
+    fn: Callable = mul_fn,
+    dtype=jnp.float32,
+    build_chunk: int = 4096,
+) -> jax.Array:
+    """Extension-1 PCILT: per-segment pre-summed tables (Fig. 5).
+
+    w: ``[n, out]``; segments follow ``plan`` (default: ``group`` contiguous
+    positions per segment).  Returns ``T[G, V, out]`` with ``V = K**group``::
+
+        T[s, v, o] = sum_j fn(w_seg[s, j, o], val(code_j(v)))
+
+    so that a single fetch ``T[s, offset, o]`` yields the entire segment's
+    contribution.  Built once per network lifetime; the build enumerates all
+    ``V`` offsets (chunked so huge ``V`` stays within memory).
+    """
+    n, out = w.shape
+    if plan is None:
+        plan = SegmentPlan.contiguous(n, group)
+    w_seg = plan.gather_weights(w).astype(dtype)  # [G, g, out]
+    grid = offset_grid(spec.bits, plan.group)  # [V, g] codes
+    vals = code_values(spec, scale, dtype)[grid]  # [V, g] values
+    V = vals.shape[0]
+
+    if fn is mul_fn:
+        return jnp.einsum("vj,gjo->gvo", vals, w_seg)
+
+    def chunk_tables(vchunk):  # [C, g] -> [G, C, out]
+        contrib = fn(w_seg[:, None, :, :], vchunk[None, :, :, None])
+        return jnp.sum(contrib, axis=2)
+
+    chunks = [
+        chunk_tables(vals[i : i + build_chunk]) for i in range(0, V, build_chunk)
+    ]
+    return jnp.concatenate(chunks, axis=1)
+
+
+# ----------------------------------------------------------------------------
+# Shared tables (extension 3)
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SharedTables:
+    """Weight-deduped PCILT pool.
+
+    ``pool[x, a] = fn(unique_w[x], val(a))`` and every layer weight is replaced
+    by a pointer ``w_idx`` into the pool — "keep only one PCILT for given
+    algorithm base value(s) and replace the others with pointers to it".
+
+    With ``value_pool`` set, a second indirection maps table cells onto unique
+    *values* (the paper's variant for low per-value diversity): ``pool`` then
+    holds integer indices into ``value_pool``.
+    """
+
+    pool: jax.Array  # [X, K] table values, or int indices if value_pool
+    w_idx: jax.Array  # [n, out] uint16 pointers into pool rows
+    unique_w: jax.Array  # [X]
+    value_pool: Optional[jax.Array] = None  # [U] unique table values
+
+    def lookup(self, codes: jax.Array) -> jax.Array:
+        """codes ``[..., n]`` -> summed dot result ``[..., out]`` (gather path)."""
+        full = self.materialize()  # [n, K, out]
+        g = jnp.take_along_axis(
+            full[None], codes[..., :, None, None].astype(jnp.int32), axis=2
+        )  # [..., n, 1, out]
+        return jnp.sum(g[..., 0, :], axis=-2)
+
+    def materialize(self) -> jax.Array:
+        """Expand pointers back into dense per-weight tables ``[n, K, out]``."""
+        pool = self.pool
+        if self.value_pool is not None:
+            pool = self.value_pool[pool]
+        return jnp.transpose(pool[self.w_idx], (0, 2, 1))  # [n, out, K]->[n,K,out]
+
+    @property
+    def actual_cardinality(self) -> int:
+        return int(self.unique_w.shape[0])
+
+
+def build_shared_tables(
+    w: jax.Array,
+    spec: QuantSpec,
+    scale,
+    fn: Callable = mul_fn,
+    dedup_values: bool = False,
+    dtype=jnp.float32,
+) -> SharedTables:
+    """Build the shared pool for weights whose *actual* cardinality is small.
+
+    Must run outside jit (uses ``np.unique`` on concrete weights — table
+    construction is an offline, once-per-lifetime step in the paper).
+    """
+    w_np = np.asarray(w)
+    uniq, inv = np.unique(w_np, return_inverse=True)
+    vals = code_values(spec, scale, dtype)  # [K]
+    pool = fn(jnp.asarray(uniq, dtype)[:, None], vals[None, :])  # [X, K]
+    value_pool = None
+    if dedup_values:
+        pv, pinv = np.unique(np.asarray(pool), return_inverse=True)
+        value_pool = jnp.asarray(pv, dtype)
+        pool = jnp.asarray(pinv.reshape(pool.shape), jnp.int32)
+    return SharedTables(
+        pool=pool,
+        w_idx=jnp.asarray(inv.reshape(w_np.shape), jnp.int32),
+        unique_w=jnp.asarray(uniq, dtype),
+        value_pool=value_pool,
+    )
+
+
+# ----------------------------------------------------------------------------
+# Memory & build-cost accounting (drives benchmarks/paper_claims.py)
+# ----------------------------------------------------------------------------
+
+
+def table_bytes(n_weights: int, act_bits: int, value_bytes: int) -> int:
+    """Basic-PCILT memory: one ``2**act_bits``-entry table per weight."""
+    return n_weights * (1 << act_bits) * value_bytes
+
+
+def grouped_table_bytes(
+    n_weights: int, act_bits: int, group: int, value_bytes: int
+) -> int:
+    """Extension-1 memory: ``K**group`` entries per segment of ``group`` weights."""
+    segments = -(-n_weights // group)
+    return segments * (1 << (act_bits * group)) * value_bytes
+
+
+def shared_table_bytes(
+    actual_cardinality: int, act_bits_list: Sequence[int], value_bytes: int,
+    nested: bool = False,
+) -> int:
+    """Extension-3 memory: unique tables only.
+
+    ``nested=True`` models the paper's note that the table for a lower
+    cardinality is a prefix of the higher-cardinality one, so only the largest
+    table per base value is kept.
+    """
+    if nested:
+        return actual_cardinality * (1 << max(act_bits_list)) * value_bytes
+    return actual_cardinality * sum(1 << b for b in act_bits_list) * value_bytes
+
+
+def build_cost_multiplies(n_weights: int, act_bits: int) -> int:
+    """Multiplications to build basic tables (paper: 5x5 INT8 -> 6,400)."""
+    return n_weights * (1 << act_bits)

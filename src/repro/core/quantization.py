@@ -1,0 +1,141 @@
+"""Low-cardinality quantization for PCILT.
+
+The paper's precondition is "low-cardinality activations": an activation can
+only take ``K = 2**bits`` distinct values, so the product space
+``{f(w, a) : a in codes}`` is enumerable and can be pre-calculated into a
+lookup table.
+
+This module provides the quantizers that produce those codes:
+
+* symmetric / asymmetric affine quantization at 1..8 bits,
+* absmax calibration,
+* a straight-through estimator (STE) so quantized layers remain trainable
+  (needed by the paper's "Using PCILTs as Weights" extension, and by
+  quantization-aware training of the serving path).
+
+Codes are always *unsigned* integers in ``[0, K)`` — in the paper they are the
+table offsets, so an unsigned representation is the natural one.  The value a
+code represents is ``(code - zero_point) * scale``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantSpec",
+    "calibrate",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "code_values",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a quantization grid.
+
+    Attributes:
+      bits: bit-width; cardinality is ``2**bits``.  The paper's sweet spot is
+        ``bits <= 4`` ("many CNNs would be able to perform adequately with
+        activation cardinality up to INT4"); ``bits == 1`` is the BoolHash
+        boolean case.
+      symmetric: if True the grid is centered (zero_point = (K-1)/2 rounded
+        for signed data); if False the grid spans ``[0, K)`` with zero_point 0
+        (natural for post-ReLU activations, which is the common CNN case).
+    """
+
+    bits: int = 4
+    symmetric: bool = False
+
+    def __post_init__(self):
+        if not (1 <= self.bits <= 8):
+            raise ValueError(f"PCILT targets 1..8 bit cardinality, got {self.bits}")
+        if self.bits == 1 and self.symmetric:
+            # a 2-value affine grid cannot straddle zero symmetrically; the
+            # paper's boolean case is the asymmetric {0, 1} grid.
+            raise ValueError("1-bit quantization must be asymmetric (boolean)")
+
+    @property
+    def cardinality(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def zero_point(self) -> int:
+        # Symmetric grids put zero mid-range so negative activations are
+        # representable; asymmetric grids are for non-negative data.
+        return (self.cardinality // 2) if self.symmetric else 0
+
+    @property
+    def storage_dtype(self):
+        return jnp.uint8  # all supported cardinalities fit a byte
+
+
+def calibrate(x: jax.Array, spec: QuantSpec, axis=None) -> jax.Array:
+    """Absmax scale so that the observed range maps onto the code grid.
+
+    Returns ``scale`` such that ``x / scale`` lands in the representable
+    integer range.  ``axis`` permits per-channel calibration.
+    """
+    if spec.symmetric:
+        # codes cover [-zp, K-1-zp]; bound by the smaller side magnitude.
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+        span = max(spec.cardinality - 1 - spec.zero_point, 1)
+    else:
+        amax = jnp.max(jnp.maximum(x, 0.0), axis=axis, keepdims=axis is not None)
+        span = spec.cardinality - 1
+    return jnp.maximum(amax, 1e-8) / span
+
+
+def quantize(x: jax.Array, spec: QuantSpec, scale) -> jax.Array:
+    """Real values -> integer codes in ``[0, K)`` (uint8)."""
+    q = jnp.round(x / scale) + spec.zero_point
+    q = jnp.clip(q, 0, spec.cardinality - 1)
+    return q.astype(spec.storage_dtype)
+
+
+def dequantize(codes: jax.Array, spec: QuantSpec, scale, dtype=jnp.float32) -> jax.Array:
+    """Integer codes -> real values on the quantization grid."""
+    return (codes.astype(dtype) - spec.zero_point) * jnp.asarray(scale, dtype)
+
+
+def code_values(spec: QuantSpec, scale, dtype=jnp.float32) -> jax.Array:
+    """The ``K`` real values the grid can represent, indexed by code.
+
+    This is the axis along which every PCILT is laid out: table entry ``T[a]``
+    holds ``f(w, code_values()[a])``.
+    """
+    codes = jnp.arange(spec.cardinality, dtype=jnp.int32)
+    return dequantize(codes, spec, scale, dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jax.Array, spec: QuantSpec, scale) -> jax.Array:
+    """Quantize-dequantize with a straight-through gradient.
+
+    Used for quantization-aware training and for the activations feeding
+    learnable PCILTs (extension 4): forward sees grid values, backward passes
+    the gradient straight through inside the clip range.
+    """
+    return dequantize(quantize(x, spec, scale), spec, scale, x.dtype)
+
+
+def _fq_fwd(x, spec, scale):
+    lo = (0 - spec.zero_point) * scale
+    hi = (spec.cardinality - 1 - spec.zero_point) * scale
+    return fake_quant(x, spec, scale), (x, lo, hi)
+
+
+def _fq_bwd(spec, res, g):
+    x, lo, hi = res
+    mask = ((x >= lo) & (x <= hi)).astype(g.dtype)
+    return (g * mask, None)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)

@@ -1,0 +1,83 @@
+"""PCILT serving-mode conversion for LM decode paths.
+
+Implements the paper's deployment story for the framework's language models:
+an *offline* table build ("done only once in the lifetime of a CNN") that
+converts selected projection kernels into grouped PCILTs, plus the decode
+helpers that execute them via the fetch paths.  Used by
+``examples/serve_pcilt.py`` and the integration tests; the per-architecture
+table-memory accounting (the paper's own feasibility analysis applied to the
+10 assigned archs) is in ``benchmarks/paper_claims.py``.
+
+Scoping (DESIGN.md §6): tables address the *decode GEMV* regime — batch-
+starved, memory-bound — and the conv frontends.  Weight-side cardinality is
+reduced by weight quantization first (paper: tables exist per distinct weight
+value; shared-PCILT keeps memory feasible).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantization import QuantSpec, calibrate, quantize, dequantize
+from .pcilt import build_grouped_tables
+from .lut_layers import pcilt_linear
+
+__all__ = ["PCILTLinear", "convert_kernel", "pcilt_apply", "mlp_table_bytes"]
+
+
+class PCILTLinear:
+    """A converted projection: grouped tables + activation quantizer."""
+
+    def __init__(self, tables: jax.Array, spec: QuantSpec, scale: jax.Array,
+                 group: int):
+        self.tables = tables
+        self.spec = spec
+        self.scale = scale
+        self.group = group
+
+    def __call__(self, x: jax.Array, path: str = "gather") -> jax.Array:
+        n = self.tables.shape[0] * self.group
+        pad = n - x.shape[-1]
+        if pad:
+            x = jnp.concatenate([x, jnp.zeros((*x.shape[:-1], pad), x.dtype)], -1)
+        return pcilt_linear(x, self.tables, self.spec, self.scale, self.group,
+                            path=path)
+
+
+def convert_kernel(kernel: jax.Array, act_spec: QuantSpec, act_scale,
+                   group: int, weight_bits: Optional[int] = None) -> PCILTLinear:
+    """Offline build for one [d_in, d_out] kernel.
+
+    weight_bits: optionally quantize weights first (lowers table value
+    diversity, the precondition for shared-PCILT dedup, ext. 3)."""
+    k = kernel.astype(jnp.float32)
+    if kernel.ndim > 2:
+        k = k.reshape(kernel.shape[0], -1)
+    if weight_bits:
+        wspec = QuantSpec(bits=weight_bits, symmetric=True)
+        wscale = calibrate(k, wspec)
+        k = dequantize(quantize(k, wspec, wscale), wspec, wscale)
+    n, out = k.shape
+    pad = (-n) % group
+    if pad:
+        k = jnp.concatenate([k, jnp.zeros((pad, out), k.dtype)], 0)
+    tables = build_grouped_tables(k, act_spec, act_scale, group)
+    return PCILTLinear(tables, act_spec, act_scale, group)
+
+
+def pcilt_apply(lin: PCILTLinear, x: jax.Array, path: str = "gather"):
+    return lin(x, path=path)
+
+
+def mlp_table_bytes(d_model: int, d_ff: int, act_bits: int, group: int,
+                    value_bytes: int = 2) -> int:
+    """Per-layer table memory for a gated MLP (3 kernels) — the feasibility
+    number the paper's memory argument turns on.  Each kernel [n, out]
+    becomes [n/group, 2**(bits*group), out] tables."""
+    V = 1 << (act_bits * group)
+    gate_up = 2 * (d_model // group) * V * d_ff * value_bytes
+    down = (d_ff // group) * V * d_model * value_bytes
+    return gate_up + down

@@ -1,0 +1,2 @@
+"""Data pipeline (seeded synthetic LM corpus + modality stubs)."""
+from .pipeline import SyntheticLM

@@ -1,0 +1,53 @@
+"""Jit'd dispatch wrappers for the PCILT Pallas kernels.
+
+Handles platform selection (compiled Pallas on TPU, ``interpret=True``
+elsewhere so the exact kernel body is validated on CPU), padding to tile
+multiples, and unpadding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .pcilt_gemv import pcilt_gemv_pallas
+from .pcilt_conv2d import pcilt_conv2d_pallas
+from .pcilt_dwconv1d import pcilt_dwconv1d_pallas
+
+__all__ = ["pcilt_gemv", "pcilt_conv2d", "pcilt_dwconv1d", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def pcilt_gemv(offsets: jax.Array, tables: jax.Array) -> jax.Array:
+    """offsets [B, G] int32, tables [G, V, O] -> [B, O]."""
+    B, O = offsets.shape[0], tables.shape[-1]
+    offsets, _ = _pad_axis(offsets, 0, 8)
+    tables, _ = _pad_axis(tables, 2, 128 if tables.shape[-1] >= 128 else 1)
+    out = pcilt_gemv_pallas(offsets, tables, interpret=not on_tpu())
+    return out[:B, :O]
+
+
+def pcilt_conv2d(offsets: jax.Array, tables: jax.Array) -> jax.Array:
+    """offsets [B, Ho, Wo, G] int32, tables [G, V, O] -> [B, Ho, Wo, O]."""
+    return pcilt_conv2d_pallas(offsets, tables, interpret=not on_tpu())
+
+
+def pcilt_dwconv1d(offsets: jax.Array, tables: jax.Array) -> jax.Array:
+    """offsets [B, T, C] int32, tables [C, V] -> [B, T, C]."""
+    C = offsets.shape[-1]
+    offsets, padc = _pad_axis(offsets, 2, 128 if C >= 128 else 1)
+    tables, _ = _pad_axis(tables, 0, 128 if C >= 128 else 1)
+    out = pcilt_dwconv1d_pallas(offsets, tables, interpret=not on_tpu())
+    return out[..., :C]

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: PCILT conv2d over pre-packed patch offsets.
+
+The host side (``ops.py``) quantizes and im2col-packs the image into offsets
+``[B, Ho, Wo, G]`` (the paper's pre-processing circuitry, §Extensions); this
+kernel performs the fetch-and-add over spatial tiles:
+
+    out[b, y, x, o] = sum_g tables[g, offsets[b, y, x, g], o]
+
+Blocking: the grid walks (batch, row-tile, table-stage); each step stages a
+``[Gb, V, Ob]`` table slice in VMEM and processes a ``[Hb, Wo]`` strip of the
+image, so the same staged tables are reused across the whole strip — the
+conv-specific win the paper leans on (small filter, large data ⇒ the table is
+read once and hit many times).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pcilt_conv2d_pallas"]
+
+
+def _kernel(off_ref, tab_ref, out_ref, *, Gb: int, V: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    _, Hb, W, _ = off_ref.shape
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (Hb * W, V), 1)
+
+    def body(g, acc):
+        oh = (off_ref[0, :, :, g].reshape(Hb * W)[:, None] == lanes).astype(
+            tab_ref.dtype
+        )
+        return acc + jnp.dot(oh, tab_ref[g], preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(
+        0, Gb, body, jnp.zeros((Hb * W, out_ref.shape[-1]), jnp.float32)
+    )
+    out_ref[...] += acc.reshape(out_ref.shape).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def pcilt_conv2d_pallas(
+    offsets: jax.Array,
+    tables: jax.Array,
+    row_tile: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """offsets ``[B, Ho, Wo, G]`` int32, tables ``[G, V, O]`` -> ``[B, Ho, Wo, O]``."""
+    B, H, W, G = offsets.shape
+    G2, V, O = tables.shape
+    assert G == G2
+    Hb = min(row_tile, H)
+    while H % Hb:
+        Hb -= 1
+    # Stage all G tables when they fit (~8MB), else one group at a time.
+    Gb = G if G * V * O * 4 <= 8 * 2**20 else 1
+    while G % Gb:
+        Gb -= 1
+    grid = (B, H // Hb, G // Gb)
+    return pl.pallas_call(
+        functools.partial(_kernel, Gb=Gb, V=V),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hb, W, Gb), lambda b, i, k: (b, i, 0, k)),
+            pl.BlockSpec((Gb, V, O), lambda b, i, k: (k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hb, W, O), lambda b, i, k: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W, O), tables.dtype),
+        interpret=interpret,
+    )(offsets, tables)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: PCILT depthwise conv1d — one fetch per output element.
+
+For a k-tap causal depthwise conv with activation cardinality K, the k input
+codes of a channel pack into one offset and the whole tap-dot is a single
+table cell:  ``out[b, t, c] = tables[c, offsets[b, t, c]]``.
+
+This is the purest PCILT case on TPU (Mamba2 / Zamba2 conv frontends, k=4):
+there is no reduction left — the kernel is a blocked masked-sum "gather"
+executed on the VPU, with the per-channel tables staged in VMEM and reused
+across the entire time axis (small filter × long signal, the paper's sweet
+spot).  Channels ride the 128-lane axis; time rides sublanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pcilt_dwconv1d_pallas"]
+
+
+def _kernel(off_ref, tab_ref, out_ref, *, V: int):
+    _, Tb, Cb = off_ref.shape
+    # For every offset value v: mask where off == v, add T[c, v].
+    # Expressed as a V-step accumulation entirely on the VPU; V is small for
+    # the depthwise case (K**k with K<=4, k=4 ⇒ V<=256).
+    def body(v, acc):
+        hit = (off_ref[0] == v).astype(tab_ref.dtype)  # [Tb, Cb]
+        return acc + hit * tab_ref[:, v][None, :]
+
+    out_ref[0] = jax.lax.fori_loop(
+        0, V, body, jnp.zeros((Tb, Cb), tab_ref.dtype)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("time_tile", "interpret"))
+def pcilt_dwconv1d_pallas(
+    offsets: jax.Array,
+    tables: jax.Array,
+    time_tile: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """offsets ``[B, T, C]`` int32, tables ``[C, V]`` -> out ``[B, T, C]``."""
+    B, T, C = offsets.shape
+    C2, V = tables.shape
+    assert C == C2
+    Tb = min(time_tile, T)
+    while T % Tb:
+        Tb -= 1
+    Cb = min(C, 128)
+    while C % Cb:
+        Cb -= 1
+    grid = (B, T // Tb, C // Cb)
+    return pl.pallas_call(
+        functools.partial(_kernel, V=V),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Tb, Cb), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((Cb, V), lambda b, i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Tb, Cb), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, T, C), tables.dtype),
+        interpret=interpret,
+    )(offsets, tables)

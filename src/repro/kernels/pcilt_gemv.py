@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: grouped PCILT GEMV/GEMM.
+
+Computes ``out[b, o] = sum_g tables[g, offsets[b, g], o]`` — the paper's
+fetch-and-add inner loop (Fig. 6), re-blocked for the TPU memory hierarchy:
+
+* **tables live in VMEM**: each grid step stages a ``[Gb, V, Ob]`` table tile
+  (the ASIC's "fast memory block ... situated next to the results adder"
+  becomes a BlockSpec-tiled VMEM resident);
+* **fetch = one-hot x MXU**: inside the kernel each group's fetch row is
+  expressed as ``onehot(offsets) @ table`` so the systolic array performs the
+  gather+add of ``Bb`` lanes at once — the TPU-native equivalent of the
+  paper's per-PCILT address/data bus (DESIGN.md §2);
+* **adder tree = grid accumulation**: the G grid axis is innermost and
+  revisits the same output tile, accumulating partial sums in place.
+
+VMEM budget per step (f32): ``Gb*V*Ob + Bb*V + Bb*Ob + Bb*Gb`` words.  The
+default tile picks ``Ob=128`` (lane width), ``Bb=128`` (sublane-friendly), and
+bounds ``Gb`` so the staged tables stay under ~8 MB, leaving headroom in the
+~16 MB/core VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pcilt_gemv_pallas", "default_tiles"]
+
+
+def default_tiles(B: int, G: int, V: int, O: int, vmem_budget: int = 8 * 2**20):
+    """Pick (Bb, Gb, Ob) tiles: MXU-aligned where possible, VMEM-bounded."""
+    Ob = min(O, 128)
+    Bb = min(B, 128)
+    words = vmem_budget // 4
+    gb_cap = max(1, (words - Bb * V - Bb * Ob) // max(V * Ob, 1))
+    Gb = max(1, min(G, gb_cap))
+    while G % Gb:  # grid needs an integral number of G tiles
+        Gb -= 1
+    return Bb, Gb, Ob
+
+
+def _kernel(off_ref, tab_ref, out_ref, *, Gb: int, V: int):
+    """One (Bb, Ob) output tile; accumulate over the Gb staged tables."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    Bb = off_ref.shape[0]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (Bb, V), 1)
+
+    def body(g, acc):
+        # one-hot of this group's offsets: [Bb, V] — VPU compare ...
+        oh = (off_ref[:, g][:, None] == lanes).astype(tab_ref.dtype)
+        # ... then the "fetch" for all Bb rows at once on the MXU.
+        return acc + jnp.dot(
+            oh, tab_ref[g], preferred_element_type=jnp.float32
+        )
+
+    acc = jax.lax.fori_loop(
+        0, Gb, body, jnp.zeros(out_ref.shape, jnp.float32)
+    )
+    out_ref[...] += acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pcilt_gemv_pallas(
+    offsets: jax.Array, tables: jax.Array, interpret: bool = False
+) -> jax.Array:
+    """offsets ``[B, G]`` int32, tables ``[G, V, O]`` -> ``[B, O]`` float.
+
+    B, G, O are padded to tile multiples by the caller (see ``ops.py``).
+    """
+    B, G = offsets.shape
+    G2, V, O = tables.shape
+    assert G == G2, (G, G2)
+    Bb, Gb, Ob = default_tiles(B, G, V, O)
+    grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G // Gb)
+    return pl.pallas_call(
+        functools.partial(_kernel, Gb=Gb, V=V),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bb, Gb), lambda i, j, k: (i, k)),
+            pl.BlockSpec((Gb, V, Ob), lambda i, j, k: (k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((Bb, Ob), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, O), tables.dtype),
+        interpret=interpret,
+    )(offsets, tables)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the shape/dtype sweep tests in
+``tests/test_kernels.py`` assert against (and double as readable statements of
+each kernel's contract).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pcilt_gemv_ref", "pcilt_conv2d_ref", "pcilt_dwconv1d_ref"]
+
+
+def pcilt_gemv_ref(offsets: jax.Array, tables: jax.Array) -> jax.Array:
+    """offsets [B, G], tables [G, V, O] -> [B, O]: sum_g T[g, off[b,g], :]."""
+    picked = jnp.take_along_axis(
+        tables[None], offsets[:, :, None, None].astype(jnp.int32), axis=2
+    )  # [B, G, 1, O]
+    return jnp.sum(picked[:, :, 0, :], axis=1).astype(tables.dtype)
+
+
+def pcilt_conv2d_ref(offsets: jax.Array, tables: jax.Array) -> jax.Array:
+    """offsets [B, H, W, G], tables [G, V, O] -> [B, H, W, O]."""
+    B, H, W, G = offsets.shape
+    flat = pcilt_gemv_ref(offsets.reshape(-1, G), tables)
+    return flat.reshape(B, H, W, tables.shape[-1])
+
+
+def pcilt_dwconv1d_ref(offsets: jax.Array, tables: jax.Array) -> jax.Array:
+    """offsets [B, T, C], tables [C, V] -> [B, T, C]: T[c, off[b,t,c]]."""
+    B, T, C = offsets.shape
+    return jnp.take_along_axis(
+        jnp.broadcast_to(tables, (B, T) + tables.shape),
+        offsets[..., None].astype(jnp.int32),
+        axis=-1,
+    )[..., 0]

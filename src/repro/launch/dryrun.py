@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single-pod, 2×16×16 multi-pod),
+  2. lowers the right step function against ShapeDtypeStruct inputs
+     (nothing is allocated — a 400B-param train step lowers on a CPU host),
+  3. compiles, records ``memory_analysis()`` / ``cost_analysis()``,
+  4. parses collective bytes out of the compiled HLO,
+  5. caches everything to ``experiments/dryrun/<cell>.json``.
+
+``python -m repro.launch.dryrun --all`` runs the whole grid; failures are
+recorded (and are bugs).  The roofline report (benchmarks/roofline.py) reads
+these JSONs.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.steps import (
+    make_train_step, make_prefill_step, make_decode_step, active_matmul_params,
+)
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.optim import AdamWConfig, cosine_schedule
+from repro.models import build_model
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _line_bytes(line: str) -> int:
+    """Largest typed buffer on an HLO line — a robust per-device byte proxy
+    for AR (out=in), AG (out largest), RS (in largest), A2A (equal)."""
+    best = 0
+    for dt, dims in _SHAPE_RE.findall(line):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES[dt])
+    return best
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if not ls.startswith("%") and not ls.startswith("ROOT"):
+            continue
+        for k in _COLL:
+            if re.search(rf"= [^=]*\b{k}(?:-start|-done)?\(", ls):
+                if f"{k}-done" in ls:  # paired with -start; count once
+                    continue
+                out[k]["count"] += 1
+                out[k]["bytes"] += _line_bytes(ls)
+                break
+    return out
+
+
+#: §Perf hillclimbing variants — baseline cells carry no variant suffix.
+VARIANTS = {
+    "base": {},
+    # H-A1/H-A2 (llama4 train, collective-bound): bf16 gradient reductions +
+    # half the microbatch re-gathers
+    "bf16grads": {"bf16_grads": True},
+    "llama4opt": {"bf16_grads": True, "grad_accum": 2},
+    # H-C1 (dense train): ZeRO-1 — params model-sharded only, moments shard
+    # over data, one param all-gather per step instead of per-layer FSDP
+    "zero1": {"bf16_grads": True, "zero1": True,
+              "rule_overrides": {"embed": None,
+                                  "opt_embed": ("data", "pod")}},
+    # H-B1 (decode): KV-cache time axis shards over the model axis;
+    # q-heads replicate at decode (tiny) so attention contracts sharded T
+    "kvshard": {"rule_overrides": {"cache_seq": "model", "heads": None}},
+    # H-B2: time-sharded cache only — projections stay TP; the partitioner
+    # gathers the tiny q instead of the huge KV
+    "kvshard2": {"rule_overrides": {"cache_seq": "model"}},
+    # H-C1b: ZeRO-1 with gradients *pinned* to the data-sharded moment
+    # layout (reduce-scatter, not all-reduce)
+    "zero1b": {"bf16_grads": True, "zero1": True, "pin_grads": True,
+               "rule_overrides": {"embed": None,
+                                   "opt_embed": ("data", "pod")}},
+    # H-C2/H-A3: explicit bf16 psum_scatter row-parallel matmuls (o_proj +
+    # down_proj) instead of partitioner-chosen fp32 all-reduces
+    "rowrs": {"explicit_rs": True},
+    # combined best-known for llama4 train
+    "llama4opt2": {"explicit_rs": True, "grad_accum": 2},
+    # no microbatching: minimum weight re-gathers (memory traded away —
+    # the multi-pod mesh is the feasible home for 400B training state)
+    "llama4opt3": {"explicit_rs": True, "grad_accum": 1},
+}
+
+
+def _skip_reason(cfg, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: 500k-token decode KV is the quadratic "
+                "regime the assignment skips (DESIGN.md §7)")
+    return None
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             cfg=None, variant: str = "base") -> Dict:
+    import dataclasses
+
+    v = VARIANTS[variant]
+    cfg = cfg or get_config(arch)
+    if "grad_accum" in v:
+        cfg = dataclasses.replace(cfg, grad_accum=v["grad_accum"])
+    rule_overrides = v.get("rule_overrides")
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "variant": variant,
+            "time": time.strftime("%Y-%m-%d %H:%M:%S")}
+    reason = _skip_reason(cfg, shape_name)
+    if reason:
+        cell.update(status="skipped", reason=reason)
+        return cell
+    sh = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    try:
+        t0 = time.time()
+        specs = input_specs(arch, shape_name, mesh, cfg=cfg,
+                            rule_overrides=rule_overrides,
+                            zero1=v.get("zero1", False))
+        if sh.kind == "train":
+            ocfg = AdamWConfig(lr=cosine_schedule(3e-4, 100, 10000),
+                               quantize_moments=cfg.name.startswith("llama4"))
+            grad_sh = None
+            if v.get("pin_grads"):
+                from repro.nn.module import ParamSpec, shardings as _mk_sh
+                from repro.launch.specs import data_spec as _ds
+                pspecs = build_model(cfg).param_specs()
+                remap = jax.tree.map(
+                    lambda sp: ParamSpec(
+                        sp.shape,
+                        tuple("opt_embed" if a == "embed" else a
+                              for a in sp.axes),
+                        sp.dtype, sp.init, sp.scale),
+                    pspecs, is_leaf=lambda x: isinstance(x, ParamSpec))
+                grad_sh = _mk_sh(remap, mesh, _ds(mesh, rule_overrides))
+            step = make_train_step(cfg, mesh, ocfg,
+                                   bf16_grads=v.get("bf16_grads", False),
+                                   rule_overrides=rule_overrides,
+                                   grad_shardings=grad_sh,
+                                   explicit_rs=v.get("explicit_rs", False))
+            args = (specs["params"], specs["opt_state"], specs["batch"])
+            out_sh = (
+                jax.tree.map(lambda s: s.sharding, specs["params"]),
+                jax.tree.map(lambda s: s.sharding, specs["opt_state"]),
+                None,
+            )
+            jitted = jax.jit(step, donate_argnums=(0, 1), out_shardings=out_sh)
+        elif sh.kind == "prefill":
+            step = make_prefill_step(cfg, mesh, rule_overrides=rule_overrides)
+            args = (specs["params"], specs["batch"])
+            jitted = jax.jit(step)
+        else:
+            step = make_decode_step(cfg, mesh, rule_overrides=rule_overrides)
+            args = (specs["params"], specs["cache"], specs["tokens"])
+            out_sh = (None, jax.tree.map(lambda s: s.sharding, specs["cache"]))
+            jitted = jax.jit(step, donate_argnums=(1,), out_shardings=out_sh)
+
+        with mesh:
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        hlo = compiled.as_text()
+        # trip-count-weighted per-device analysis (cost_analysis counts while
+        # bodies once — see launch/hlo_analysis.py)
+        hw = analyze_hlo(hlo)
+
+        n_active = active_matmul_params(cfg)
+        tokens = sh.global_batch * (sh.seq_len if sh.kind != "decode" else 1)
+        factor = 6 if sh.kind == "train" else 2
+        model_flops = factor * n_active * tokens
+
+        cell.update(
+            status="ok",
+            n_chips=n_chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "total_nonalias_bytes": mem.argument_size_in_bytes
+                + mem.temp_size_in_bytes + mem.output_size_in_bytes
+                - mem.alias_size_in_bytes,
+            },
+            cost_raw={  # while-bodies-once (XLA native numbers, for reference)
+                "flops_per_device": ca.get("flops", 0.0),
+                "bytes_accessed_per_device": ca.get("bytes accessed", 0.0),
+            },
+            cost={  # trip-count weighted, per device
+                "flops_per_device": hw["flops"],
+                "bytes_traffic_est_per_device": hw["bytes_traffic_est"],
+            },
+            collectives=hw["coll"],
+            collective_bytes_per_device=hw["collective_bytes"],
+            top_collectives=hw["top_collectives"],
+            top_buffers=hw["top_buffers"],
+            model_flops_global=model_flops,
+            n_active_params=n_active,
+        )
+    except Exception as e:  # noqa: BLE001 — recorded, it's a bug
+        cell.update(status="error", error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc()[-2000:])
+    return cell
+
+
+def cell_path(arch: str, shape_name: str, mesh_name: str,
+              variant: str = "base") -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    safe = arch.replace("/", "_").replace(".", "_")
+    suffix = "" if variant == "base" else f"__{variant}"
+    return os.path.join(OUT_DIR,
+                        f"{safe}__{shape_name}__{mesh_name}{suffix}.json")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--force", action="store_true", help="ignore cache")
+    p.add_argument("--variant", default="base", choices=sorted(VARIANTS))
+    args = p.parse_args()
+
+    archs = ARCHS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if (args.both_meshes or args.all) else (args.multi_pod,)
+
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = cell_path(arch, shape_name, mesh_name, args.variant)
+                if os.path.exists(path) and not args.force:
+                    cell = json.load(open(path))
+                    if cell.get("status") == "ok" or cell.get("status") == "skipped":
+                        print(f"[cached] {arch} {shape_name} {mesh_name}: "
+                              f"{cell['status']}")
+                        n_ok += cell["status"] == "ok"
+                        n_skip += cell["status"] == "skipped"
+                        continue
+                print(f"[run]    {arch} {shape_name} {mesh_name} ...",
+                      flush=True)
+                cell = run_cell(arch, shape_name, mp, variant=args.variant)
+                json.dump(cell, open(path, "w"), indent=1)
+                if cell["status"] == "ok":
+                    n_ok += 1
+                    print(f"         ok: compile {cell['compile_s']}s, "
+                          f"mem/dev {cell['memory']['total_nonalias_bytes']/2**30:.2f} GiB, "
+                          f"coll/dev {cell['collective_bytes_per_device']/2**20:.1f} MiB")
+                elif cell["status"] == "skipped":
+                    n_skip += 1
+                    print(f"         skipped: {cell['reason'][:80]}")
+                else:
+                    n_err += 1
+                    print(f"         ERROR: {cell['error']}")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

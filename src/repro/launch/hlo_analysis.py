@@ -1,0 +1,342 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` (and a naive grep of the HLO text) counts
+a ``while`` body **once** — but our models scan over layers, so flops,
+bytes and collective traffic inside the loop execute ``trip_count`` times.
+This module walks the compiled HLO module:
+
+* splits it into computations,
+* builds a per-computation symbol table (``%name -> shape``),
+* costs each computation: dot flops (2·|out|·|contraction|), collective
+  bytes per kind (largest typed buffer on the op line — a faithful per-device
+  proxy for AR(out=in)/AG(out)/RS(in)/A2A), and an HBM-traffic proxy
+  (Σ output-buffer bytes of top-level ops, ×2 for reads),
+* recursively multiplies ``while`` bodies by their trip count (parsed from
+  the loop condition's comparison constant) and follows ``call``/fusion
+  references,
+* returns totals for the entry computation.
+
+Validated against analytic 6·N·D math in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "COLLECTIVES"]
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+#: ops whose outputs the HBM-traffic proxy counts.  The dry-run compiles for
+#: the CPU backend, which fuses far less aggressively than TPU — standalone
+#: elementwise/convert/broadcast ops would fuse into their consumers on TPU,
+#: so counting them would overstate HBM traffic ~10x.  We count the ops that
+#: genuinely materialize buffers on TPU: matmuls, fusions, data movement,
+#: reductions and scatter/gather.
+_TRAFFIC_OPS = {
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "gather",
+    "scatter", "dynamic-slice", "dynamic-update-slice", "copy", "transpose",
+    "concatenate", "pad", "reverse", "sort", "select-and-scatter", "slice",
+    "iota", "rng", "cholesky", "triangular-solve", "fft",
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n"\s*:\s*"(\d+)"')
+
+
+def _shape_info(typestr: str) -> Tuple[int, List[int], Optional[str]]:
+    """bytes, dims, dtype of the *first* typed buffer in a type string."""
+    m = _SHAPE_RE.search(typestr)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return 0, [], None
+    dt = m.group(1)
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES[dt], dims, dt
+
+
+def _all_buffer_bytes(line: str) -> List[int]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(line):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES[dt])
+    return out
+
+
+class _Comp:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.shapes: Dict[str, Tuple[int, List[int], Optional[str]]] = {}
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = _Comp(m.group(1))
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        ls = line.strip()
+        cur.lines.append(ls)
+        dm = _DEF_RE.match(ls)
+        if dm:
+            cur.shapes[dm.group(1)] = _shape_info(dm.group(2))
+    return comps, entry
+
+
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_WHILE_RE = re.compile(r"while\(.*?\),.*?condition=%?([\w\.\-]+),.*?body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_count(cond: _Comp) -> int:
+    """Scan-canonical loops compare the induction var against a constant."""
+    best = 1
+    for ls in cond.lines:
+        if "compare(" in ls:
+            # constant may be inline or defined earlier in the computation
+            m = _CONST_RE.search(ls)
+            if m:
+                best = max(best, int(m.group(1)))
+            else:
+                for op in _OPERAND_RE.findall(ls.split("compare(")[1]):
+                    for l2 in cond.lines:
+                        if l2.startswith(f"%{op} ") or l2.startswith(f"{op} "):
+                            m2 = _CONST_RE.search(l2)
+                            if m2:
+                                best = max(best, int(m2.group(1)))
+    return best
+
+
+def _op_name(ls: str) -> Optional[str]:
+    """The HLO opcode of a definition line."""
+    dm = _DEF_RE.match(ls)
+    if not dm:
+        return None
+    rhs = dm.group(2)
+    # strip the output type: first token(s) up to the op name
+    m = re.search(r"(?:\)|\]|\}|\w)\s+([a-z][\w\-]*)\(", rhs)
+    return m.group(1) if m else None
+
+
+def _dot_flops(comp: _Comp, ls: str) -> float:
+    dm = _DEF_RE.match(ls)
+    if not dm:
+        return 0.0
+    out_bytes, out_dims, out_dt = _shape_info(dm.group(2))
+    out_numel = math.prod(out_dims) if out_dims else 0
+    # contraction size: product of lhs contracting dims
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ls)
+    inner = ls.split("dot(", 1)[1] if "dot(" in ls else ""
+    args = inner.split("),", 1)[0] if inner else ""
+    ops = _OPERAND_RE.findall(args)
+    contract = 1
+    if cm and ops:
+        lhs = comp.shapes.get(ops[0])
+        if lhs and lhs[1]:
+            for d in cm.group(1).split(","):
+                if d and int(d) < len(lhs[1]):
+                    contract *= lhs[1][int(d)]
+        else:
+            # operand type inline in the dot args
+            _, dims, _ = _shape_info(args)
+            for d in cm.group(1).split(","):
+                if d and int(d) < len(dims):
+                    contract *= dims[int(d)]
+    return 2.0 * out_numel * contract
+
+
+def _conv_flops(comp: _Comp, ls: str) -> float:
+    dm = _DEF_RE.match(ls)
+    if not dm:
+        return 0.0
+    _, out_dims, _ = _shape_info(dm.group(2))
+    out_numel = math.prod(out_dims) if out_dims else 0
+    inner = ls.split("convolution(", 1)[1] if "convolution(" in ls else ""
+    ops = _OPERAND_RE.findall(inner.split("),", 1)[0]) if inner else []
+    if len(ops) >= 2:
+        rhs = comp.shapes.get(ops[1])
+        if rhs and rhs[1]:
+            _, out_full, _ = _shape_info(dm.group(2))
+            # flops = 2 * out_numel * (kernel numel / out_channels)
+            kn = math.prod(rhs[1])
+            # out feature dim is usually the last dim of out
+            of = out_full[-1] if out_full else 1
+            return 2.0 * out_numel * (kn / max(of, 1))
+    return 0.0
+
+
+def _dus_update_bytes(comp: "_Comp", comps: Dict[str, "_Comp"], ls: str,
+                      op: str) -> Optional[int]:
+    """Bytes actually written by (possibly fused) dynamic-update-slice."""
+    def update_size(c: _Comp, line: str) -> Optional[int]:
+        inner = line.split("dynamic-update-slice(", 1)
+        if len(inner) < 2:
+            return None
+        ops = _OPERAND_RE.findall(inner[1].split(")", 1)[0])
+        if len(ops) >= 2 and ops[1] in c.shapes:
+            return c.shapes[ops[1]][0]
+        return None
+
+    if op == "dynamic-update-slice":
+        return update_size(comp, ls)
+    if op == "fusion":
+        for ref in _CALLS_RE.findall(ls):
+            sub = comps.get(ref)
+            if sub is None:
+                continue
+            for l2 in sub.lines:
+                if l2.startswith("ROOT") and "dynamic-update-slice(" in l2:
+                    return update_size(sub, l2)
+    return None
+
+
+def analyze_hlo(hlo: str, top_k: int = 25) -> Dict:
+    comps, entry = _split_computations(hlo)
+    cache: Dict[str, Dict] = {}
+    _OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+    def _z():
+        return {"flops": 0.0, "bytes_out": 0.0,
+                "coll": {k: {"count": 0.0, "bytes": 0.0} for k in COLLECTIVES},
+                "coll_lines": [], "buf_lines": []}
+
+    def _merge(total, sub, scale):
+        total["flops"] += scale * sub["flops"]
+        total["bytes_out"] += scale * sub["bytes_out"]
+        for k in COLLECTIVES:
+            total["coll"][k]["count"] += scale * sub["coll"][k]["count"]
+            total["coll"][k]["bytes"] += scale * sub["coll"][k]["bytes"]
+        for kind, b, label in sub["coll_lines"]:
+            total["coll_lines"].append((kind, scale * b, label))
+        for b, label in sub["buf_lines"]:
+            total["buf_lines"].append((scale * b, label))
+
+    def _label(ls: str) -> str:
+        m = _OPNAME_RE.search(ls)
+        if m:
+            return m.group(1)[-120:]
+        return ls.split(",")[0][:120]
+
+    def cost(name: str, stack=()) -> Dict:
+        if name in cache:
+            return cache[name]
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return _z()
+        total = _z()
+        for ls in comp.lines:
+            op = _op_name(ls)
+            if op is None:
+                continue
+            if op == "while":
+                m = _WHILE_RE.search(ls)
+                if m:
+                    tm = _TRIP_RE.search(ls)  # XLA annotates scan loops
+                    if tm:
+                        trips = int(tm.group(1))
+                    else:
+                        trips = _trip_count(comps.get(m.group(1), _Comp(""))) 
+                    _merge(total, cost(m.group(2), stack + (name,)), trips)
+                continue
+            if op in ("call", "fusion", "conditional", "async-start"):
+                for ref in _CALLS_RE.findall(ls):
+                    _merge(total, cost(ref, stack + (name,)), 1)
+                # fusions also produce an output buffer (counted below)
+            matched_coll = None
+            for k in COLLECTIVES:
+                if op == k or op == f"{k}-start":
+                    matched_coll = k
+                    break
+            if matched_coll:
+                bufs = _all_buffer_bytes(ls)
+                b = max(bufs) if bufs else 0
+                total["coll"][matched_coll]["count"] += 1
+                total["coll"][matched_coll]["bytes"] += b
+                total["coll_lines"].append((matched_coll, b, _label(ls)))
+                continue
+            if op == "dot":
+                total["flops"] += _dot_flops(comp, ls)
+            elif op == "convolution":
+                total["flops"] += _conv_flops(comp, ls)
+            dm = _DEF_RE.match(ls)
+            if dm and op in _TRAFFIC_OPS:
+                b = _shape_info(dm.group(2))[0]
+                # dynamic-update-slice writes only the *update*, not the whole
+                # aliased buffer (scan stacking would otherwise over-count by
+                # the trip count) — use the update operand's size.
+                ub = _dus_update_bytes(comp, comps, ls, op)
+                if ub is not None:
+                    b = ub
+                total["bytes_out"] += b
+                if b >= 16 * 2**20:  # track big buffers for diagnostics
+                    total["buf_lines"].append((b, _label(ls)))
+        # aggregate duplicate labels so cache entries stay small
+        def _agg_coll(lines):
+            agg = {}
+            for kind, b, label in lines:
+                key = (kind, label)
+                agg[key] = agg.get(key, 0.0) + b
+            return [(k[0], v, k[1]) for k, v in
+                    sorted(agg.items(), key=lambda kv: -kv[1])[: top_k]]
+
+        def _agg_buf(lines):
+            agg = {}
+            for b, label in lines:
+                agg[label] = agg.get(label, 0.0) + b
+            return [(v, k) for k, v in
+                    sorted(agg.items(), key=lambda kv: -kv[1])[: top_k]]
+
+        total["coll_lines"] = _agg_coll(total["coll_lines"])
+        total["buf_lines"] = _agg_buf(total["buf_lines"])
+        cache[name] = total
+        return total
+
+    if entry is None:
+        return {"flops": 0.0, "bytes_traffic_est": 0.0,
+                "coll": {k: {"count": 0, "bytes": 0} for k in COLLECTIVES},
+                "collective_bytes": 0.0, "top_collectives": [],
+                "top_buffers": []}
+    e = cost(entry)
+    return {
+        "flops": e["flops"],
+        "bytes_traffic_est": 2.0 * e["bytes_out"],  # writes + reads proxy
+        "coll": e["coll"],
+        "collective_bytes": sum(v["bytes"] for v in e["coll"].values()),
+        "top_collectives": [
+            {"kind": k, "bytes": b, "op": lab} for k, b, lab in e["coll_lines"]
+        ],
+        "top_buffers": [
+            {"bytes": b, "op": lab} for b, lab in e["buf_lines"]
+        ],
+    }

@@ -1,0 +1,119 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's food.
+
+``input_specs(arch, shape, mesh)`` returns (kwargs for the step function,
+in_shardings-compatible structs): weak-type-correct, shardable, and **never
+allocated** — a 400B-parameter cell lowers on a CPU host.
+
+Shapes follow the assignment: ``train_*``/``prefill_*`` provide
+``[global_batch, seq]`` token grids (+ stub modality embeddings);
+``decode_*`` provide one new token + a filled KV cache of ``seq_len``
+(rolling-window archs cap the buffer at their window; SSM archs carry
+constant-size states).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, SHAPES
+from repro.models import build_model
+from repro.nn.module import ShardingRules, shape_structs, logical_to_partition_spec
+
+__all__ = ["input_specs", "batch_specs", "param_structs", "data_spec"]
+
+
+def _named(mesh: Optional[Mesh], rules, axes, shape):
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_partition_spec(axes, shape, rules))
+
+
+def _struct(shape, dtype, mesh, rules, axes):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=_named(mesh, rules, axes, shape))
+
+
+def data_spec(mesh: Optional[Mesh], rule_overrides=None):
+    if mesh is None:
+        return None
+    from repro.nn.module import DEFAULT_RULES
+
+    rules = dict(DEFAULT_RULES)
+    if rule_overrides:
+        rules.update(rule_overrides)
+    return ShardingRules.for_mesh(mesh, rules)
+
+
+def batch_specs(cfg, shape_name: str, mesh: Optional[Mesh],
+                rule_overrides=None):
+    """Training/prefill batch structs for one (arch, shape)."""
+    sh = SHAPES[shape_name]
+    rules = data_spec(mesh, rule_overrides)
+    B = sh.global_batch
+    S = sh.seq_len
+    tok_axes = ("batch", None)
+    n_text = S - cfg.n_img_tokens if cfg.n_img_tokens else S
+    out = {
+        "tokens": _struct((B, n_text), jnp.int32, mesh, rules, tok_axes),
+    }
+    if sh.kind == "train":
+        out["labels"] = _struct((B, n_text), jnp.int32, mesh, rules, tok_axes)
+        out["loss_mask"] = _struct((B, n_text), jnp.float32, mesh, rules, tok_axes)
+    if cfg.encoder_layers:
+        out["memory"] = _struct((B, cfg.encoder_len, cfg.d_model), jnp.float32,
+                                mesh, rules, ("batch", None, None))
+    if cfg.n_img_tokens:
+        out["img_embeds"] = _struct((B, cfg.n_img_tokens, cfg.d_model),
+                                    jnp.float32, mesh, rules,
+                                    ("batch", None, None))
+    return out
+
+
+def input_specs(arch: str, shape_name: str, mesh: Optional[Mesh],
+                cfg=None, rule_overrides=None, zero1: bool = False) -> Dict[str, Any]:
+    """Everything a step function consumes, as ShapeDtypeStructs.
+
+    train  -> {params, opt_state, batch}
+    prefill-> {params, batch}
+    decode -> {params, cache, tokens}
+
+    zero1: ZeRO-1 variant — combined with the ``{"embed": None,
+    "opt_embed": ("data", "pod")}`` rule override it stores params
+    model-sharded/data-replicated while the optimizer moments shard over the
+    data axis (§Perf).
+    """
+    cfg = cfg or get_config(arch)
+    sh = SHAPES[shape_name]
+    model = build_model(cfg)
+    rules = data_spec(mesh, rule_overrides)
+    pspecs = model.param_specs()
+    params = shape_structs(pspecs, mesh, rules)
+    if sh.kind == "train":
+        from repro.optim import AdamWConfig, adamw_init_specs
+
+        ocfg = AdamWConfig(quantize_moments=cfg.name.startswith("llama4"))
+        ospecs = adamw_init_specs(
+            pspecs, ocfg, remap_axes={"embed": "opt_embed"} if zero1 else None)
+        return {
+            "params": params,
+            "opt_state": shape_structs(ospecs, mesh, rules),
+            "batch": batch_specs(cfg, shape_name, mesh, rule_overrides),
+        }
+    if sh.kind == "prefill":
+        return {"params": params,
+                "batch": batch_specs(cfg, shape_name, mesh, rule_overrides)}
+    # decode
+    cspecs = model.cache_specs(sh.global_batch, sh.seq_len)
+    cache = shape_structs(cspecs, mesh, rules)
+    tokens = _struct((sh.global_batch, 1), jnp.int32, mesh, rules,
+                     ("batch", None))
+    return {"params": params, "cache": cache, "tokens": tokens}
+
+
+def param_structs(cfg, mesh: Optional[Mesh]):
+    model = build_model(cfg)
+    return shape_structs(model.param_specs(), mesh)

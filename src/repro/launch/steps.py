@@ -1,0 +1,156 @@
+"""Step-function factories: train / prefill / decode for any (arch, mesh).
+
+These close over the model + sharding context and are what both the real
+launchers (train.py / serve.py) and the dry-run lower.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model
+from repro.nn.layers import Ctx
+from repro.nn.module import ShardingRules
+from repro.optim import AdamWConfig, adamw_update
+
+__all__ = ["make_ctx", "make_train_step", "make_prefill_step",
+           "make_decode_step", "active_matmul_params"]
+
+
+def make_ctx(mesh, rule_overrides=None, decode=False,
+             explicit_rs=False) -> Ctx:
+    if mesh is None:
+        return Ctx(decode=decode)
+    from repro.nn.module import DEFAULT_RULES
+
+    rules = dict(DEFAULT_RULES)
+    if rule_overrides:
+        rules.update(rule_overrides)
+    return Ctx(mesh=mesh, rules=ShardingRules.for_mesh(mesh, rules),
+               decode=decode, explicit_rs=explicit_rs)
+
+
+def _cast_tree_bf16(p):
+    return jax.tree.map(
+        lambda a: a.astype(jnp.bfloat16)
+        if a.dtype == jnp.float32 and a.ndim >= 2 else a, p)
+
+
+def make_train_step(cfg, mesh, ocfg: AdamWConfig, bf16_grads: bool = False,
+                    rule_overrides=None, grad_shardings=None,
+                    explicit_rs: bool = False):
+    """bf16_grads: differentiate w.r.t. the bf16-cast tree so the gradient
+    cross-replica reduction moves bf16 on the wire (half the bytes); the
+    fp32 master update applies the bf16 grads (§Perf H-A1).
+
+    grad_shardings: explicit shardings pinned onto the gradient tree before
+    the optimizer — ZeRO-1 uses this to force a reduce-*scatter* over the
+    data axis (matching the data-sharded moments) instead of letting the
+    partitioner all-reduce full gradients (§Perf H-C1b)."""
+    model = build_model(cfg)
+    ctx = make_ctx(mesh, rule_overrides, explicit_rs=explicit_rs)
+
+    def loss_fn(p, b):
+        # cast fp32 master -> bf16 *before* use: FSDP all-gathers then
+        # move bf16, halving param-collective bytes and gathered temp.
+        return model.loss(_cast_tree_bf16(p), b, ctx)
+
+    def loss_fn_bf16(pc, b):
+        return model.loss(pc, b, ctx)
+
+    def grad_of(params, b):
+        if bf16_grads:
+            pc = _cast_tree_bf16(params)
+            (l, m), g = jax.value_and_grad(loss_fn_bf16, has_aux=True)(pc, b)
+            # leaves that were never cast keep their grads; shapes match tree
+            return (l, m), g
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+
+    def train_step(params, opt_state, batch):
+        n = max(cfg.grad_accum, 1)
+        if n == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            # gradient accumulation: scan over microbatches; activations and
+            # backward transients divide by n (weight gathers repeat ×n —
+            # the memory/collective trade recorded in §Perf).
+            micro = jax.tree.map(
+                lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:]), batch)
+
+            def one(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grad_of(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), ms = jax.lax.scan(one, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        if grad_shardings is not None:
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, grad_shardings)
+        new_params, new_opt, om = adamw_update(grads, opt_state, params, ocfg)
+        return new_params, new_opt, dict(metrics, loss=loss, **om)
+
+    return train_step
+
+
+def make_prefill_step(cfg, mesh, rule_overrides=None):
+    model = build_model(cfg)
+    ctx = make_ctx(mesh, rule_overrides)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, ctx)
+
+    return prefill_step
+
+
+def make_decode_step(cfg, mesh, rule_overrides=None):
+    model = build_model(cfg)
+    ctx = make_ctx(mesh, rule_overrides, decode=True)
+
+    def serve_step(params, cache, tokens):
+        logits, new_cache = model.decode_step(params, cache, tokens, ctx)
+        if cfg.padded_vocab > cfg.vocab:  # padded ids never sampled
+            neg = jnp.full((cfg.padded_vocab - cfg.vocab,), -1e30, logits.dtype)
+            logits = logits.at[..., cfg.vocab:].set(neg)
+        return logits, new_cache
+
+    return serve_step
+
+
+def active_matmul_params(cfg) -> int:
+    """N for MODEL_FLOPS = 6·N·D: per-token matmul-touched parameters.
+
+    Embedding gathers don't matmul (excluded); the logits projection does
+    (counted once, tied or not); MoE expert tensors count at top_k experts
+    per token; dead padding experts are never routed (excluded exactly by
+    scaling the padded tensor count by k/E_pad)."""
+    import math
+    from repro.nn.module import ParamSpec
+
+    model = build_model(cfg)
+    specs = model.param_specs()
+    flat, _ = jax.tree.flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    total = 0.0
+    for path, spec in flat:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        n = math.prod(spec.shape)
+        if "embed/embedding" in name:
+            continue  # gather, not matmul (tied logits handled below)
+        if "/moe/" in name and name.split("/")[-1] in ("w_gate", "w_up", "w_down"):
+            n *= cfg.moe.top_k / cfg.moe.padded_experts
+        total += n
+    if cfg.tie_embeddings:
+        total += cfg.d_model * cfg.padded_vocab  # tied logits matmul
+    return int(total)

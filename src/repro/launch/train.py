@@ -1,0 +1,112 @@
+"""Training launcher.
+
+Production shape:  ``python -m repro.launch.train --arch qwen3-0.6b
+--steps 200`` — builds the mesh from available devices, materializes sharded
+params, and runs the supervised train loop (watchdog + async checkpointing +
+auto-restart on step failure).  On this CPU container it runs the smoke
+config by default; on a pod the same file runs the full config
+(``--full``) — the step function, sharding rules and checkpoint format are
+identical, only the mesh and config size change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.nn.module import materialize, shardings, ShardingRules, count_params
+from repro.optim import AdamWConfig, adamw_init, cosine_schedule
+from repro.checkpoint import Checkpointer
+from repro.runtime import Supervisor, StepWatchdog, FaultInjector
+from repro.launch.steps import make_train_step
+from repro.launch.mesh import make_host_mesh
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen3-0.6b")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--full", action="store_true",
+                   help="full config (pod-scale; default: smoke config)")
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    p.add_argument("--ckpt-every", type=int, default=20)
+    p.add_argument("--data-shards", type=int, default=1)
+    p.add_argument("--fail-at", type=int, nargs="*", default=[],
+                   help="inject step faults (fault-tolerance demo)")
+    p.add_argument("--log-every", type=int, default=10)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    model = build_model(cfg)
+    n_dev = len(jax.devices())
+    mesh = make_host_mesh(data=n_dev, model=1) if n_dev > 1 else None
+
+    specs = model.param_specs()
+    print(f"arch={cfg.name} params={count_params(specs)/1e6:.2f}M "
+          f"devices={n_dev}")
+    params = materialize(specs, jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=cosine_schedule(args.lr, 10, args.steps),
+                       weight_decay=0.01)
+    opt_state = adamw_init(params, ocfg)
+
+    data = SyntheticLM(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        memory_len=cfg.encoder_len if cfg.encoder_layers else 0,
+        img_tokens=cfg.n_img_tokens, d_model=cfg.d_model,
+    )
+    step_fn = jax.jit(make_train_step(cfg, mesh, ocfg), donate_argnums=(0, 1))
+    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+    injector = FaultInjector(args.fail_at)
+
+    def batch_for(step):
+        b = data.batch(step)
+        if cfg.n_img_tokens:
+            b = dict(b)
+            for k in ("tokens", "labels", "loss_mask"):
+                b[k] = b[k][:, : args.seq - cfg.n_img_tokens]
+        return jax.tree.map(jnp.asarray, b)
+
+    def run_step(state, step):
+        injector.maybe_fail(step)
+        params, opt_state = state
+        params, opt_state, metrics = step_fn(params, opt_state, batch_for(step))
+        if step % args.log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            print(f"step {step:5d} loss {m['loss']:.4f} ce {m.get('ce', 0):.4f} "
+                  f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e}", flush=True)
+        return params, opt_state
+
+    def save(state, step):
+        ckpt.save_async(step, {"params": state[0], "opt": state[1]},
+                        extra={"arch": cfg.name})
+
+    def restore():
+        got = ckpt.restore_latest({"params": params, "opt": opt_state})
+        if got[0] is None:
+            return None
+        step, tree, _ = got
+        print(f"restored checkpoint at step {step}")
+        return step, (tree["params"], tree["opt"])
+
+    sup = Supervisor(step_fn=run_step, save_fn=save, restore_fn=restore,
+                     ckpt_every=args.ckpt_every, max_restarts=3)
+    t0 = time.time()
+    step, state, stats = sup.run((params, opt_state), args.steps)
+    ckpt.wait()
+    print(f"done: {step} steps in {time.time()-t0:.1f}s; "
+          f"restarts={stats['restarts']} stragglers={stats['straggler_steps']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Model zoo dispatch."""
+
+from .transformer import TransformerLM
+from .mamba import MambaLM
+from .hybrid import HybridLM
+from .cnn import PaperCNN
+
+__all__ = ["build_model", "TransformerLM", "MambaLM", "HybridLM", "PaperCNN"]
+
+
+def build_model(cfg):
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    return TransformerLM(cfg)  # dense | moe | audio | vlm

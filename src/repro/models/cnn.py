@@ -1,0 +1,96 @@
+"""The paper's own example network: a 5-layer CNN (50-80-120-200-350).
+
+"In a modest-sized CNN — 5 convolutional layers, 50x80x120x200x350 neurons —
+using internally 8-bit activations and 5x5 filters with 8-bit values, PCILTs
+would need about 1.65 GB" (§Basic Version).  This model is the faithful
+reproduction target: it runs with the classic direct-multiplication (DM)
+algorithm or any PCILT path, and ``benchmarks/paper_claims.py`` reproduces
+the paper's memory/op-count arithmetic from its exact dimensions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    QuantSpec, calibrate, quantize, dequantize, build_grouped_tables,
+    pcilt_conv2d,
+)
+from repro.nn.module import ParamSpec
+from repro.nn.layers import Ctx
+
+__all__ = ["PaperCNN", "PAPER_CHANNELS", "PAPER_FILTER"]
+
+PAPER_CHANNELS = (50, 80, 120, 200, 350)
+PAPER_FILTER = 5
+
+
+@dataclasses.dataclass
+class PaperCNN:
+    """5 conv layers + ReLU + global-avg-pool classifier head."""
+
+    in_channels: int = 1
+    n_classes: int = 10
+    channels: tuple = PAPER_CHANNELS
+    k: int = PAPER_FILTER
+    act_spec: QuantSpec = QuantSpec(bits=8, symmetric=False)
+    group: int = 1
+
+    def param_specs(self):
+        p = {}
+        cin = self.in_channels
+        for i, cout in enumerate(self.channels):
+            p[f"conv{i}"] = ParamSpec((self.k, self.k, cin, cout),
+                                      (None, None, None, None), jnp.float32,
+                                      "fan_in")
+            cin = cout
+        p["head"] = ParamSpec((cin, self.n_classes), (None, None), jnp.float32,
+                              "fan_in")
+        return p
+
+    def forward(self, params, x, mode: str = "dm",
+                scales: Optional[Dict] = None, tables: Optional[Dict] = None):
+        """x [B,H,W,Cin].  mode: "dm" (direct multiplication baseline) or a
+        PCILT path ("gather" | "onehot" | "kernel").
+
+        In PCILT modes activations are quantized to ``act_spec`` before every
+        conv (the paper's low-cardinality precondition); the DM oracle for
+        comparisons quantizes identically, so both paths see the same inputs
+        and PCILT is *exact* — "there is no result precision loss".
+        """
+        scales = scales or {}
+        for i in range(len(self.channels)):
+            w = params[f"conv{i}"]
+            s = scales.get(f"conv{i}") or calibrate(x, self.act_spec)
+            if mode == "dm":
+                xq = dequantize(quantize(x, self.act_spec, s), self.act_spec, s)
+                x = jax.lax.conv_general_dilated(
+                    xq, w, (1, 1), "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            else:
+                x = pcilt_conv2d(
+                    x, w, self.act_spec, s, group=self.group, path=mode,
+                    tables=None if tables is None else tables[f"conv{i}"])
+            x = jax.nn.relu(x)
+        x = x.mean(axis=(1, 2))  # [B, C]
+        return x @ params["head"]
+
+    def build_tables(self, params, scales: Dict):
+        """Offline table build (once per network lifetime, paper §Basic)."""
+        out = {}
+        for i in range(len(self.channels)):
+            w = params[f"conv{i}"]
+            kh, kw, cin, cout = w.shape
+            n = kh * kw * cin
+            pad = (-n) % self.group
+            wflat = w.reshape(n, cout)
+            if pad:
+                wflat = jnp.concatenate(
+                    [wflat, jnp.zeros((pad, cout), wflat.dtype)], 0)
+            out[f"conv{i}"] = build_grouped_tables(
+                wflat, self.act_spec, scales[f"conv{i}"], self.group)
+        return out

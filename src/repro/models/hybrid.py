@@ -1,0 +1,247 @@
+"""Zamba2-style hybrid: Mamba2 backbone + *shared* attention blocks.
+
+Structure (Zamba2-7B, arXiv:2411.15242): a stack of Mamba2 blocks; every
+``shared_attn_period`` blocks a shared transformer block runs on
+``concat(hidden, original_embedding)`` (2·d wide), with
+``n_shared_attn_blocks`` parameter sets used round-robin across applications.
+Weight sharing keeps parameters low while giving periodic global mixing.
+
+Implementation: segments of ``period`` Mamba blocks are scanned; shared
+attention applications sit between segments (a python loop over ~14 segments
+keeps the HLO small while letting each application address its own KV cache
+slot).  Decode carries: per-layer SSM states + per-application KV caches —
+the attention caches dominate ``long_500k`` and shard over the data axis
+(batch=1 ⇒ the cache_seq rule engages, DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ParamSpec
+from repro.nn.layers import Ctx, dense, dense_spec, embed_spec, rmsnorm_spec, rmsnorm
+from repro.nn.attention import attention_spec, attention, init_cache_specs
+from repro.nn.ssm import mamba_spec, mamba_block, mamba_decode, ssm_cache_specs
+from .transformer import stack_specs, chunked_ce_loss, mlp_spec, mlp
+
+__all__ = ["HybridLM"]
+
+
+@dataclasses.dataclass
+class HybridLM:
+    cfg: Any
+
+    # -- structure ---------------------------------------------------------
+
+    def _segments(self):
+        """[(start, length), ...] covering n_layers in period-sized chunks."""
+        cfg = self.cfg
+        period = cfg.shared_attn_period
+        segs, i = [], 0
+        while i < cfg.n_layers:
+            segs.append((i, min(period, cfg.n_layers - i)))
+            i += period
+        return segs
+
+    def n_attn_applications(self) -> int:
+        return len(self._segments())
+
+    def _shared_block_spec(self):
+        cfg = self.cfg
+        return {
+            "ln": rmsnorm_spec(2 * cfg.d_model, cfg.param_dtype),
+            "attn": attention_spec(cfg, d_in=2 * cfg.d_model,
+                                   dtype=cfg.param_dtype),
+            "ln_mlp": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+            "mlp": mlp_spec(cfg, cfg.param_dtype),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        block = {"ln": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+                 "mixer": mamba_spec(cfg, cfg.param_dtype)}
+        return {
+            "embed": embed_spec(cfg.padded_vocab, cfg.d_model, cfg.param_dtype),
+            "blocks": stack_specs(block, cfg.n_layers),
+            "shared": stack_specs(self._shared_block_spec(),
+                                  cfg.n_shared_attn_blocks),
+            "ln_f": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+            "lm_head": {
+                "kernel": ParamSpec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"),
+                                    cfg.param_dtype, "fan_in")
+            },
+        }
+
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        napp = self.n_attn_applications()
+        kv = init_cache_specs(cfg, batch, max_len, napp, layer_axis=True)
+        return {
+            "ssm": {"layers": ssm_cache_specs(cfg, batch, cfg.n_layers)},
+            "attn": kv,
+            "pos": ParamSpec((), (), jnp.int32, "zeros"),
+        }
+
+    # -- shared attention application ---------------------------------------
+
+    def _shared_attn(self, params_i, ctx, x, x0, positions, cache=None):
+        """One shared-block application on concat(x, x0)."""
+        cfg = self.cfg
+        xin = jnp.concatenate([x, x0], axis=-1)
+        h, new_cache = attention(
+            params_i["attn"], cfg, ctx,
+            rmsnorm(params_i["ln"], xin, cfg.norm_eps),
+            positions, causal=True, cache=cache,
+        )
+        x = x + h
+        x = x + mlp(params_i["mlp"], cfg, ctx,
+                    rmsnorm(params_i["ln_mlp"], x, cfg.norm_eps))
+        return x, new_cache
+
+    def _select_shared(self, params, app_idx: int):
+        i = app_idx % self.cfg.n_shared_attn_blocks
+        return jax.tree.map(lambda a: a[i], params["shared"])
+
+    # -- helpers -------------------------------------------------------------
+
+    def _embed(self, params, ctx, tokens):
+        x = params["embed"]["embedding"].astype(self.cfg.dtype)[tokens]
+        return ctx.constrain(x, "batch", "seq_sp", None)
+
+    def _policy(self):
+        return {
+            "none": None,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            "full": jax.checkpoint_policies.nothing_saveable,
+        }[self.cfg.remat_policy]
+
+    def _mamba_segment(self, params, ctx, x, start, length):
+        cfg = self.cfg
+        seg = jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + length),
+                           params["blocks"])
+        policy = self._policy()
+
+        def blk(h, p):
+            return h + mamba_block(p["mixer"], cfg, ctx,
+                                   rmsnorm(p["ln"], h, cfg.norm_eps))
+
+        if policy is not None:
+            blk = jax.checkpoint(blk, policy=policy)
+        x, _ = jax.lax.scan(lambda h, p: (blk(h, p), ()), x, seg)
+        return x
+
+    # -- modes ---------------------------------------------------------------
+
+    def loss(self, params, batch, ctx: Ctx):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        x = self._embed(params, ctx, tokens)
+        x0 = x
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        policy = self._policy()
+        for app, (start, length) in enumerate(self._segments()):
+            shared_p = self._select_shared(params, app)
+
+            def shared_fn(p, x, x0):
+                return self._shared_attn(p, ctx, x, x0, positions)[0]
+
+            if policy is not None:  # shared blocks sit outside the layer
+                shared_fn = jax.checkpoint(shared_fn, policy=policy)
+            x = shared_fn(shared_p, x, x0)
+            x = self._mamba_segment(params, ctx, x, start, length)
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+        ce, z = chunked_ce_loss(lambda xc: dense(params["lm_head"], xc, cfg.dtype),
+                                x, labels, mask.astype(jnp.float32),
+                                cfg.loss_chunk)
+        return ce + 1e-4 * z, {"ce": ce, "z": z}
+
+    def prefill(self, params, batch, ctx: Ctx):
+        """Full-sequence pass emitting per-application KV caches + per-layer
+        SSM states (the decode-ready hybrid cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, ctx, tokens)
+        x0 = x
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        attn_k, attn_v, seg_states = [], [], []
+        for app, (start, length) in enumerate(self._segments()):
+            x, kv = self._shared_attn(self._select_shared(params, app), ctx,
+                                      x, x0, positions)
+            attn_k.append(kv["k"])
+            attn_v.append(kv["v"])
+            seg = jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, start, start + length),
+                params["blocks"])
+
+            def body(h, p):
+                y, st = mamba_block(p["mixer"], cfg, ctx,
+                                    rmsnorm(p["ln"], h, cfg.norm_eps),
+                                    return_state=True)
+                return h + y, st
+
+            x, states = jax.lax.scan(body, x, seg)
+            seg_states.append(states)
+        ssm = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *seg_states)
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = dense(params["lm_head"], x[:, -1:], cfg.dtype)[:, 0]
+        cache = {
+            "ssm": {"layers": ssm},
+            "attn": {"k": jnp.stack(attn_k), "v": jnp.stack(attn_v)},
+            "pos": jnp.asarray(S, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, ctx: Ctx):
+        cfg = self.cfg
+        pos = cache["pos"]
+        B = tokens.shape[0]
+        x = self._embed(params, ctx, tokens)
+        x0 = x
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        new_attn_k, new_attn_v = [], []
+        ssm_states = cache["ssm"]["layers"]
+        new_ssm = jax.tree.map(lambda a: a, ssm_states)
+
+        for app, (start, length) in enumerate(self._segments()):
+            kv = {"k": cache["attn"]["k"][app], "v": cache["attn"]["v"][app],
+                  "pos": pos}
+            x, nc = self._shared_attn(self._select_shared(params, app), ctx,
+                                      x, x0, positions, cache=kv)
+            new_attn_k.append(nc["k"])
+            new_attn_v.append(nc["v"])
+            seg_params = jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, start, start + length),
+                params["blocks"])
+            seg_states = jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, start, start + length),
+                ssm_states)
+
+            def body(h, inp):
+                p, st = inp
+                y, st2 = mamba_decode(p["mixer"], cfg, ctx,
+                                      rmsnorm(p["ln"], h, cfg.norm_eps), st)
+                return h + y, st2
+
+            x, seg_new = jax.lax.scan(body, x, (seg_params, seg_states))
+            new_ssm = jax.tree.map(
+                lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+                    full, part.astype(full.dtype), start, axis=0),
+                new_ssm, seg_new)
+
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = dense(params["lm_head"], x, cfg.dtype)[:, -1]
+        new_cache = dict(
+            cache,
+            ssm={"layers": new_ssm},
+            attn={"k": jnp.stack(new_attn_k), "v": jnp.stack(new_attn_v)},
+            pos=pos + 1,
+        )
+        return logits, new_cache

@@ -1,0 +1,119 @@
+"""Mamba2 language model (attention-free) — the [ssm] architecture.
+
+Scanned Mamba2 blocks with pre-norm residuals.  Decode carries constant-size
+(conv, ssd) states — no KV cache — so the ``long_500k`` cell costs the same
+memory as ``decode`` at any context length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ParamSpec
+from repro.nn.layers import Ctx, dense, embed_spec, rmsnorm_spec, rmsnorm
+from repro.nn.ssm import mamba_spec, mamba_block, mamba_decode, ssm_cache_specs
+from .transformer import stack_specs, chunked_ce_loss
+
+__all__ = ["MambaLM"]
+
+
+@dataclasses.dataclass
+class MambaLM:
+    cfg: Any
+
+    def param_specs(self):
+        cfg = self.cfg
+        block = {"ln": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+                 "mixer": mamba_spec(cfg, cfg.param_dtype)}
+        p = {
+            "embed": embed_spec(cfg.padded_vocab, cfg.d_model, cfg.param_dtype),
+            "blocks": stack_specs(block, cfg.n_layers),
+            "ln_f": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = {
+                "kernel": ParamSpec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"),
+                                    cfg.param_dtype, "fan_in")
+            }
+        return p
+
+    def cache_specs(self, batch: int, max_len: int):
+        return {"layers": ssm_cache_specs(self.cfg, batch, self.cfg.n_layers),
+                "pos": ParamSpec((), (), jnp.int32, "zeros")}
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            return x @ params["embed"]["embedding"].astype(cfg.dtype).T
+        return dense(params["lm_head"], x, cfg.dtype)
+
+    def _embed(self, params, ctx, tokens):
+        cfg = self.cfg
+        x = params["embed"]["embedding"].astype(cfg.dtype)[tokens]
+        return ctx.constrain(x, "batch", "seq_sp", None)
+
+    def _policy(self):
+        return {
+            "none": None,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            "full": jax.checkpoint_policies.nothing_saveable,
+        }[self.cfg.remat_policy]
+
+    def loss(self, params, batch, ctx: Ctx):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = self._embed(params, ctx, tokens)
+        policy = self._policy()
+
+        def blk(x, p):
+            return x + mamba_block(p["mixer"], cfg, ctx,
+                                   rmsnorm(p["ln"], x, cfg.norm_eps))
+
+        if policy is not None:
+            blk = jax.checkpoint(blk, policy=policy)
+
+        x, _ = jax.lax.scan(lambda h, p: (blk(h, p), ()), x, params["blocks"])
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+        ce, z = chunked_ce_loss(lambda xc: self._logits(params, xc), x, labels,
+                                mask.astype(jnp.float32), cfg.loss_chunk)
+        return ce + 1e-4 * z, {"ce": ce, "z": z}
+
+    def prefill(self, params, batch, ctx: Ctx):
+        """Full-sequence pass emitting final (conv, ssd) states per layer —
+        the decode-ready cache (constant-size regardless of prompt length)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, ctx, tokens)
+
+        def body(h, p):
+            y, st = mamba_block(p["mixer"], cfg, ctx,
+                                rmsnorm(p["ln"], h, cfg.norm_eps),
+                                return_state=True)
+            return h + y, st
+
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, {"layers": states, "pos": jnp.asarray(S, jnp.int32)}
+
+    def decode_step(self, params, cache, tokens, ctx: Ctx):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = self._embed(params, ctx, tokens)
+
+        def body(h, inp):
+            p, st = inp
+            y, st2 = mamba_decode(p["mixer"], cfg, ctx,
+                                  rmsnorm(p["ln"], h, cfg.norm_eps), st)
+            return h + y, st2
+
+        x, new_states = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = self._logits(params, x)[:, -1]
+        return logits, dict(cache, layers=new_states, pos=pos + 1)

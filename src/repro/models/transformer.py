@@ -1,0 +1,436 @@
+"""Transformer model zoo: decoder-only (dense + MoE), encoder-decoder
+(whisper), and VLM glue (llava) — one scanned-block implementation.
+
+Structure: layers are scanned in *units* of ``cfg.moe.interleave`` blocks
+(llama4 alternates dense/MoE every other layer; granite is MoE every layer;
+dense models are unit size 1).  Units are stacked on a leading "layers" axis
+and driven by ``jax.lax.scan`` with a configurable remat policy — this keeps
+the HLO O(one unit) for 62-layer models and is what makes 400B-parameter
+lowering tractable.
+
+Modes: ``loss`` (training, chunked-vocab CE), ``prefill`` (build KV cache),
+``decode`` (single token step against the cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ParamSpec
+from repro.nn.layers import (
+    Ctx, dense_spec, dense, embed_spec, rmsnorm_spec, rmsnorm,
+    layernorm_spec, layernorm, sinusoidal_positions,
+)
+from repro.nn.attention import attention_spec, attention, init_cache_specs
+from repro.nn.moe import moe_spec, moe_apply
+
+__all__ = ["TransformerLM", "stack_specs", "chunked_ce_loss"]
+
+
+def stack_specs(tree, n: int):
+    """Prepend a scanned "layers" dim to every ParamSpec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.axes), s.dtype, s.init,
+                            s.scale),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _use_ln(cfg) -> bool:
+    return cfg.family == "audio"  # whisper uses LayerNorm + GELU
+
+
+def mlp_spec(cfg, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    if _use_ln(cfg):
+        return {
+            "wi": dense_spec(d, f, ("embed", "mlp"), bias=True, dtype=dtype),
+            "wo": dense_spec(f, d, ("mlp", "embed"), bias=True, dtype=dtype),
+        }
+    return {
+        "wg": dense_spec(d, f, ("embed", "mlp"), dtype=dtype),
+        "wu": dense_spec(d, f, ("embed", "mlp"), dtype=dtype),
+        "wd": dense_spec(f, d, ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def mlp(params, cfg, ctx: Ctx, x):
+    if "wi" in params:
+        h = jax.nn.gelu(dense(params["wi"], x, cfg.dtype))
+        h = ctx.constrain(h, "batch", None, "mlp")
+        return ctx.constrain(dense(params["wo"], h, cfg.dtype),
+                             "batch", "seq_sp", None)
+    g = dense(params["wg"], x, cfg.dtype)
+    u = dense(params["wu"], x, cfg.dtype)
+    h = ctx.constrain(jax.nn.silu(g) * u, "batch", None, "mlp")
+    from repro.nn.layers import row_parallel
+
+    y = row_parallel(ctx, h, params["wd"]["kernel"], "bsf,fd->bsd")
+    if y is not None:
+        return y
+    return ctx.constrain(dense(params["wd"], h, cfg.dtype),
+                         "batch", "seq_sp", None)
+
+
+def block_spec(cfg, use_moe: bool, cross: bool = False, dtype=jnp.float32):
+    norm = layernorm_spec if _use_ln(cfg) else rmsnorm_spec
+    p = {
+        "ln_attn": norm(cfg.d_model, dtype),
+        "attn": attention_spec(cfg, dtype=dtype),
+        "ln_mlp": norm(cfg.d_model, dtype),
+    }
+    if cross:
+        p["ln_cross"] = norm(cfg.d_model, dtype)
+        p["cross"] = attention_spec(cfg, dtype=dtype)
+    p["moe" if use_moe else "mlp"] = (
+        moe_spec(cfg, dtype) if use_moe else mlp_spec(cfg, dtype)
+    )
+    if use_moe and cfg.moe.shared_expert:
+        p["shared_mlp"] = mlp_spec(cfg, dtype)
+    return p
+
+
+def _norm(params, cfg, x):
+    return (layernorm if _use_ln(cfg) else rmsnorm)(params, x, cfg.norm_eps)
+
+
+def block_apply(
+    params, cfg, ctx: Ctx, x, positions, causal=True,
+    cache=None, cross_kv=None,
+) -> Tuple[jax.Array, Optional[Dict], Dict]:
+    """One transformer block.  Returns (x, new_cache, aux)."""
+    aux = {}
+    h, new_cache = attention(
+        params["attn"], cfg, ctx, _norm(params["ln_attn"], cfg, x),
+        positions, causal=causal, cache=cache,
+    )
+    x = x + h
+    if cross_kv is not None:
+        h, _ = attention(
+            params["cross"], cfg, ctx, _norm(params["ln_cross"], cfg, x),
+            positions, causal=False, cross_kv=cross_kv,
+        )
+        x = x + h
+    xn = _norm(params["ln_mlp"], cfg, x)
+    if "moe" in params:
+        h, aux = moe_apply(params["moe"], cfg, ctx, xn)
+        if "shared_mlp" in params:
+            h = h + mlp(params["shared_mlp"], cfg, ctx, xn)
+    else:
+        h = mlp(params["mlp"], cfg, ctx, xn)
+    return x + h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(logits_fn, x, labels, mask, chunk: int):
+    """Cross-entropy + z-loss over S-chunks via scan (bounds logits memory).
+
+    logits_fn: [B, c, d] -> [B, c, V] (the lm head); x [B,S,d]; labels [B,S].
+    """
+    B, S, d = x.shape
+    c = min(chunk, S) if chunk else S
+    while S % c:
+        c -= 1
+    n = S // c
+
+    def chunk_loss(xc, lc, mc):
+        logits = logits_fn(xc).astype(jnp.float32)  # [B, c, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * mc
+        z = jnp.square(lse) * mc
+        return ce.sum(), z.sum()
+
+    if n == 1:
+        ce, z = chunk_loss(x, labels, mask)
+    else:
+        xs = (
+            jnp.moveaxis(x.reshape(B, n, c, d), 1, 0),
+            jnp.moveaxis(labels.reshape(B, n, c), 1, 0),
+            jnp.moveaxis(mask.reshape(B, n, c), 1, 0),
+        )
+
+        def body(acc, inp):
+            ce, z = jax.checkpoint(chunk_loss)(*inp)
+            return (acc[0] + ce, acc[1] + z), ()
+
+        (ce, z), _ = jax.lax.scan(body, (0.0, 0.0), xs)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return ce / denom, z / denom
+
+
+@dataclasses.dataclass
+class TransformerLM:
+    """Facade: param specs + loss / prefill / decode for one config."""
+
+    cfg: Any
+
+    # ---------------- specs ----------------
+
+    def _unit_size(self) -> int:
+        return self.cfg.moe.interleave if self.cfg.moe else 1
+
+    def _n_units(self) -> int:
+        assert self.cfg.n_layers % self._unit_size() == 0
+        return self.cfg.n_layers // self._unit_size()
+
+    def _unit_spec(self, cross=False):
+        cfg, u = self.cfg, self._unit_size()
+        return {
+            f"sub{i}": block_spec(
+                cfg, use_moe=(cfg.moe is not None and i == u - 1), cross=cross,
+                dtype=cfg.param_dtype,
+            )
+            for i in range(u)
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        norm = layernorm_spec if _use_ln(cfg) else rmsnorm_spec
+        p = {
+            "embed": embed_spec(cfg.padded_vocab, cfg.d_model, cfg.param_dtype),
+            "blocks": stack_specs(self._unit_spec(cross=cfg.encoder_layers > 0),
+                                  self._n_units()),
+            "ln_f": norm(cfg.d_model, cfg.param_dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = {
+                "kernel": ParamSpec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"),
+                                    cfg.param_dtype, "fan_in")
+            }
+        if cfg.encoder_layers:
+            p["encoder"] = {
+                "blocks": stack_specs(
+                    {"sub0": block_spec(cfg, use_moe=False,
+                                        dtype=cfg.param_dtype)},
+                    cfg.encoder_layers,
+                ),
+                "ln_f": norm(cfg.d_model, cfg.param_dtype),
+            }
+        if cfg.n_img_tokens:
+            p["projector"] = {
+                "w1": dense_spec(cfg.d_model, cfg.d_model, ("embed", "mlp"),
+                                 bias=True, dtype=cfg.param_dtype),
+                "w2": dense_spec(cfg.d_model, cfg.d_model, ("mlp", "embed"),
+                                 bias=True, dtype=cfg.param_dtype),
+            }
+        return p
+
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        per_unit = {
+            f"sub{i}": init_cache_specs(cfg, batch, max_len, 1, layer_axis=False)
+            for i in range(self._unit_size())
+        }
+        c = {"layers": stack_specs(per_unit, self._n_units()),
+             "pos": ParamSpec((), (), jnp.int32, "zeros")}
+        if cfg.encoder_layers:  # whisper: precomputed cross K/V per dec layer
+            Hk, Dh = cfg.padded_kv_heads, cfg.resolved_head_dim
+            c["cross_kv"] = {
+                "k": ParamSpec((self._n_units(), batch, cfg.encoder_len, Hk, Dh),
+                               ("layers", "batch", None, "kv_heads", None),
+                               jnp.bfloat16, "zeros"),
+                "v": ParamSpec((self._n_units(), batch, cfg.encoder_len, Hk, Dh),
+                               ("layers", "batch", None, "kv_heads", None),
+                               jnp.bfloat16, "zeros"),
+            }
+        return c
+
+    # ---------------- shared machinery ----------------
+
+    def _remat_policy(self):
+        return {
+            "none": None,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            "full": jax.checkpoint_policies.nothing_saveable,
+        }[self.cfg.remat_policy]
+
+    def _embed(self, params, ctx, tokens, img_embeds=None):
+        cfg = self.cfg
+        e = params["embed"]["embedding"].astype(cfg.dtype)
+        x = e[tokens]  # [B, S, d]
+        if cfg.n_img_tokens and img_embeds is not None:
+            h = jax.nn.gelu(dense(params["projector"]["w1"], img_embeds, cfg.dtype))
+            img = dense(params["projector"]["w2"], h, cfg.dtype)
+            x = jnp.concatenate([img, x], axis=1)  # early fusion: image first
+        return ctx.constrain(x, "batch", "seq_sp", None)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            k = params["embed"]["embedding"].astype(cfg.dtype).T
+            return x @ k
+        return dense(params["lm_head"], x, cfg.dtype)
+
+    def _run_encoder(self, params, ctx, memory):
+        """Whisper encoder over stub frame embeddings [B, F, d]."""
+        cfg = self.cfg
+        pos = sinusoidal_positions(memory.shape[1], cfg.d_model).astype(cfg.dtype)
+        x = ctx.constrain(memory.astype(cfg.dtype) + pos[None], "batch", None, None)
+        policy = self._remat_policy()
+
+        def body(h, p):
+            def blk(h, p):
+                y, _, _ = block_apply(p["sub0"], cfg, ctx, h, None, causal=False)
+                return y
+            if policy is not None:
+                blk = jax.checkpoint(blk, policy=policy)
+            return blk(h, p), ()
+
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+        return _norm(params["encoder"]["ln_f"], cfg, x)
+
+    def _cross_kv_from_memory(self, params, ctx, enc_out):
+        """Precompute per-decoder-layer cross K/V (once per request)."""
+        cfg = self.cfg
+
+        def body(_, p):
+            k = dense(p["sub0"]["cross"]["wk"], enc_out, cfg.dtype)
+            v = dense(p["sub0"]["cross"]["wv"], enc_out, cfg.dtype)
+            return (), (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+        _, (ks, vs) = jax.lax.scan(body, (), params["blocks"])
+        return {"k": ks, "v": vs}
+
+    def _run_blocks(self, params, ctx, x, positions, caches=None,
+                    cache_pos=None, cross_kv=None, collect_cache=False):
+        """Scan over layer units.  Returns (x, stacked caches or None, aux).
+
+        caches: stacked per-unit KV dicts (decode).  collect_cache: emit the
+        K/V computed during a full-sequence pass (prefill).  cross_kv: stacked
+        whisper cross K/V.
+        """
+        cfg, u = self.cfg, self._unit_size()
+        policy = self._remat_policy()
+        aux0 = {"load_balance": jnp.zeros((), jnp.float32),
+                "router_z": jnp.zeros((), jnp.float32)}
+
+        def unit(x, p, cache_u, xkv):
+            new_cache, aux_sum = {}, dict(aux0)
+            for i in range(u):
+                sub = f"sub{i}"
+                cache_in = None
+                if cache_u is not None:
+                    cache_in = dict(cache_u[sub], pos=cache_pos)
+                x, nc, aux = block_apply(
+                    p[sub], cfg, ctx, x, positions, cache=cache_in,
+                    cross_kv=None if xkv is None else (xkv["k"], xkv["v"]),
+                )
+                new_cache[sub] = nc
+                for n in aux:
+                    aux_sum[n] = aux_sum[n] + aux[n]
+            return x, new_cache, aux_sum
+
+        emit_cache = collect_cache or caches is not None
+
+        def body(carry, inp):
+            x, acc = carry
+            p = inp[0]
+            cache_u = inp[1] if caches is not None else None
+            xkv = inp[-1] if cross_kv is not None else None
+
+            def blk(x, p, cache_u, xkv):
+                return unit(x, p, cache_u, xkv)
+
+            if policy is not None and not emit_cache:
+                blk = jax.checkpoint(blk, policy=policy)
+            x, nc, aux = blk(x, p, cache_u, xkv)
+            acc = {n: acc[n] + aux[n] for n in acc}
+            return (x, acc), (nc if emit_cache else ())
+
+        xs = [params["blocks"]]
+        if caches is not None:
+            xs.append(caches)
+        if cross_kv is not None:
+            xs.append(cross_kv)
+        (x, aux), ys = jax.lax.scan(body, (x, aux0), tuple(xs))
+        return x, (ys if emit_cache else None), aux
+
+    # ---------------- public modes ----------------
+
+    def loss(self, params, batch, ctx: Ctx):
+        """batch: tokens [B,S], labels [B,S] (+ memory / img_embeds)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, ctx, tokens, batch.get("img_embeds"))
+        S_full = x.shape[1]
+        positions = jnp.broadcast_to(
+            jnp.arange(S_full, dtype=jnp.int32)[None], (B, S_full)
+        )
+        if cfg.pos_embed == "sinusoidal":
+            x = x + sinusoidal_positions(S_full, cfg.d_model).astype(cfg.dtype)[None]
+        cross = None
+        if cfg.encoder_layers:
+            enc = self._run_encoder(params, ctx, batch["memory"])
+            cross = self._cross_kv_from_memory(params, ctx, enc)
+        x, _, aux = self._run_blocks(params, ctx, x, positions, cross_kv=cross)
+        x = _norm(params["ln_f"], cfg, x)
+        if cfg.n_img_tokens:  # image positions carry no next-token loss
+            x = x[:, -S:]
+        labels = batch["labels"]
+        mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+        ce, z = chunked_ce_loss(
+            lambda xc: self._logits(params, xc), x, labels,
+            mask.astype(jnp.float32), cfg.loss_chunk,
+        )
+        loss = ce + 1e-4 * z
+        if cfg.moe:
+            loss = loss + 1e-2 * aux["load_balance"] / self._n_units() \
+                 + 1e-3 * aux["router_z"] / self._n_units()
+        metrics = {"ce": ce, "z": z, **aux}
+        return loss, metrics
+
+    def prefill(self, params, batch, ctx: Ctx):
+        """Full-sequence forward emitting the KV cache + last-token logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, ctx, tokens, batch.get("img_embeds"))
+        S_full = x.shape[1]
+        positions = jnp.broadcast_to(
+            jnp.arange(S_full, dtype=jnp.int32)[None], (B, S_full)
+        )
+        if cfg.pos_embed == "sinusoidal":
+            x = x + sinusoidal_positions(S_full, cfg.d_model).astype(cfg.dtype)[None]
+        cross = None
+        if cfg.encoder_layers:
+            enc = self._run_encoder(params, ctx, batch["memory"])
+            cross = self._cross_kv_from_memory(params, ctx, enc)
+        x, layer_caches, _ = self._run_blocks(
+            params, ctx, x, positions, cross_kv=cross, collect_cache=True,
+        )
+        x = _norm(params["ln_f"], cfg, x)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        cache = {"layers": layer_caches,
+                 "pos": jnp.asarray(S_full, jnp.int32)}
+        if cross is not None:
+            cache["cross_kv"] = cross
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, ctx: Ctx):
+        """tokens [B,1]; cache: {"layers": stacked KV, "pos": int32 scalar,
+        optional "cross_kv"}.  Returns (logits [B,V], new cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        x = self._embed(params, ctx, tokens)
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        if cfg.pos_embed == "sinusoidal":
+            x = x + sinusoidal_positions(1, cfg.d_model, offset=pos).astype(cfg.dtype)[None]
+        x, new_layers, _ = self._run_blocks(
+            params, ctx, x, positions, caches=cache["layers"], cache_pos=pos,
+            cross_kv=cache.get("cross_kv"),
+        )
+        x = _norm(params["ln_f"], cfg, x)
+        logits = self._logits(params, x)[:, -1]
+        new_cache = dict(cache, layers=new_layers, pos=pos + 1)
+        return logits, new_cache

@@ -1,0 +1,7 @@
+"""Layer library: declarative params + sharded transformer/SSM/MoE layers."""
+
+from .module import (
+    ParamSpec, ShardingRules, DEFAULT_RULES, logical_to_partition_spec,
+    shardings, shape_structs, materialize, count_params, spec_bytes,
+)
+from .layers import Ctx

@@ -1,0 +1,255 @@
+"""Grouped-query attention with all the zoo's variants.
+
+One implementation covers: MHA/GQA (kv-head repeat), QKV bias (qwen1.5/2.5),
+qk-norm (qwen3), sliding-window (mistral/llava — rolling KV buffer at decode,
+which is what makes ``long_500k`` a constant-memory cell for that arch),
+cross-attention (whisper decoder), and padded head counts for 16-way tensor
+parallelism (DESIGN.md; padding lives in the config so param shapes are
+mesh-independent).
+
+Sharding: Q/K/V interiors are constrained over the ``heads``/``kv_heads``
+logical axes; KV heads smaller than the TP degree fall back to replication via
+the rules' divisibility fallback, and the GQA head-repeat then *slices* the
+replicated KV locally (free) instead of forcing an all-gather of Q-sized
+tensors.  Score/attend einsums run in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Ctx, dense_spec, dense, rmsnorm_spec, rmsnorm, rope
+from .module import ParamSpec
+
+__all__ = ["attention_spec", "attention", "init_cache_specs"]
+
+NEG_INF = -1e30
+
+
+def attention_spec(cfg, d_in: Optional[int] = None, dtype=jnp.float32):
+    d = d_in or cfg.d_model
+    Hp, Hk, Dh = cfg.padded_heads, cfg.padded_kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": dense_spec(d, (Hp, Dh), ("embed", "heads", None), cfg.qkv_bias, dtype),
+        "wk": dense_spec(d, (Hk, Dh), ("embed", "kv_heads", None), cfg.qkv_bias, dtype),
+        "wv": dense_spec(d, (Hk, Dh), ("embed", "kv_heads", None), cfg.qkv_bias, dtype),
+        "wo": {"kernel": ParamSpec((Hp, Dh, cfg.d_model),
+                                   ("heads", None, "embed"), dtype, "fan_in")},
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_spec(Dh, dtype)
+        p["k_norm"] = rmsnorm_spec(Dh, dtype)
+    return p
+
+
+def _project_qkv(params, cfg, ctx: Ctx, x, positions):
+    Hp, Hk, Dh = cfg.padded_heads, cfg.padded_kv_heads, cfg.resolved_head_dim
+    q = dense(params["wq"], x, cfg.dtype)  # [B, S, Hp, Dh]
+    k = dense(params["wk"], x, cfg.dtype)  # [B, S, Hk, Dh]
+    v = dense(params["wv"], x, cfg.dtype)
+    q = ctx.constrain(q, "batch", None, "heads", None)
+    k = ctx.constrain(k, "batch", None, "kv_heads", None)
+    v = ctx.constrain(v, "batch", None, "kv_heads", None)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.pos_embed == "rope" and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+#: past this many score elements per head, switch to the chunked path
+_CHUNK_THRESHOLD = 2048 * 2048
+_Q_CHUNK = 1024
+
+
+def _repeat_kv(ctx, q, k, v):
+    Hp, Hk = q.shape[-2], k.shape[-2]
+    if Hk != Hp:  # GQA: repeat KV; replicated->sharded is a local slice
+        rep = Hp // Hk
+        k = jnp.repeat(k, rep, axis=-2)
+        v = jnp.repeat(v, rep, axis=-2)
+        time_sharded = False
+        if ctx.decode and ctx.mesh is not None:
+            # decode may carry a time-sharded cache (kvshard variant): keep
+            # the time axis sharded through the repeat — forcing heads there
+            # would all-gather the whole cache every step.  Only applies when
+            # the cache_seq rule actually resolves (base rules: batch owns
+            # the data axes, cache_seq falls back, heads stay sharded).
+            from .module import logical_to_partition_spec
+
+            spec = logical_to_partition_spec(
+                ("batch", "cache_seq", "kv_heads", None), k.shape, ctx.rules)
+            time_sharded = spec[1] is not None
+        if time_sharded:
+            k = ctx.constrain(k, "batch", "cache_seq", None, None)
+            v = ctx.constrain(v, "batch", "cache_seq", None, None)
+        else:
+            k = ctx.constrain(k, "batch", None, "heads", None)
+            v = ctx.constrain(v, "batch", None, "heads", None)
+    return k, v
+
+
+def _sdpa_dense(cfg, ctx: Ctx, q, k, v, mask) -> jax.Array:
+    """Materialized-scores path (small S·T: decode, smoke tests)."""
+    Dh = q.shape[-1]
+    scores = jnp.einsum(
+        "bshd,bthd->bhst", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (Dh ** -0.5)
+    scores = ctx.constrain(scores, "batch", "heads", None, None)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return ctx.constrain(out.astype(cfg.dtype), "batch", None, "heads", None)
+
+
+def _sdpa_chunked(cfg, ctx: Ctx, q, k, v, q_pos, kv_pos, causal: bool):
+    """Flash-style attention: scan over query blocks, never materializing the
+    [B,H,S,T] score tensor (peak = one [B,H,q_blk,T] f32 block).
+
+    This is what makes ``prefill_32k`` (and 4k training of the big archs) fit
+    v5e HBM in the XLA path; the Pallas flash kernel replaces it on real
+    hardware.  Beyond-paper memory optimization recorded in §Perf.
+    """
+    B, S, Hp, Dh = q.shape
+    T = k.shape[1]
+    blk = _Q_CHUNK
+    while S % blk:
+        blk //= 2
+    n = S // blk
+    # operands stay bf16 (no full-seq fp32 copies); the MXU accumulates the
+    # score/attend matmuls in fp32 via preferred_element_type, and softmax
+    # normalization runs on the fp32 block scores — flash-kernel numerics.
+    qf = jnp.moveaxis(q.astype(cfg.dtype).reshape(B, n, blk, Hp, Dh), 1, 0)
+    qp = jnp.moveaxis(q_pos.reshape(B, n, blk), 1, 0)
+    kf = k.astype(cfg.dtype)
+    vf = v.astype(cfg.dtype)
+
+    def block(qb, qpb):
+        # [B, blk, Hp, Dh], [B, blk] -> [B, blk, Hp, Dh]
+        s = jnp.einsum("bshd,bthd->bhst", qb, kf,
+                       preferred_element_type=jnp.float32) * (Dh ** -0.5)
+        if causal:
+            m = kv_pos[:, None, :] <= qpb[:, :, None]
+            if cfg.window:
+                m &= kv_pos[:, None, :] > qpb[:, :, None] - cfg.window
+            s = jnp.where(m[:, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(cfg.dtype)
+        ob = jnp.einsum("bhst,bthd->bshd", p, vf,
+                        preferred_element_type=jnp.float32)
+        return ob.astype(cfg.dtype)
+
+    # remat each q-block: backward recomputes block scores/probs instead of
+    # stacking [n, B, H, blk, T] fp32 probs — the flash-attention property
+    # must hold through the backward pass too.
+    block = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable)
+    _, out = jax.lax.scan(lambda c, inp: (c, block(*inp)), (), (qf, qp))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, Hp, Dh)
+    return ctx.constrain(out, "batch", None, "heads", None)
+
+
+def _sdpa(cfg, ctx: Ctx, q, k, v, mask) -> jax.Array:
+    """q [B,S,Hp,Dh]; k,v [B,T,Hk,Dh]; mask [B,1,S,T] bool or None."""
+    k, v = _repeat_kv(ctx, q, k, v)
+    return _sdpa_dense(cfg, ctx, q, k, v, mask)
+
+
+def _causal_mask(q_pos, kv_pos, window: int):
+    """q_pos [B,S], kv_pos [B,T] -> [B,1,S,T] bool."""
+    m = kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        m &= kv_pos[:, None, :] > q_pos[:, :, None] - window
+    return m[:, None]
+
+
+def attention(
+    params,
+    cfg,
+    ctx: Ctx,
+    x: jax.Array,
+    positions: jax.Array,
+    causal: bool = True,
+    cache: Optional[Dict] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Returns (output [B,S,d], updated cache).
+
+    Full-sequence when ``cache is None``; single-step decode updates the
+    cache in place (rolling slot for sliding-window configs).
+    ``cross_kv=(k, v)`` switches to cross-attention (whisper decoder).
+    """
+    B, S, _ = x.shape
+    if cross_kv is not None:
+        Hp, Dh = cfg.padded_heads, cfg.resolved_head_dim
+        q = dense(params["wq"], x, cfg.dtype)
+        if cfg.qk_norm:
+            q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        q = ctx.constrain(q, "batch", None, "heads", None)
+        kr, vr = _repeat_kv(ctx, q, cross_kv[0], cross_kv[1])
+        if S * kr.shape[1] >= _CHUNK_THRESHOLD:
+            zeros = jnp.zeros((B, kr.shape[1]), jnp.int32)
+            out = _sdpa_chunked(cfg, ctx, q, kr, vr, positions, zeros,
+                                causal=False)
+        else:
+            out = _sdpa_dense(cfg, ctx, q, kr, vr, None)
+    elif cache is None:
+        q, k, v = _project_qkv(params, cfg, ctx, x, positions)
+        kr, vr = _repeat_kv(ctx, q, k, v)
+        if causal and S * S >= _CHUNK_THRESHOLD:
+            out = _sdpa_chunked(cfg, ctx, q, kr, vr, positions, positions,
+                                causal=True)
+        else:
+            mask = _causal_mask(positions, positions, cfg.window) if causal else None
+            out = _sdpa_dense(cfg, ctx, q, kr, vr, mask)
+        cache = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+    else:
+        q, k_new, v_new = _project_qkv(params, cfg, ctx, x, positions)
+        T = cache["k"].shape[1]
+        idx = cache["pos"]  # scalar int32: next write position
+        slot = jnp.mod(idx, T) if cfg.window else idx
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        cache = {"k": k, "v": v}
+        if cfg.window:
+            # rolling buffer: every slot holds a token within the window once
+            # idx >= T; before that, mask unwritten slots.
+            kv_pos = jnp.arange(T, dtype=jnp.int32)[None]
+            valid = kv_pos <= idx  # slots written so far (idx new included)
+            mask = jnp.broadcast_to(valid[:, None, None, :], (B, 1, S, T))
+        else:
+            kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+            mask = _causal_mask(positions, kv_pos, 0)
+        out = _sdpa(cfg, ctx, q, k, v, mask)
+
+    from .layers import row_parallel
+
+    y = row_parallel(ctx, out.astype(cfg.dtype), params["wo"]["kernel"],
+                     "bshd,hde->bse")
+    if y is None:
+        y = jnp.einsum("bshd,hde->bse", out.astype(cfg.dtype),
+                       params["wo"]["kernel"].astype(cfg.dtype))
+        y = ctx.constrain(y, "batch", "seq_sp", None)
+    return y, cache
+
+
+def init_cache_specs(cfg, batch: int, max_len: int, n_layers: int,
+                     layer_axis: bool = True):
+    """ParamSpec pytree for a decode KV cache (sharded batch/kv_heads; the
+    cache's time axis falls to the data axis when batch can't shard —
+    the long_500k batch-1 case)."""
+    Hk, Dh = cfg.padded_kv_heads, cfg.resolved_head_dim
+    T = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (batch, T, Hk, Dh)
+    axes = ("batch", "cache_seq", "kv_heads", None)
+    if layer_axis:
+        shape = (n_layers, *shape)
+        axes = ("layers", *axes)
+    return {
+        "k": ParamSpec(shape, axes, jnp.bfloat16, "zeros"),
+        "v": ParamSpec(shape, axes, jnp.bfloat16, "zeros"),
+    }

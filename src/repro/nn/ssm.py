@@ -1,0 +1,250 @@
+"""Mamba2 (state-space duality) blocks: chunked train/prefill + O(1) decode.
+
+The SSD algorithm (Dao & Gu, 2024) splits the sequence into chunks: an
+intra-chunk quadratic term (masked ``C Bᵀ`` attention-like matmuls — MXU
+food), plus an inter-chunk state recurrence carried by ``lax.scan``.  Decode
+keeps a constant-size ``(conv_state, ssd_state)`` instead of a KV cache —
+which is exactly why the ``long_500k`` cell is runnable for the SSM/hybrid
+architectures (DESIGN.md §7).
+
+Sharding: projections are tensor-parallel on the inner channel dim ("mlp"
+rule); the SSD interior shards over heads when the head count divides the TP
+degree (zamba2: 112 heads ✓) and falls back to replicated SSD compute for
+tiny models (mamba2-130m: 24 heads — noted in the roofline analysis).
+
+PCILT integration (paper §6): the depthwise conv1d frontend is the paper's
+small-filter/large-signal sweet spot; with ``cfg.pcilt`` set, serving uses
+``pcilt_depthwise_conv1d`` — one table fetch per output element.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Ctx, dense_spec, dense, rmsnorm_spec, rmsnorm
+from .module import ParamSpec
+
+__all__ = ["mamba_spec", "mamba_block", "mamba_decode", "ssm_cache_specs"]
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def mamba_spec(cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, conv_ch = _dims(cfg)
+    GN = s.n_groups * s.d_state
+    return {
+        "wz": dense_spec(d, d_inner, ("embed", "mlp"), dtype=dtype),
+        "wx": dense_spec(d, d_inner, ("embed", "mlp"), dtype=dtype),
+        "wB": dense_spec(d, GN, ("embed", None), dtype=dtype),
+        "wC": dense_spec(d, GN, ("embed", None), dtype=dtype),
+        "wdt": dense_spec(d, H, ("embed", None), dtype=dtype),
+        "conv_w": ParamSpec((s.conv_kernel, conv_ch), (None, "mlp"), dtype, "fan_in"),
+        "conv_b": ParamSpec((conv_ch,), ("mlp",), dtype, "zeros"),
+        "A_log": ParamSpec((H,), (None,), dtype, "zeros"),
+        "dt_bias": ParamSpec((H,), (None,), dtype, "zeros"),
+        "D": ParamSpec((H,), (None,), dtype, "ones"),
+        "norm": rmsnorm_spec(d_inner, dtype),
+        "wo": dense_spec(d_inner, d, ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _conv1d(params, cfg, x, conv_state=None):
+    """Causal depthwise conv over [B, T, C]; returns (y, new_state)."""
+    k = cfg.ssm.conv_kernel
+    w = params["conv_w"].astype(x.dtype)  # [k, C]
+    if conv_state is not None:  # decode: state [B, k-1, C]
+        window = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # [B,k,C]
+        y = jnp.einsum("bkc,kc->bc", window[:, -k:], w)[:, None]
+        new_state = window[:, -(k - 1):]
+        return y + params["conv_b"].astype(x.dtype), new_state
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
+    return y + params["conv_b"].astype(x.dtype), None
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """SSD over full sequences — mixed precision.
+
+    xh [B,T,H,P]; dt [B,T,H] (post-softplus, fp32); A [H] (negative);
+    Bm, Cm [B,T,H,N] (already repeated across the head group).
+    Returns y [B,T,H,P] (bf16) and the final state [B,H,N,P] (fp32).
+
+    Precision policy: the O(T)-sized operands (xh, B, C, xdt, decay-scaled
+    variants) stay bf16 — they dominate residency in the backward pass —
+    while the numerically-sensitive pieces (log-decay cumsums, inter-chunk
+    state recurrence, matmul accumulation via preferred_element_type) run
+    fp32.
+    """
+    f32 = jnp.float32
+    cd = jnp.bfloat16
+    Bsz, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    while T % Q:
+        Q -= 1
+    C_ = T // Q
+
+    def r(t):  # [B,T,...] -> [B,C,Q,...]
+        return t.reshape(Bsz, C_, Q, *t.shape[2:])
+
+    xh, dt, Bm, Cm = r(xh.astype(cd)), r(dt.astype(f32)), r(Bm.astype(cd)), r(Cm.astype(cd))
+    a = dt * A[None, None, None]                      # [B,C,Q,H] log-decay f32
+    cum = jnp.cumsum(a, axis=2)                       # within-chunk cumsum
+    # decay from j to i (i >= j): exp(cum_i - cum_j)
+    li = cum[..., :, None, :]                         # [B,C,Q,1,H] at i
+    lj = cum[..., None, :, :]                         # [B,C,1,Q,H] at j
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.where(mask, jnp.exp(li - lj), 0.0)        # [B,C,Q,Q,H] f32 (chunk-local)
+
+    xdt = (xh * dt[..., None].astype(cd)).astype(cd)  # [B,C,Q,H,P] bf16
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cm, Bm,
+                        preferred_element_type=f32) * L
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores.astype(cd), xdt,
+                         preferred_element_type=f32)
+
+    # chunk-final states: S_c = sum_j exp(cum_last - cum_j) * B_j ⊗ xdt_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)   # [B,C,Q,H] f32
+    Bd = (Bm * decay_to_end[..., None].astype(cd)).astype(cd)
+    S = jnp.einsum("bcjhn,bcjhp->bchnp", Bd, xdt, preferred_element_type=f32)
+    chunk_decay = jnp.exp(jnp.sum(a, axis=2))         # [B,C,H] f32
+
+    def step(h, inp):
+        s_c, g_c = inp  # [B,H,N,P] f32, [B,H] f32
+        h_new = h * g_c[..., None, None] + s_c
+        return h_new, h.astype(cd)  # emit state *entering* the chunk
+
+    S_t = jnp.moveaxis(S, 1, 0)                       # [C,B,H,N,P] f32
+    g_t = jnp.moveaxis(chunk_decay, 1, 0)             # [C,B,H]
+    h_final, h_enter = jax.lax.scan(
+        step, jnp.zeros((Bsz, H, N, P), f32), (S_t, g_t)
+    )
+    h_enter = jnp.moveaxis(h_enter, 0, 1)             # [B,C,H,N,P] bf16
+
+    Ce = (Cm * jnp.exp(cum)[..., None].astype(cd)).astype(cd)
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", Ce, h_enter,
+                         preferred_element_type=f32)
+    y = (y_intra + y_inter).astype(cd).reshape(Bsz, T, H, P)
+    return y, h_final
+
+
+def _split_heads(cfg, ctx, x_in, B_in, C_in, dt_in):
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    Bsz, T = x_in.shape[:2]
+    xh = x_in.reshape(Bsz, T, H, s.head_dim)
+    xh = ctx.constrain(xh, "batch", None, "ssm_heads", None)
+    rep = H // s.n_groups
+    Bm = jnp.repeat(B_in.reshape(Bsz, T, s.n_groups, s.d_state), rep, axis=2)
+    Cm = jnp.repeat(C_in.reshape(Bsz, T, s.n_groups, s.d_state), rep, axis=2)
+    Bm = ctx.constrain(Bm, "batch", None, "ssm_heads", None)
+    Cm = ctx.constrain(Cm, "batch", None, "ssm_heads", None)
+    return xh, Bm, Cm
+
+
+def _finish(params, cfg, ctx, y, xh, z):
+    d_inner, H, _ = _dims(cfg)
+    Bsz, T = y.shape[:2]
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(Bsz, T, d_inner)
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    out = dense(params["wo"], y, cfg.dtype)
+    return ctx.constrain(out, "batch", "seq_sp", None)
+
+
+def mamba_block(params, cfg, ctx: Ctx, x: jax.Array,
+                return_state: bool = False):
+    """Full-sequence Mamba2 block (train / prefill).  x [B,T,d] -> [B,T,d].
+
+    ``return_state=True`` additionally emits the decode-ready
+    ``{"conv", "ssd"}`` state at the final position (prefill)."""
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    z = dense(params["wz"], x, cfg.dtype)
+    xi = dense(params["wx"], x, cfg.dtype)
+    Bi = dense(params["wB"], x, cfg.dtype)
+    Ci = dense(params["wC"], x, cfg.dtype)
+    # dt projection in bf16 (fp32 here would materialize a full-width fp32
+    # copy of x per layer); softplus/decay math upcasts the tiny [B,T,H]
+    dt = dense(params["wdt"], x, cfg.dtype).astype(jnp.float32)
+    xi = ctx.constrain(xi, "batch", None, "mlp")
+
+    xBC = jnp.concatenate([xi, Bi, Ci], axis=-1)
+    conv_tail = xBC[:, -(s.conv_kernel - 1):]  # pre-activation window
+    xBC, _ = _conv1d(params, cfg, xBC)
+    xBC = jax.nn.silu(xBC)
+    xi, Bi, Ci = jnp.split(
+        xBC, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1
+    )
+
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh, Bm, Cm = _split_heads(cfg, ctx, xi, Bi, Ci, dt)
+    y, h_final = _ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)
+    out = _finish(params, cfg, ctx, y.astype(cfg.dtype), xh, z)
+    if return_state:
+        return out, {"conv": conv_tail.astype(jnp.float32),
+                     "ssd": h_final.astype(jnp.float32)}
+    return out
+
+
+def mamba_decode(
+    params, cfg, ctx: Ctx, x: jax.Array, state: Dict
+) -> Tuple[jax.Array, Dict]:
+    """One-token step.  x [B,1,d]; state {conv [B,k-1,C], ssd [B,H,N,P]}."""
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    z = dense(params["wz"], x, cfg.dtype)
+    xi = dense(params["wx"], x, cfg.dtype)
+    Bi = dense(params["wB"], x, cfg.dtype)
+    Ci = dense(params["wC"], x, cfg.dtype)
+    dt = dense(params["wdt"], x, cfg.dtype).astype(jnp.float32)
+
+    xBC = jnp.concatenate([xi, Bi, Ci], axis=-1)
+    xBC, conv_state = _conv1d(params, cfg, xBC, state["conv"])
+    xBC = jax.nn.silu(xBC)
+    xi, Bi, Ci = jnp.split(
+        xBC, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1
+    )
+
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(jnp.float32))[:, 0]  # [B,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh, Bm, Cm = _split_heads(cfg, ctx, xi, Bi, Ci, dt)
+    xh1, Bm1, Cm1 = xh[:, 0].astype(jnp.float32), Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32)
+
+    dA = jnp.exp(dt * A[None])                        # [B,H]
+    h = state["ssd"].astype(jnp.float32)
+    h = h * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bm1 * dt[..., None], xh1
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Cm1, h)[:, None]  # [B,1,H,P]
+    out = _finish(params, cfg, ctx, y.astype(cfg.dtype), xh, z)
+    return out, {"conv": conv_state.astype(state["conv"].dtype),
+                 "ssd": h.astype(state["ssd"].dtype)}
+
+
+def ssm_cache_specs(cfg, batch: int, n_layers: int, layer_axis: bool = True):
+    s = cfg.ssm
+    d_inner, H, conv_ch = _dims(cfg)
+    conv = (batch, s.conv_kernel - 1, conv_ch)
+    ssd = (batch, H, s.d_state, s.head_dim)
+    conv_axes = ("batch", None, "mlp")
+    ssd_axes = ("batch", "ssm_heads", None, None)
+    if layer_axis:
+        conv, ssd = (n_layers, *conv), (n_layers, *ssd)
+        conv_axes, ssd_axes = ("layers", *conv_axes), ("layers", *ssd_axes)
+    return {
+        "conv": ParamSpec(conv, conv_axes, jnp.float32, "zeros"),
+        "ssd": ParamSpec(ssd, ssd_axes, jnp.float32, "zeros"),
+    }

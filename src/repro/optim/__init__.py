@@ -1,0 +1,8 @@
+"""Optimizer substrate: AdamW (+int8 moment quantization), schedules,
+clipping, compressed gradient collectives."""
+
+from .adamw import (
+    AdamWConfig, adamw_init, adamw_init_specs, adamw_update, cosine_schedule,
+    global_norm, clip_by_global_norm,
+)
+from .compress import compressed_pmean, compress_grads_tree

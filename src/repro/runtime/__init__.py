@@ -1,0 +1,3 @@
+"""Distributed runtime: fault tolerance, straggler mitigation, pipeline parallelism."""
+from .supervisor import StepWatchdog, detect_stragglers, Supervisor, FaultInjector
+from .pipeline import pipeline_apply

@@ -1,0 +1,165 @@
+"""Core PCILT semantics: every fetch path reproduces direct multiplication
+exactly (the paper's central claim: "The PCILT values are an exact product of
+the convolutional function — there is no result precision loss")."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    QuantSpec, calibrate, quantize, dequantize, code_values,
+    build_scalar_tables, build_grouped_tables, build_shared_tables,
+    pcilt_linear, pcilt_conv2d, pcilt_depthwise_conv1d, lut_lookup,
+    SegmentPlan, pack_offsets, unpack_offsets, offset_grid,
+    mul_fn, log_mul_fn, init_learnable_pcilt, apply_learnable_pcilt,
+    effective_tables, extract_filters,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _data(bits, n=8, b=4, out=5, lo=0.0, hi=3.0):
+    spec = QuantSpec(bits=bits)
+    x = jax.random.uniform(KEY, (b, n), minval=lo, maxval=hi)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (n, out))
+    scale = calibrate(x, spec)
+    xq = dequantize(quantize(x, spec, scale), spec, scale)
+    return spec, x, w, scale, xq
+
+
+@pytest.mark.parametrize("bits,group", [(1, 8), (2, 4), (2, 2), (4, 2), (8, 1)])
+def test_grouped_paths_equal_dm(bits, group):
+    spec, x, w, scale, xq = _data(bits)
+    T = build_grouped_tables(w, spec, scale, group)
+    want = xq @ w
+    for path in ("gather", "onehot"):
+        got = pcilt_linear(x, T, spec, scale, group, path=path)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_path_equals_gather():
+    spec, x, w, scale, _ = _data(2, n=32, b=16, out=24)
+    T = build_grouped_tables(w, spec, scale, 4)
+    a = pcilt_linear(x, T, spec, scale, 4, path="kernel")
+    b = pcilt_linear(x, T, spec, scale, 4, path="gather")
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_scalar_tables_match_grouped_g1():
+    spec, x, w, scale, xq = _data(4)
+    Ts = build_scalar_tables(w, spec, scale)       # [n, K, out]
+    Tg = build_grouped_tables(w, spec, scale, 1)   # [n, K, out]
+    np.testing.assert_allclose(Ts, Tg, rtol=1e-6)
+
+
+def test_shared_tables_exact_and_dedup():
+    spec, x, w, scale, _ = _data(3)
+    wq = jnp.round(w * 2) / 2  # low actual cardinality
+    st = build_shared_tables(wq, spec, scale)
+    codes = quantize(x, spec, scale)
+    want = dequantize(codes, spec, scale) @ wq
+    np.testing.assert_allclose(st.lookup(codes), want, rtol=1e-5, atol=1e-5)
+    st2 = build_shared_tables(wq, spec, scale, dedup_values=True)
+    np.testing.assert_allclose(st2.lookup(codes), want, rtol=1e-5, atol=1e-5)
+    assert st.actual_cardinality <= wq.size
+
+
+def test_custom_convolutional_function():
+    """Extension 2: any f(w, a) builds and fetches at identical cost."""
+    spec, x, w, scale, xq = _data(2)
+    T = build_grouped_tables(w, spec, scale, 2, fn=log_mul_fn)
+    got = pcilt_linear(x, T, spec, scale, 2)
+    want = jnp.sum(log_mul_fn(w[None], xq[:, :, None]), axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_conv2d_matches_lax_conv():
+    spec = QuantSpec(bits=2)
+    img = jax.random.uniform(KEY, (2, 10, 9, 3)) * 2
+    f = jax.random.normal(jax.random.fold_in(KEY, 2), (3, 3, 3, 4))
+    s = calibrate(img, spec)
+    got = pcilt_conv2d(img, f, spec, s, group=3)
+    imq = dequantize(quantize(img, spec, s), spec, s)
+    want = jax.lax.conv_general_dilated(
+        imq, f, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_strided_valid():
+    spec = QuantSpec(bits=2)
+    img = jax.random.uniform(KEY, (1, 12, 12, 2)) * 2
+    f = jax.random.normal(jax.random.fold_in(KEY, 3), (4, 4, 2, 5))
+    s = calibrate(img, spec)
+    got = pcilt_conv2d(img, f, spec, s, group=2, stride=2, padding="VALID")
+    imq = dequantize(quantize(img, spec, s), spec, s)
+    want = jax.lax.conv_general_dilated(
+        imq, f, (2, 2), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_depthwise_conv1d_one_fetch_per_output():
+    spec = QuantSpec(bits=2)
+    x = jax.random.uniform(KEY, (2, 20, 6)) * 2
+    f = jax.random.normal(jax.random.fold_in(KEY, 4), (4, 6))
+    s = calibrate(x, spec)
+    got = pcilt_depthwise_conv1d(x, f, spec, s)
+    xq = dequantize(quantize(x, spec, s), spec, s)
+    pad = jnp.pad(xq, ((0, 0), (3, 0), (0, 0)))
+    want = sum(pad[:, i : i + 20] * f[i][None, None] for i in range(4))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    got_oh = pcilt_depthwise_conv1d(x, f, spec, s, path="onehot")
+    np.testing.assert_allclose(got_oh, got, rtol=1e-5, atol=1e-5)
+
+
+def test_segment_plan_skip_dup_nonadjacent():
+    """Fig. 7: non-adjacent grouping, skipped positions, reused positions."""
+    spec, x, w, scale, _ = _data(2)
+    plan = SegmentPlan(np.array([[0, 3], [5, 5], [-1, 7]], np.int32))
+    codes = quantize(x, spec, scale)
+    T = build_grouped_tables(w, spec, scale, 2, plan=plan)
+    got = lut_lookup(T, plan.pack(codes, spec.bits))
+    xv = dequantize(plan.gather_codes(codes), spec, scale)
+    want = jnp.einsum("bgj,gjo->bo", xv, plan.gather_weights(w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_learnable_pcilt_trains():
+    """Extension 4: table entries receive gradients and reduce a loss."""
+    spec = QuantSpec(bits=2)
+    x = jax.random.uniform(KEY, (16, 8)) * 2
+    y = jax.random.normal(jax.random.fold_in(KEY, 5), (16, 3))
+    scale = float(calibrate(x, spec))
+    p = init_learnable_pcilt(KEY, 8, 3, spec, scale, group=2,
+                             granularity="entry")
+
+    def loss(p):
+        pred = apply_learnable_pcilt(p, x, spec, scale, 2)
+        return jnp.mean((pred - y) ** 2)
+
+    l0 = loss(p)
+    for _ in range(40):
+        g = jax.grad(loss)(p)
+        p = jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+    assert loss(p) < 0.5 * l0
+
+
+@pytest.mark.parametrize("gran", ["filter", "table", "offset", "entry"])
+def test_learnable_granularities(gran):
+    spec = QuantSpec(bits=2)
+    scale = 0.5
+    p = init_learnable_pcilt(KEY, 8, 3, spec, scale, group=2, granularity=gran)
+    x = jax.random.uniform(KEY, (4, 8))
+    out = apply_learnable_pcilt(p, x, spec, scale, 2)
+    assert out.shape == (4, 3)
+    g = jax.grad(lambda p: apply_learnable_pcilt(p, x, spec, scale, 2).sum())(p)
+    learnable = {"filter": "filter_scale", "table": "table_scale",
+                 "offset": "offset_delta", "entry": "entry_delta"}[gran]
+    assert bool(jnp.any(g[learnable] != 0))
+
+
+def test_extract_filters_roundtrip():
+    spec, x, w, scale, _ = _data(4)
+    T = build_grouped_tables(w, spec, scale, 2)
+    w_rec = extract_filters(T, spec, float(scale), 2)
+    np.testing.assert_allclose(w_rec, w, rtol=1e-3, atol=1e-3)

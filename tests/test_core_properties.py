@@ -1,0 +1,112 @@
+"""Hypothesis property tests for the PCILT invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    QuantSpec, calibrate, quantize, dequantize,
+    pack_offsets, unpack_offsets, offset_grid,
+    build_grouped_tables, pcilt_linear,
+    table_bytes, grouped_table_bytes, shared_table_bytes,
+    build_cost_multiplies,
+)
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(bits=st.integers(1, 8), sym=st.booleans(),
+       seed=st.integers(0, 2**16))
+def test_quantize_bounds_and_grid(bits, sym, seed):
+    """Codes stay in [0, K); dequantization error ≤ scale/2 inside the grid
+    range (+ the clip distance outside it)."""
+    if bits == 1 and sym:
+        return  # rejected by QuantSpec validation
+    spec = QuantSpec(bits=bits, symmetric=sym)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(32,)) if sym
+                    else np.abs(rng.normal(size=(32,))), jnp.float32)
+    scale = float(calibrate(x, spec))
+    codes = quantize(x, spec, scale)
+    assert int(codes.min()) >= 0 and int(codes.max()) < spec.cardinality
+    xr = np.asarray(dequantize(codes, spec, scale))
+    xn = np.asarray(x)
+    lo = (0 - spec.zero_point) * scale
+    hi = (spec.cardinality - 1 - spec.zero_point) * scale
+    bound = scale / 2 + np.maximum(0, xn - hi) + np.maximum(0, lo - xn) + 1e-6
+    assert (np.abs(xr - xn) <= bound).all()
+
+
+@SET
+@given(bits=st.integers(1, 4), group=st.integers(1, 4),
+       seed=st.integers(0, 2**16))
+def test_pack_unpack_inverse(bits, group, seed):
+    if bits * group > 16:
+        return
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(
+        rng.integers(0, 1 << bits, size=(3, 4 * group)), jnp.int32)
+    off = pack_offsets(codes, bits, group)
+    back = unpack_offsets(off, bits, group)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+    assert int(off.max()) < 1 << (bits * group)
+
+
+@SET
+@given(bits=st.integers(1, 3), group=st.integers(1, 3),
+       n_groups=st.integers(1, 4), out=st.integers(1, 9),
+       seed=st.integers(0, 2**16))
+def test_pcilt_equals_quantized_matmul(bits, group, n_groups, out, seed):
+    """The paper's exactness claim, over arbitrary shapes/cardinalities."""
+    if bits * group > 12:
+        return
+    n = group * n_groups
+    rng = np.random.default_rng(seed)
+    spec = QuantSpec(bits=bits)
+    x = jnp.asarray(np.abs(rng.normal(size=(5, n))) * 2, jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, out)), jnp.float32)
+    scale = calibrate(x, spec)
+    T = build_grouped_tables(w, spec, scale, group)
+    got = pcilt_linear(x, T, spec, scale, group)
+    want = dequantize(quantize(x, spec, scale), spec, scale) @ w
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(bits=st.integers(1, 4), group=st.integers(1, 3))
+def test_offset_grid_enumerates_exactly(bits, group):
+    if bits * group > 12:
+        return
+    g = np.asarray(offset_grid(bits, group))
+    assert g.shape == (1 << (bits * group), group)
+    # every row distinct and within code range
+    assert len(np.unique(g, axis=0)) == g.shape[0]
+    assert g.min() >= 0 and g.max() < (1 << bits)
+
+
+@SET
+@given(n=st.integers(1, 10_000), bits=st.integers(1, 8),
+       vb=st.sampled_from([1, 2, 4]))
+def test_memory_formulas(n, bits, vb):
+    """Grouping with g=1 degenerates to the basic formula; shared-table
+    memory never exceeds per-weight memory for the same value count."""
+    assert grouped_table_bytes(n, bits, 1, vb) == table_bytes(n, bits, vb)
+    assert shared_table_bytes(min(n, 16), [bits], vb) <= table_bytes(
+        max(n, 16), bits, vb)
+    assert build_cost_multiplies(n, bits) == n * (1 << bits)
+
+
+@SET
+@given(bits=st.integers(1, 3), seed=st.integers(0, 2**16))
+def test_build_then_infer_is_pure(bits, seed):
+    """Tables are pure functions of (w, spec, scale): rebuilt tables fetch
+    identically (the 'calculated once per lifetime' property)."""
+    rng = np.random.default_rng(seed)
+    spec = QuantSpec(bits=bits)
+    w = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+    T1 = build_grouped_tables(w, spec, 0.37, 2)
+    T2 = build_grouped_tables(w, spec, 0.37, 2)
+    np.testing.assert_array_equal(np.asarray(T1), np.asarray(T2))
