@@ -7,15 +7,25 @@ Sections:
                multiplication at several shapes/cardinalities.
   lm.*       — PCILT decode-projection table memory for the assigned archs
                (the paper's memory feasibility analysis applied to the zoo).
+  fused.*    — host-packed vs fused Pallas pipelines (quantize→pack→fetch in
+               VMEM, repro.kernels.pcilt_fused) at the paper's 5x5-conv shape
+               and the LM decode-GEMV regime; the fused path is autotuned
+               once through the persistent tile lookup table first.  Results
+               are also written to BENCH_pr1.json at the repo root to seed
+               the per-PR perf trajectory.
   roofline.* — summary terms per hillclimbed cell (full table:
                ``python -m benchmarks.roofline``).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _timeit(fn, reps=5, warmup=2):
@@ -83,6 +93,87 @@ def lm_rows():
     return rows
 
 
+def fused_rows(bench_json: str = "BENCH_pr1.json"):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import QuantSpec, calibrate, build_grouped_tables, pcilt_linear
+    from repro.core.lut_layers import pcilt_conv2d
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    rows = []
+    speedups = {}
+
+    # --- LM decode-GEMV regime: batch-starved projection [n -> O] ---------
+    bits, group = 2, 2
+    spec = QuantSpec(bits)
+    B, n, O = 8, 1024, 1024
+    x = jnp.asarray(np.abs(rng.normal(size=(B, n))), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, O)), jnp.float32)
+    s = calibrate(x, spec)
+    T = build_grouped_tables(w, spec, s, group)
+    # tune-once-and-record through the persistent lookup table; the jitted
+    # dispatch below then hits the cache at trace time (zero-cost lookup).
+    ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
+    host = jax.jit(lambda x: pcilt_linear(x, T, spec, s, group, path="kernel"))
+    fused = jax.jit(lambda x: pcilt_linear(x, T, spec, s, group, path="fused"))
+    host(x).block_until_ready()
+    fused(x).block_until_ready()
+    t_host = _timeit(lambda: host(x).block_until_ready())
+    t_fused = _timeit(lambda: fused(x).block_until_ready())
+    speedups["decode_gemv"] = t_host / t_fused
+    tag = f"decode_b{bits}g{group}_{n}x{O}"
+    rows.append((f"fused.{tag}_hostpacked", t_host, ""))
+    rows.append((f"fused.{tag}_fused", t_fused,
+                 f"{t_host / t_fused:.2f}x vs host-packed kernel"))
+
+    Tb = T.astype(jnp.bfloat16)
+    ops.pcilt_fused_gemv(x, Tb, spec, s, group, autotune=True)
+    fused_b = jax.jit(lambda x: pcilt_linear(x, Tb, spec, s, group, path="fused"))
+    fused_b(x).block_until_ready()
+    t_fused_b = _timeit(lambda: fused_b(x).block_until_ready())
+    speedups["decode_gemv_bf16"] = t_host / t_fused_b
+    rows.append((f"fused.{tag}_fused_bf16tab", t_fused_b,
+                 f"{t_host / t_fused_b:.2f}x vs host-packed kernel"))
+
+    # --- the paper's conv regime: 5x5 filter, small image, low-bit codes --
+    B, H, W, C, kh, kw, Co = 2, 14, 14, 8, 5, 5, 16
+    xc = jnp.asarray(np.abs(rng.normal(size=(B, H, W, C))), jnp.float32)
+    f = jnp.asarray(rng.normal(size=(kh, kw, C, Co)), jnp.float32)
+    sc = calibrate(xc, spec)
+    nf = kh * kw * C
+    Tc = build_grouped_tables(f.reshape(nf, Co), spec, sc, group)
+    ops.pcilt_fused_conv2d(xc, Tc, spec, sc, group, kh, kw, autotune=True)
+    hostc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, path="kernel"))
+    fusedc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, path="fused"))
+    hostc(xc).block_until_ready()
+    fusedc(xc).block_until_ready()
+    t_hostc = _timeit(lambda: hostc(xc).block_until_ready())
+    t_fusedc = _timeit(lambda: fusedc(xc).block_until_ready())
+    speedups["conv5x5"] = t_hostc / t_fusedc
+    tagc = f"conv5x5_b{bits}g{group}_{C}to{Co}"
+    rows.append((f"fused.{tagc}_hostpacked", t_hostc, ""))
+    rows.append((f"fused.{tagc}_fused", t_fusedc,
+                 f"{t_hostc / t_fusedc:.2f}x vs host-packed kernel"))
+
+    if bench_json:
+        payload = {
+            "pr": 1,
+            "backend": jax.default_backend(),
+            "timing": "interpret-mode CPU" if jax.default_backend() != "tpu"
+                      else "compiled TPU",
+            "target_min_speedup": 1.3,
+            "speedup": {k: round(v, 3) for k, v in speedups.items()},
+            "rows": [
+                {"name": name, "us_per_call": round(us, 2), "derived": derived}
+                for name, us, derived in rows
+            ],
+        }
+        with open(os.path.join(REPO_ROOT, bench_json), "w") as fp:
+            json.dump(payload, fp, indent=1)
+    return rows
+
+
 def roofline_rows():
     import glob
     import json
@@ -112,7 +203,7 @@ def roofline_rows():
 
 def main() -> None:
     print("name,us_per_call,derived")
-    for section in (paper_rows, micro_rows, lm_rows, roofline_rows):
+    for section in (paper_rows, micro_rows, lm_rows, fused_rows, roofline_rows):
         for name, val, derived in section():
             print(f"{name},{val},{derived}")
 

@@ -1,0 +1,47 @@
+"""Version-tolerance shims for the jax APIs this repo uses.
+
+The codebase targets the modern public spellings (``jax.shard_map``,
+``jax.tree.flatten_with_path``); older jax releases only ship them under
+``jax.experimental`` / ``jax.tree_util``.  Everything funnels through here so
+the rest of the code can stay on one spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "tree_flatten_with_path", "axis_size"]
+
+
+def shard_map(f=None, /, **kwargs):
+    """``jax.shard_map`` with a fallback to the experimental location.
+
+    The old API names the replication-check kwarg ``check_rep`` instead of
+    ``check_vma``; translate when falling back.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+    if f is None:
+        return lambda g: fn(g, **kwargs)
+    return fn(f, **kwargs)
+
+
+def tree_flatten_with_path(tree, is_leaf=None):
+    """``jax.tree.flatten_with_path`` with a ``jax.tree_util`` fallback."""
+    fn = getattr(jax.tree, "flatten_with_path", None)
+    if fn is None:
+        fn = jax.tree_util.tree_flatten_with_path
+    return fn(tree, is_leaf=is_leaf)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` only exists in newer jax; ``psum(1)`` is the
+    portable spelling of "how many shards am I across this axis"."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)

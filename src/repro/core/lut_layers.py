@@ -9,11 +9,22 @@ one of three interchangeable paths that produce bit-identical arithmetic:
   as an MXU matmul.  This is the TPU-idiomatic lookup (DESIGN.md §2) and the
   path the distributed dry-run lowers, since it partitions like any einsum.
 * ``path="kernel"`` — the Pallas TPU kernel (``repro.kernels``): tables tiled
-  into VMEM via BlockSpec, offsets packed on the VPU.
+  into VMEM via BlockSpec, offsets packed on the host and re-read by the
+  kernel.
+* ``path="fused"`` — the fused Pallas pipeline (``repro.kernels.pcilt_fused``):
+  quantize → offset-pack → fetch → adder-tree entirely in VMEM from the raw
+  float activations, so the int32 offset tensor never touches HBM.  Fastest
+  deployment path; requires a per-tensor scale and the default contiguous
+  segment plan.
+
+Both kernel paths dispatch tile shapes through the persistent autotune lookup
+table (``repro.kernels.autotune``) — recorded winners are used on a cache
+hit, the VMEM heuristic otherwise.
 
 The convolution layers reduce to the linear case by im2col — a PCILT is
 indexed by (segment, offset) regardless of whether the segment came from a
-flattened conv receptive field or a projection row.
+flattened conv receptive field or a projection row.  (``path="fused"`` does
+the im2col on quantized codes inside the kernel instead.)
 """
 
 from __future__ import annotations
@@ -73,6 +84,17 @@ def pcilt_linear(
     path: str = "gather",
 ) -> jax.Array:
     """Quantize -> pack offsets -> fetch -> sum.   ``x: [..., n] -> [..., out]``."""
+    if path == "fused":
+        if plan is not None:
+            raise ValueError(
+                "path='fused' packs contiguous segments in-kernel; "
+                "generalized SegmentPlans need a host-packed path")
+        from repro.kernels import ops  # local import: kernels are optional
+
+        G, _, O = tables.shape
+        flat = x.reshape(-1, x.shape[-1])
+        out = ops.pcilt_fused_gemv(flat, tables, spec, scale, group)
+        return out.reshape(*x.shape[:-1], O)
     codes = quantize(x, spec, scale)
     if plan is None:
         offsets = pack_offsets(codes, spec.bits, group)
@@ -135,6 +157,12 @@ def pcilt_conv2d(
         wflat = jnp.concatenate([wflat, jnp.zeros((pad_n, cout), wflat.dtype)], 0)
     if tables is None:
         tables = build_grouped_tables(wflat, spec, scale, group)
+    if path == "fused":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        return ops.pcilt_fused_conv2d(
+            x, tables, spec, scale, group, kh, kw, stride=stride, padding=padding
+        )
     patches = im2col(x, kh, kw, stride, padding)
     if pad_n:
         zeros = jnp.zeros((*patches.shape[:-1], pad_n), patches.dtype)

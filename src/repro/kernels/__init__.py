@@ -1,3 +1,28 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""repro.kernels — Pallas TPU kernels for the PCILT hot path.
+
+Two pipelines implement the paper's fetch-and-add inner loop:
+
+* **host-packed** (``pcilt_gemv.py``, ``pcilt_conv2d.py``,
+  ``pcilt_dwconv1d.py``): quantization, im2col, and offset bit-packing run on
+  the host and the kernel consumes a pre-built int32 offset tensor.  Kept for
+  callers that hold offsets already (generalized ``SegmentPlan`` packings,
+  the dwconv path) and as the measured baseline.
+* **fused** (``pcilt_fused.py``): raw float activations in; quantize →
+  offset-pack → table-fetch → adder-tree run entirely in VMEM, with the fetch
+  expressed as a single flattened ``[Bb, Gb*V] x [Gb*V, Ob]`` one-hot MXU
+  contraction per staged table tile.  The int32 offset tensor — for convs
+  often larger than the activations — never touches HBM.  Tables may be
+  stored bf16 to double the groups staged per ~8 MB VMEM budget.
+
+Dispatch (``ops.py``) routes both pipelines through a **persistent tile
+autotuner** (``autotune.py``): per-shape winning tilings live in a JSON
+lookup table (``$REPRO_PCILT_TUNE_CACHE``), so a cache hit dispatches at
+zero cost and a miss can tune-once-and-record — the Inductor template
+lookup-table design applied to PCILT.
+
+``ref.py`` holds the pure-jnp oracles every kernel is tested against.
+"""
+
+from . import ops, ref, autotune  # noqa: F401
+
+__all__ = ["ops", "ref", "autotune"]

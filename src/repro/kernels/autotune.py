@@ -1,0 +1,309 @@
+"""Persistent tile autotuner for the PCILT Pallas kernels.
+
+Mirrors the PyTorch-Inductor template lookup-table design: the best kernel
+tiling for a given problem shape is discovered *once* by timing a small set of
+candidate configurations, then persisted to a JSON lookup table keyed by
+``(kernel, B, G, V, O, dtype, backend)``.  Every later dispatch on the same
+shape key is a pure dict hit — zero timing runs, zero extra compiles.
+
+Cache format (JSON, one object per shape key)::
+
+    {
+      "fused_gemv|B=8,G=512,V=16,O=1024,dtype=float32|backend=cpu": {
+        "tiles": {"Bb": 8, "Gb": 512, "Ob": 128, "row_tile": 8},
+        "us": 812.4,          # winning candidate's measured microseconds
+        "candidates": 4       # how many tilings were timed at record time
+      },
+      ...
+    }
+
+The cache file lives at ``$REPRO_PCILT_TUNE_CACHE`` (tests point this at a
+tmpdir) or ``~/.cache/repro-pcilt/tiles.json`` by default, and is written
+atomically (tmp + rename) so concurrent processes can share it.
+
+Policy:
+
+* **lookup** is always on: every ``ops.py`` dispatch consults the cache and
+  uses the recorded tiles on a hit, falling back to the VMEM-budget heuristic
+  (``default_tiles``) on a miss.
+* **tuning** (the timing runs on a miss) only happens eagerly — never under a
+  ``jit`` trace, where there are no concrete arrays to time — and only when
+  requested: pass ``autotune=True`` to the ``ops`` wrappers, or set
+  ``REPRO_PCILT_AUTOTUNE=1`` to make it the ambient default.
+
+``TIMING_RUNS`` counts individual timed candidate executions; tests assert it
+stays zero on a warm cache (the "second process does no work" contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+__all__ = [
+    "TileConfig",
+    "TileCache",
+    "get_cache",
+    "reset_cache",
+    "shape_key",
+    "lookup",
+    "tune",
+    "gemv_candidates",
+    "conv2d_candidates",
+    "autotune_enabled",
+    "TIMING_RUNS",
+]
+
+#: incremented once per timed candidate execution (reps included).  Tests use
+#: this to assert that a warm cache performs *zero* timing runs.
+TIMING_RUNS = 0
+
+_DEFAULT_CACHE = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro-pcilt", "tiles.json"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """One kernel tiling: batch/group/output block plus the conv row strip."""
+
+    Bb: int
+    Gb: int
+    Ob: int
+    row_tile: int = 8
+
+    def to_json(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict[str, int]) -> "TileConfig":
+        cfg = TileConfig(
+            Bb=int(d["Bb"]), Gb=int(d["Gb"]), Ob=int(d["Ob"]),
+            row_tile=int(d.get("row_tile", 8)),
+        )
+        if min(cfg.Bb, cfg.Gb, cfg.Ob, cfg.row_tile) < 1:
+            raise ValueError(f"non-positive tile in cache entry: {d}")
+        return cfg
+
+
+def autotune_enabled(flag: Optional[bool] = None) -> bool:
+    """Resolve an ``autotune=`` argument against the ambient env default."""
+    if flag is not None:
+        return flag
+    return os.environ.get("REPRO_PCILT_AUTOTUNE", "0") not in ("", "0", "false")
+
+
+def shape_key(kernel: str, *, dtype, backend: str, **dims: int) -> str:
+    """Stable string key for one problem shape, e.g.
+    ``fused_gemv|B=8,G=512,V=16,O=1024,dtype=float32|backend=cpu``."""
+    parts = ",".join(f"{k}={v}" for k, v in sorted(dims.items()))
+    return f"{kernel}|{parts},dtype={dtype}|backend={backend}"
+
+
+class TileCache:
+    """The persistent shape-key -> TileConfig lookup table."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or os.environ.get("REPRO_PCILT_TUNE_CACHE") or _DEFAULT_CACHE
+        self._entries: Dict[str, dict] = {}
+        self._load()
+
+    def _load(self) -> None:
+        try:
+            with open(self.path) as f:
+                self._entries = json.load(f)
+        except (OSError, ValueError):
+            self._entries = {}
+
+    def _save(self) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        # Merge entries recorded by other processes since our load, so
+        # concurrent tuners lose no updates (last writer wins per key only).
+        try:
+            with open(self.path) as f:
+                on_disk = json.load(f)
+        except (OSError, ValueError):
+            on_disk = {}
+        self._entries = {**on_disk, **self._entries}
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(self._entries, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def lookup(self, key: str) -> Optional[TileConfig]:
+        e = self._entries.get(key)
+        if not e:
+            return None
+        try:
+            return TileConfig.from_json(e["tiles"])
+        except (KeyError, TypeError, ValueError):
+            # A malformed hand-edited / cross-version entry must degrade to
+            # the heuristic, never crash dispatch.
+            return None
+
+    def record(self, key: str, tiles: TileConfig, us: float, candidates: int) -> None:
+        self._entries[key] = {
+            "tiles": tiles.to_json(), "us": us, "candidates": candidates,
+        }
+        self._save()
+
+
+_CACHE: Optional[TileCache] = None
+
+
+def get_cache() -> TileCache:
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = TileCache()
+    return _CACHE
+
+
+def reset_cache(path: Optional[str] = None) -> TileCache:
+    """Drop the in-memory cache and reload from disk (tests: simulates a fresh
+    process sharing the same persisted lookup table)."""
+    global _CACHE
+    _CACHE = TileCache(path)
+    return _CACHE
+
+
+def lookup(key: str) -> Optional[TileConfig]:
+    return get_cache().lookup(key)
+
+
+def _time_one(fn: Callable[[], None], reps: int, warmup: int) -> float:
+    global TIMING_RUNS
+    for _ in range(warmup):
+        fn()
+        TIMING_RUNS += 1
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+        TIMING_RUNS += 1
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def tune(
+    key: str,
+    candidates: Sequence[TileConfig],
+    bench: Callable[[TileConfig], Callable[[], None]],
+    reps: int = 2,
+    warmup: int = 1,
+) -> TileConfig:
+    """Miss -> time every candidate, record the winner; hit -> return it.
+
+    ``bench(cfg)`` returns a nullary closure that runs the kernel once (and
+    blocks) at tiling ``cfg``.  A candidate that fails to run (e.g. a tiling
+    the backend rejects) is skipped rather than fatal.
+    """
+    cache = get_cache()
+    hit = cache.lookup(key)
+    if hit is not None:
+        return hit
+    best: Optional[TileConfig] = None
+    best_us = float("inf")
+    tried = 0
+    for cfg in candidates:
+        try:
+            fn = bench(cfg)
+            us = _time_one(fn, reps=reps, warmup=warmup)
+        except Exception:
+            continue
+        tried += 1
+        if us < best_us:
+            best, best_us = cfg, us
+    if best is None:  # nothing ran; fall back to the first heuristic candidate
+        best, best_us = candidates[0], float("nan")
+    cache.record(key, best, best_us, tried)
+    return best
+
+
+# ----------------------------------------------------------------------------
+# Candidate generators.  Small sets on purpose: each candidate costs a kernel
+# compile at tune time, and the heuristic default is always candidate 0 so a
+# degenerate tune (every candidate fails) still dispatches correctly.
+# ----------------------------------------------------------------------------
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _fit_gb(G: int, V: int, Ob: int, itemsize: int,
+            vmem_budget: int = 8 * 2**20) -> int:
+    """Largest group-tile whose staged ``[Gb, V, Ob]`` table fits the budget
+    and divides G (bf16 tables halve itemsize, doubling the groups staged)."""
+    cap = max(1, vmem_budget // max(V * Ob * itemsize, 1))
+    Gb = max(1, min(G, cap))
+    while G % Gb:
+        Gb -= 1
+    return Gb
+
+
+def gemv_candidates(B: int, G: int, V: int, O: int, itemsize: int = 4
+                    ) -> List[TileConfig]:
+    """Tilings for the (fused) GEMV: vary Ob (lane blocks) and Gb (staging).
+
+    Candidate 0 is always the VMEM-budget heuristic (the no-tune fallback).
+    Later candidates trade staging footprint for fewer grid steps, up to
+    "stage everything" — oversized tilings simply fail to compile on TPU and
+    are skipped by ``tune``, while on CPU (interpret mode, where per-grid-step
+    overhead dominates) they usually win.
+    """
+    Bb = min(128, _round_up(max(B, 1), 8))
+    O_full = _round_up(O, 128) if O >= 128 else O
+    out: List[TileConfig] = []
+    seen = set()
+
+    def add(gb: int, ob: int) -> None:
+        gb = max(1, min(gb, G))
+        while G % gb:
+            gb -= 1
+        if (gb, ob) not in seen:
+            seen.add((gb, ob))
+            out.append(TileConfig(Bb=Bb, Gb=gb, Ob=ob))
+
+    add(_fit_gb(G, V, min(128, O_full), itemsize), min(128, O_full))  # heuristic
+    add(G, O_full)  # stage everything: one grid step when it fits
+    for Ob in (128, 256, 512, O_full):
+        if Ob > O_full:
+            continue
+        Gb = _fit_gb(G, V, Ob, itemsize)
+        add(Gb, Ob)
+        add(max(1, Gb // 4), Ob)
+    return out[:6]
+
+
+def conv2d_candidates(Ho: int, G: int, V: int, O: int, itemsize: int = 4
+                      ) -> List[TileConfig]:
+    """Tilings for the (fused) conv2d: vary the row strip, table staging, and
+    output blocking.  Same ordering contract as ``gemv_candidates``: the
+    heuristic first, then progressively larger stagings ("stage everything"
+    last — compile-rejected on TPU when oversized, dominant on CPU)."""
+    out: List[TileConfig] = []
+    seen = set()
+    O_full = _round_up(O, 128) if O >= 128 else O
+    Ob0 = min(128, O_full)
+    Gb = _fit_gb(G, V, Ob0, itemsize)
+
+    def add(hb: int, gb: int, ob: int) -> None:
+        hb = max(1, min(hb, Ho))
+        while Ho % hb:
+            hb -= 1
+        gb = max(1, min(gb, G))
+        while G % gb:
+            gb -= 1
+        if (hb, gb, ob) not in seen:
+            seen.add((hb, gb, ob))
+            out.append(TileConfig(Bb=1, Gb=gb, Ob=ob, row_tile=hb))
+
+    add(8, Gb, Ob0)  # heuristic
+    add(Ho, G, O_full)  # stage everything: one grid step per batch element
+    for rt in (8, 4, 2, Ho):
+        add(rt, Gb, Ob0)
+        add(rt, max(1, Gb // 4), Ob0)
+    return out[:6]

@@ -2,23 +2,59 @@
 
 Handles platform selection (compiled Pallas on TPU, ``interpret=True``
 elsewhere so the exact kernel body is validated on CPU), padding to tile
-multiples, and unpadding.
+multiples, unpadding — and **tile dispatch through the persistent autotune
+lookup table** (``autotune.py``, Inductor-style):
+
+* every wrapper builds a shape key ``(kernel, B, G, V, O, dtype, backend)``
+  and consults the JSON-backed cache; a hit dispatches the recorded tiles at
+  zero cost (a dict probe, no timing, no extra compile);
+* a miss falls back to the VMEM-budget heuristic — unless tuning is requested
+  (``autotune=True`` per call, or ``REPRO_PCILT_AUTOTUNE=1`` ambient) *and*
+  the inputs are concrete (never under a ``jit`` trace), in which case the
+  candidate tilings are timed once and the winner recorded for every later
+  process.
+
+Two pipelines are exposed per op:
+
+* **host-packed** (``pcilt_gemv`` / ``pcilt_conv2d`` / ``pcilt_dwconv1d``):
+  caller quantizes + packs offsets on the host; kernels fetch-and-add.
+* **fused** (``pcilt_fused_gemv`` / ``pcilt_fused_conv2d``): raw float
+  activations in; quantize → pack → fetch → adder-tree run entirely in VMEM
+  (see ``pcilt_fused.py``), so the int32 offset tensor never touches HBM.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
-from .pcilt_gemv import pcilt_gemv_pallas
+from . import autotune as atn
+from .pcilt_gemv import pcilt_gemv_pallas, default_tiles
 from .pcilt_conv2d import pcilt_conv2d_pallas
 from .pcilt_dwconv1d import pcilt_dwconv1d_pallas
+from .pcilt_fused import pcilt_fused_gemv_pallas, pcilt_fused_conv2d_pallas
 
-__all__ = ["pcilt_gemv", "pcilt_conv2d", "pcilt_dwconv1d", "on_tpu"]
+__all__ = [
+    "pcilt_gemv",
+    "pcilt_conv2d",
+    "pcilt_dwconv1d",
+    "pcilt_fused_gemv",
+    "pcilt_fused_conv2d",
+    "on_tpu",
+]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _is_concrete(*xs) -> bool:
+    return not any(isinstance(x, jax.core.Tracer) for x in xs)
+
+
+_round_up = atn._round_up
 
 
 def _pad_axis(x: jax.Array, axis: int, mult: int):
@@ -30,18 +66,128 @@ def _pad_axis(x: jax.Array, axis: int, mult: int):
     return jnp.pad(x, widths), pad
 
 
-def pcilt_gemv(offsets: jax.Array, tables: jax.Array) -> jax.Array:
+def _scale_2d(scale, dtype) -> jax.Array:
+    """Per-tensor scale as the ``[1, 1]`` operand the fused kernels stage."""
+    s = jnp.asarray(scale, dtype)
+    if s.size != 1:
+        raise ValueError(
+            f"fused kernels take a per-tensor (scalar) scale, got shape {s.shape}"
+        )
+    return s.reshape(1, 1)
+
+
+def _fit_tiles(tiles, B: int, G: int, O: int) -> tuple:
+    """Clamp a (Bb, Gb, Ob) tiling to the problem and force ``Gb | G``."""
+    Bb, Gb, Ob = tiles
+    Bb, Gb, Ob = min(Bb, _round_up(B, 8)), min(Gb, G), min(Ob, O)
+    while G % Gb:
+        Gb -= 1
+    return Bb, Gb, Ob
+
+
+def _fit_conv_tiles(tiles, Ho: int, G: int, O: int) -> tuple:
+    """Clamp a (Hb, Gb, Ob) conv tiling: ``Hb | Ho`` and ``Gb | G``."""
+    Hb, Gb, Ob = tiles
+    Hb, Gb, Ob = min(Hb, Ho), min(Gb, G), min(Ob, O)
+    while Ho % Hb:
+        Hb -= 1
+    while G % Gb:
+        Gb -= 1
+    return Hb, Gb, Ob
+
+
+# ----------------------------------------------------------------------------
+# Host-packed pipeline
+# ----------------------------------------------------------------------------
+
+
+def pcilt_gemv(
+    offsets: jax.Array,
+    tables: jax.Array,
+    tiles=None,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
     """offsets [B, G] int32, tables [G, V, O] -> [B, O]."""
     B, O = offsets.shape[0], tables.shape[-1]
-    offsets, _ = _pad_axis(offsets, 0, 8)
-    tables, _ = _pad_axis(tables, 2, 128 if tables.shape[-1] >= 128 else 1)
-    out = pcilt_gemv_pallas(offsets, tables, interpret=not on_tpu())
+    G, V = tables.shape[0], tables.shape[1]
+    key = atn.shape_key("gemv_host", dtype=tables.dtype,
+                        backend=jax.default_backend(), B=B, G=G, V=V, O=O)
+    if tiles is None:
+        tiles = atn.lookup(key)
+        if tiles is not None:
+            tiles = (tiles.Bb, tiles.Gb, tiles.Ob)
+        elif atn.autotune_enabled(autotune) and _is_concrete(offsets, tables):
+            cfg = atn.tune(
+                key,
+                atn.gemv_candidates(B, G, V, O, tables.dtype.itemsize),
+                lambda c: _host_gemv_bench(offsets, tables, c),
+            )
+            tiles = (cfg.Bb, cfg.Gb, cfg.Ob)
+    if tiles is not None:
+        tiles = _fit_tiles(tiles, B, G, O)
+    offsets, _ = _pad_axis(offsets, 0, tiles[0] if tiles else 8)
+    tables, _ = _pad_axis(
+        tables, 2, (tiles[2] if tiles else 128) if O >= 128 else 1)
+    out = pcilt_gemv_pallas(offsets, tables, interpret=not on_tpu(), tiles=tiles)
     return out[:B, :O]
 
 
-def pcilt_conv2d(offsets: jax.Array, tables: jax.Array) -> jax.Array:
-    """offsets [B, Ho, Wo, G] int32, tables [G, V, O] -> [B, Ho, Wo, O]."""
-    return pcilt_conv2d_pallas(offsets, tables, interpret=not on_tpu())
+def _host_gemv_bench(offsets, tables, cfg):
+    B, O = offsets.shape[0], tables.shape[-1]
+    tiles = _fit_tiles((cfg.Bb, cfg.Gb, cfg.Ob), B, tables.shape[0], O)
+    off_p, _ = _pad_axis(offsets, 0, tiles[0])
+    tab_p, _ = _pad_axis(tables, 2, tiles[2] if O >= 128 else 1)
+    return lambda: pcilt_gemv_pallas(
+        off_p, tab_p, interpret=not on_tpu(), tiles=tiles
+    ).block_until_ready()
+
+
+def pcilt_conv2d(
+    offsets: jax.Array,
+    tables: jax.Array,
+    tiles=None,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """offsets [B, Ho, Wo, G] int32, tables [G, V, O] -> [B, Ho, Wo, O].
+
+    Pads Wo to a sublane multiple and O to a lane multiple (mirroring the
+    gemv wrapper), then unpads — non-128-multiple channel counts and ragged
+    widths are the caller's problem no longer.
+    """
+    B, Ho, Wo, G = offsets.shape
+    V, O = tables.shape[1], tables.shape[-1]
+    key = atn.shape_key("conv2d_host", dtype=tables.dtype,
+                        backend=jax.default_backend(),
+                        B=B, Ho=Ho, Wo=Wo, G=G, V=V, O=O)
+    cfg = None
+    if tiles is None:
+        cfg = atn.lookup(key)
+        if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
+                offsets, tables):
+            cfg = atn.tune(
+                key,
+                atn.conv2d_candidates(Ho, G, V, O, tables.dtype.itemsize),
+                lambda c: _host_conv2d_bench(offsets, tables, c),
+            )
+        if cfg is not None:
+            tiles = (cfg.row_tile, cfg.Gb, cfg.Ob)
+    # Padded-Wo offsets index table row 0; the fetched garbage is sliced off.
+    offsets, _ = _pad_axis(offsets, 2, 8 if Wo >= 8 else 1)
+    tables, _ = _pad_axis(
+        tables, 2, (tiles[2] if tiles else 128) if O >= 128 else 1)
+    out = pcilt_conv2d_pallas(offsets, tables, interpret=not on_tpu(),
+                              tiles=tiles)
+    return out[:, :, :Wo, :O]
+
+
+def _host_conv2d_bench(offsets, tables, cfg):
+    Wo, O = offsets.shape[2], tables.shape[-1]
+    off_p, _ = _pad_axis(offsets, 2, 8 if Wo >= 8 else 1)
+    tab_p, _ = _pad_axis(tables, 2, cfg.Ob if O >= 128 else 1)
+    tiles = (cfg.row_tile, cfg.Gb, min(cfg.Ob, tab_p.shape[-1]))
+    return lambda: pcilt_conv2d_pallas(
+        off_p, tab_p, interpret=not on_tpu(), tiles=tiles
+    ).block_until_ready()
 
 
 def pcilt_dwconv1d(offsets: jax.Array, tables: jax.Array) -> jax.Array:
@@ -51,3 +197,129 @@ def pcilt_dwconv1d(offsets: jax.Array, tables: jax.Array) -> jax.Array:
     tables, _ = _pad_axis(tables, 0, 128 if C >= 128 else 1)
     out = pcilt_dwconv1d_pallas(offsets, tables, interpret=not on_tpu())
     return out[..., :C]
+
+
+# ----------------------------------------------------------------------------
+# Fused pipeline: raw floats in, quantize/pack/fetch in VMEM
+# ----------------------------------------------------------------------------
+
+
+def pcilt_fused_gemv(
+    x: jax.Array,
+    tables: jax.Array,
+    spec,
+    scale,
+    group: int,
+    tiles=None,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """x [B, n] float, tables [G, V, O] (``n == G * group``) -> [B, O].
+
+    Fuses ``quantize(x, spec, scale)`` + ``pack_offsets`` + fetch into one
+    Pallas call; ``spec`` is a ``core.QuantSpec`` (only ``bits`` and
+    ``zero_point`` cross into the kernel, both static).
+    """
+    B, n = x.shape
+    G, V, O = tables.shape
+    if n != G * group:
+        raise ValueError(f"x trailing dim {n} != G*group = {G}*{group}")
+    key = atn.shape_key("fused_gemv", dtype=tables.dtype,
+                        backend=jax.default_backend(),
+                        B=B, G=G, V=V, O=O, g=group, bits=spec.bits)
+    s2 = _scale_2d(scale, x.dtype)
+    kw = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
+              interpret=not on_tpu())
+    if tiles is None:
+        cfg = atn.lookup(key)
+        if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
+                x, s2, tables):
+            cfg = atn.tune(
+                key,
+                atn.gemv_candidates(B, G, V, O, tables.dtype.itemsize),
+                lambda c: _fused_gemv_bench(x, s2, tables, c, kw),
+            )
+        if cfg is not None:
+            tiles = (cfg.Bb, cfg.Gb, cfg.Ob)
+        else:
+            tiles = default_tiles(B, G, V, O, itemsize=tables.dtype.itemsize)
+    tiles = _fit_tiles(tiles, B, G, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])  # zero rows quantize harmlessly
+    tp, _ = _pad_axis(tables, 2, tiles[2] if O >= 128 else 1)
+    out = pcilt_fused_gemv_pallas(xp, s2, tp, tiles=tiles, **kw)
+    return out[:B, :O]
+
+
+def _fused_gemv_bench(x, s2, tables, cfg, kw):
+    B, G, O = x.shape[0], tables.shape[0], tables.shape[-1]
+    tiles = _fit_tiles((cfg.Bb, cfg.Gb, cfg.Ob), B, G, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])
+    tp, _ = _pad_axis(tables, 2, tiles[2] if O >= 128 else 1)
+    return lambda: pcilt_fused_gemv_pallas(
+        xp, s2, tp, tiles=tiles, **kw
+    ).block_until_ready()
+
+
+def _conv_same_pads(kh: int, kw: int):
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    return ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0))
+
+
+def pcilt_fused_conv2d(
+    x: jax.Array,
+    tables: jax.Array,
+    spec,
+    scale,
+    group: int,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: str = "SAME",
+    tiles=None,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """x [B, H, W, C] float NHWC, tables [G, V, O] -> [B, Ho, Wo, O].
+
+    The only host-side work is the spatial zero-pad of the raw activations;
+    im2col happens on quantized codes inside VMEM (``pcilt_fused.py``), so
+    neither the ``[B, Ho, Wo, kh*kw*C]`` float patch tensor nor the
+    ``[B, Ho, Wo, G]`` int32 offset tensor is ever materialized in HBM.
+    Tables must cover ``G * group >= kh*kw*C`` (alignment slots built from
+    zero weights, as ``core.lut_layers.pcilt_conv2d`` does).
+    """
+    if padding == "SAME":
+        x = jnp.pad(x, _conv_same_pads(kh, kw))
+    B, Hp, Wp, C = x.shape
+    G, V, O = tables.shape
+    Ho = (Hp - kh) // stride + 1
+    key = atn.shape_key("fused_conv2d", dtype=tables.dtype,
+                        backend=jax.default_backend(),
+                        B=B, Ho=Ho, W=Wp, C=C, k=kh * kw, s=stride,
+                        G=G, V=V, O=O, g=group, bits=spec.bits)
+    s2 = _scale_2d(scale, x.dtype)
+    kw_args = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
+                   kh=kh, kw=kw, stride=stride, interpret=not on_tpu())
+    if tiles is None:
+        cfg = atn.lookup(key)
+        if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
+                x, s2, tables):
+            cfg = atn.tune(
+                key,
+                atn.conv2d_candidates(Ho, G, V, O, tables.dtype.itemsize),
+                lambda c: _fused_conv2d_bench(x, s2, tables, c, kw_args, Ho),
+            )
+        if cfg is None:
+            cfg = atn.conv2d_candidates(Ho, G, V, O, tables.dtype.itemsize)[0]
+        tiles = (cfg.row_tile, cfg.Gb, cfg.Ob)
+    Hb, Gb, Ob = _fit_conv_tiles(tiles, Ho, G, O)
+    tp, _ = _pad_axis(tables, 2, Ob if O >= 128 else 1)
+    out = pcilt_fused_conv2d_pallas(x, s2, tp, tiles=(Hb, Gb, Ob), **kw_args)
+    return out[..., :O]
+
+
+def _fused_conv2d_bench(x, s2, tables, cfg, kw_args, Ho):
+    G, O = tables.shape[0], tables.shape[-1]
+    Hb, Gb, Ob = _fit_conv_tiles((cfg.row_tile, cfg.Gb, cfg.Ob), Ho, G, O)
+    tp, _ = _pad_axis(tables, 2, Ob if O >= 128 else 1)
+    return lambda: pcilt_fused_conv2d_pallas(
+        x, s2, tp, tiles=(Hb, Gb, Ob), **kw_args
+    ).block_until_ready()

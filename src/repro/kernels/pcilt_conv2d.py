@@ -6,11 +6,18 @@ kernel performs the fetch-and-add over spatial tiles:
 
     out[b, y, x, o] = sum_g tables[g, offsets[b, y, x, g], o]
 
-Blocking: the grid walks (batch, row-tile, table-stage); each step stages a
-``[Gb, V, Ob]`` table slice in VMEM and processes a ``[Hb, Wo]`` strip of the
-image, so the same staged tables are reused across the whole strip — the
-conv-specific win the paper leans on (small filter, large data ⇒ the table is
-read once and hit many times).
+(The *fused* sibling in ``pcilt_fused.py`` skips the host pre-processing
+entirely — raw floats in, offsets only ever in VMEM — and is the faster
+deployment path; this kernel remains for callers that hold pre-packed
+offsets, e.g. generalized ``SegmentPlan`` packings.)
+
+Blocking: the grid walks (batch, row-tile, output-tile, table-stage); each
+step stages a ``[Gb, V, Ob]`` table slice in VMEM and processes a ``[Hb, Wo]``
+strip of the image, so the same staged tables are reused across the whole
+strip — the conv-specific win the paper leans on (small filter, large data ⇒
+the table is read once and hit many times).  Tiling ``(Hb, Gb, Ob)`` comes
+from the caller, which consults the persistent autotune lookup table
+(``autotune.py``); ``None`` falls back to the stage-everything heuristic.
 """
 
 from __future__ import annotations
@@ -25,7 +32,7 @@ __all__ = ["pcilt_conv2d_pallas"]
 
 
 def _kernel(off_ref, tab_ref, out_ref, *, Gb: int, V: int):
-    @pl.when(pl.program_id(2) == 0)
+    @pl.when(pl.program_id(3) == 0)
     def _zero():
         out_ref[...] = jnp.zeros_like(out_ref)
 
@@ -44,33 +51,43 @@ def _kernel(off_ref, tab_ref, out_ref, *, Gb: int, V: int):
     out_ref[...] += acc.reshape(out_ref.shape).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret", "tiles"))
 def pcilt_conv2d_pallas(
     offsets: jax.Array,
     tables: jax.Array,
     row_tile: int = 8,
     interpret: bool = False,
+    tiles=None,
 ) -> jax.Array:
-    """offsets ``[B, Ho, Wo, G]`` int32, tables ``[G, V, O]`` -> ``[B, Ho, Wo, O]``."""
+    """offsets ``[B, Ho, Wo, G]`` int32, tables ``[G, V, O]`` -> ``[B, Ho, Wo, O]``.
+
+    Wo and O are padded to tile multiples by the caller (``ops.py``).
+    ``tiles`` is ``(Hb, Gb, Ob)``; ``None`` picks ``Hb = row_tile``, stages all
+    G tables when they fit ~8 MB, and keeps O unsplit.
+    """
     B, H, W, G = offsets.shape
     G2, V, O = tables.shape
     assert G == G2
-    Hb = min(row_tile, H)
+    if tiles is None:
+        Hb = min(row_tile, H)
+        Gb = G if G * V * O * tables.dtype.itemsize <= 8 * 2**20 else 1
+        Ob = O
+    else:
+        Hb, Gb, Ob = tiles
+        Hb, Ob = min(Hb, H), min(Ob, O)
     while H % Hb:
         Hb -= 1
-    # Stage all G tables when they fit (~8MB), else one group at a time.
-    Gb = G if G * V * O * 4 <= 8 * 2**20 else 1
     while G % Gb:
         Gb -= 1
-    grid = (B, H // Hb, G // Gb)
+    grid = (B, H // Hb, pl.cdiv(O, Ob), G // Gb)
     return pl.pallas_call(
         functools.partial(_kernel, Gb=Gb, V=V),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, Hb, W, Gb), lambda b, i, k: (b, i, 0, k)),
-            pl.BlockSpec((Gb, V, O), lambda b, i, k: (k, 0, 0)),
+            pl.BlockSpec((1, Hb, W, Gb), lambda b, i, j, k: (b, i, 0, k)),
+            pl.BlockSpec((Gb, V, Ob), lambda b, i, j, k: (k, 0, j)),
         ],
-        out_specs=pl.BlockSpec((1, Hb, W, O), lambda b, i, k: (b, i, 0, 0)),
+        out_specs=pl.BlockSpec((1, Hb, W, Ob), lambda b, i, j, k: (b, i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((B, H, W, O), tables.dtype),
         interpret=interpret,
     )(offsets, tables)

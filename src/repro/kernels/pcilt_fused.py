@@ -1,0 +1,224 @@
+"""Fused Pallas TPU kernels: quantize -> offset-pack -> table-fetch in VMEM.
+
+The host-packed pipeline (``pcilt_gemv.py`` / ``pcilt_conv2d.py``) quantizes,
+im2col-packs, and bit-packs offsets *on the host*, materializing a
+``[..., G]`` int32 offset tensor in HBM that the kernel then re-reads — for a
+conv that tensor is ``[B, Ho, Wo, kh*kw*Cin/group]`` and routinely larger than
+the activations themselves.  The kernels here fuse the whole paper pipeline
+(Fig. 6: quantize, shift/mask pack, fetch, adder tree) into one ``pallas_call``
+over the *raw float activations*, so the offsets live only in VMEM/registers:
+
+* **quantize** — ``clip(round(x / scale) + zero_point, 0, K-1)``, bit-exact
+  with ``core.quantization.quantize`` (same round-half-even, same clip);
+* **pack** — little-endian shift-or of ``group`` codes per segment, bit-exact
+  with ``core.offsets.pack_offsets``;
+* **fetch + adder tree** — one *flattened* one-hot contraction per staged
+  table tile: instead of a ``fori_loop`` of ``Gb`` small ``[Bb,V] x [V,Ob]``
+  dots, the one-hot is laid out as ``[Bb, Gb*V]`` (segment-major) and the
+  staged tables reshaped to ``[Gb*V, Ob]``, so the MXU runs a single large
+  contraction per grid step.  The adder tree over group tiles is grid
+  accumulation on the revisited output block.
+
+Tables may be stored **bf16** (pass ``tables.astype(jnp.bfloat16)``): the
+one-hot is built in the table dtype, the contraction *and* the cross-tile
+accumulation run in f32 (f32 ``preferred_element_type`` into an f32 output
+block, cast to the table dtype once at the end), and the staged-tile VMEM
+cost halves — doubling the groups per stage under the same ~8 MB budget
+(``autotune._fit_gb`` is itemsize-aware).
+
+Tiling is supplied by the caller (``ops.py``), which consults the persistent
+autotune lookup table (``autotune.py``) — cache hit ⇒ zero-cost dispatch,
+miss ⇒ the VMEM-budget heuristic, optionally tune-once-and-record.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pcilt_fused_gemv_pallas", "pcilt_fused_conv2d_pallas"]
+
+
+def _quantize(x, scale, *, bits: int, zero_point: int):
+    """In-kernel mirror of ``core.quantization.quantize`` (-> int32 codes)."""
+    q = jnp.round(x / scale) + zero_point
+    return jnp.clip(q, 0, (1 << bits) - 1).astype(jnp.int32)
+
+
+def _pack_flat(codes, *, bits: int, group: int, Gseg: int):
+    """``[R, Gseg*group]`` codes -> ``[R, Gseg]`` little-endian offsets."""
+    R = codes.shape[0]
+    c = codes.reshape(R, Gseg, group)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, group), 2) * bits
+    return jnp.sum(jnp.left_shift(c, shifts), axis=-1)  # [R, Gseg]
+
+
+def _flat_onehot_dot(off, tab, *, V: int):
+    """The flattened fetch: ``off [R, Gb]``, ``tab [Gb, V, Ob]`` -> f32 ``[R, Ob]``.
+
+    ``onehot[r, g*V + v] = (off[r, g] == v)`` — one ``[R, Gb*V] x [Gb*V, Ob]``
+    MXU contraction replaces the per-group loop of small dots.
+    """
+    R, Gb = off.shape
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (R, Gb, V), 2)
+    oh = (off[:, :, None] == lanes).astype(tab.dtype).reshape(R, Gb * V)
+    return jnp.dot(oh, tab.reshape(Gb * V, tab.shape[-1]),
+                   preferred_element_type=jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# Fused GEMV
+# ----------------------------------------------------------------------------
+
+
+def _gemv_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
+                 bits: int, zero_point: int, group: int, Gb: int, V: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = _quantize(x_ref[...], scale_ref[0, 0],
+                      bits=bits, zero_point=zero_point)  # [Bb, Gb*group]
+    off = _pack_flat(codes, bits=bits, group=group, Gseg=Gb)  # [Bb, Gb]
+    # The output block is f32 regardless of table dtype, so the adder tree
+    # over G tiles never rounds through bf16 (caller casts once at the end).
+    out_ref[...] += _flat_onehot_dot(off, tab_ref[...], V=V)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "zero_point", "group", "tiles", "interpret"),
+)
+def pcilt_fused_gemv_pallas(
+    x: jax.Array,
+    scale: jax.Array,
+    tables: jax.Array,
+    *,
+    bits: int,
+    zero_point: int,
+    group: int,
+    tiles,
+    interpret: bool = False,
+) -> jax.Array:
+    """x ``[B, n]`` float, scale ``[1, 1]``, tables ``[G, V, O]`` -> ``[B, O]``.
+
+    ``n == G * group``; B, O are padded to tile multiples by ``ops.py``;
+    ``tiles`` is a ``(Bb, Gb, Ob)`` tuple with ``Gb | G``.
+    """
+    B, n = x.shape
+    G, V, O = tables.shape
+    assert n == G * group, (n, G, group)
+    Bb, Gb, Ob = tiles
+    grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G // Gb)
+    return pl.pallas_call(
+        functools.partial(_gemv_kernel, bits=bits, zero_point=zero_point,
+                          group=group, Gb=Gb, V=V),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bb, Gb * group), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((Gb, V, Ob), lambda i, j, k: (k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((Bb, Ob), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
+        interpret=interpret,
+    )(x, scale, tables).astype(tables.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Fused conv2d
+# ----------------------------------------------------------------------------
+
+
+def _conv_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
+                 bits: int, zero_point: int, group: int,
+                 kh: int, kw: int, stride: int,
+                 Gb: int, V: int, Hb: int, n_pad: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    _, Hp, Wp, C = x_ref.shape
+    Wo = (Wp - kw) // stride + 1
+    strip_h = (Hb - 1) * stride + kh
+    row0 = pl.program_id(1) * (Hb * stride)
+    strip = x_ref[0, pl.ds(row0, strip_h), :, :]  # [strip_h, Wp, C] from VMEM
+    codes = _quantize(strip, scale_ref[0, 0], bits=bits, zero_point=zero_point)
+
+    # In-VMEM im2col over the strip: static kh*kw slice loop (matches the
+    # [kh, kw, C] patch flattening of core.lut_layers.im2col).  The full
+    # patch is rebuilt per (output, group) grid step and sliced — VPU work
+    # that is redundant when Gb < G or Ob < O, but small next to the MXU
+    # contraction; building only the k-th segment's columns is a follow-on.
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(codes[i:i + (Hb - 1) * stride + 1:stride,
+                              j:j + (Wo - 1) * stride + 1:stride, :])
+    patch = jnp.concatenate(cols, axis=-1).reshape(Hb * Wo, kh * kw * C)
+    if n_pad:
+        # Group-alignment slots: the table rows for these slots were built
+        # from zero weights, so any code value contributes exactly zero.
+        patch = jnp.pad(patch, ((0, 0), (0, n_pad)))
+
+    # This grid step's group range: segments [k*Gb, (k+1)*Gb).
+    seg = jax.lax.dynamic_slice(
+        patch, (0, pl.program_id(3) * (Gb * group)), (Hb * Wo, Gb * group))
+    off = _pack_flat(seg, bits=bits, group=group, Gseg=Gb)  # [Hb*Wo, Gb]
+    acc = _flat_onehot_dot(off, tab_ref[...], V=V)  # [Hb*Wo, Ob] f32
+    out_ref[...] += acc.reshape(out_ref.shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "zero_point", "group", "kh", "kw", "stride",
+                     "tiles", "interpret"),
+)
+def pcilt_fused_conv2d_pallas(
+    x: jax.Array,
+    scale: jax.Array,
+    tables: jax.Array,
+    *,
+    bits: int,
+    zero_point: int,
+    group: int,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    tiles=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """x ``[B, Hp, Wp, C]`` float (already spatially padded for the conv),
+    scale ``[1, 1]``, tables ``[G, V, O]`` -> ``[B, Ho, Wo, O]``.
+
+    The whole (small) image is staged in VMEM once per batch element and
+    revisited across row/output/group tiles; each grid step quantizes a row
+    strip, extracts patches, packs offsets, and fetches — the int32 offsets
+    never exist outside VMEM.  ``tiles`` is ``(Hb, Gb, Ob)`` with ``Gb | G``
+    and ``Hb | Ho``; ``G * group >= kh*kw*C`` (zero-weight alignment slots).
+    """
+    B, Hp, Wp, C = x.shape
+    G, V, O = tables.shape
+    n, n_tot = kh * kw * C, G * group
+    assert n_tot >= n, (n_tot, n)
+    Ho = (Hp - kh) // stride + 1
+    Wo = (Wp - kw) // stride + 1
+    Hb, Gb, Ob = tiles
+    grid = (B, Ho // Hb, pl.cdiv(O, Ob), G // Gb)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, bits=bits, zero_point=zero_point,
+                          group=group, kh=kh, kw=kw, stride=stride,
+                          Gb=Gb, V=V, Hb=Hb, n_pad=n_tot - n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, C), lambda b, r, j, k: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, r, j, k: (0, 0)),
+            pl.BlockSpec((Gb, V, Ob), lambda b, r, j, k: (k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, Hb, Wo, Ob), lambda b, r, j, k: (b, r, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, O), jnp.float32),
+        interpret=interpret,
+    )(x, scale, tables).astype(tables.dtype)

@@ -30,11 +30,16 @@ from jax.experimental import pallas as pl
 __all__ = ["pcilt_gemv_pallas", "default_tiles"]
 
 
-def default_tiles(B: int, G: int, V: int, O: int, vmem_budget: int = 8 * 2**20):
-    """Pick (Bb, Gb, Ob) tiles: MXU-aligned where possible, VMEM-bounded."""
+def default_tiles(B: int, G: int, V: int, O: int, vmem_budget: int = 8 * 2**20,
+                  itemsize: int = 4):
+    """Pick (Bb, Gb, Ob) tiles: MXU-aligned where possible, VMEM-bounded.
+
+    ``itemsize`` reflects the table storage dtype — bf16 tables halve it and
+    so double the groups staged per step under the same budget.
+    """
     Ob = min(O, 128)
     Bb = min(B, 128)
-    words = vmem_budget // 4
+    words = vmem_budget // itemsize
     gb_cap = max(1, (words - Bb * V - Bb * Ob) // max(V * Ob, 1))
     Gb = max(1, min(G, gb_cap))
     while G % Gb:  # grid needs an integral number of G tiles
@@ -66,18 +71,25 @@ def _kernel(off_ref, tab_ref, out_ref, *, Gb: int, V: int):
     out_ref[...] += acc.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "tiles"))
 def pcilt_gemv_pallas(
-    offsets: jax.Array, tables: jax.Array, interpret: bool = False
+    offsets: jax.Array, tables: jax.Array, interpret: bool = False, tiles=None
 ) -> jax.Array:
     """offsets ``[B, G]`` int32, tables ``[G, V, O]`` -> ``[B, O]`` float.
 
     B, G, O are padded to tile multiples by the caller (see ``ops.py``).
+    ``tiles`` is an optional ``(Bb, Gb, Ob)`` override — ``ops.py`` passes the
+    winner from the persistent autotune lookup table when one is recorded;
+    ``None`` falls back to the VMEM-budget heuristic.
     """
     B, G = offsets.shape
     G2, V, O = tables.shape
     assert G == G2, (G, G2)
-    Bb, Gb, Ob = default_tiles(B, G, V, O)
+    Bb, Gb, Ob = tiles if tiles is not None else default_tiles(
+        B, G, V, O, itemsize=tables.dtype.itemsize)
+    Bb, Ob = min(Bb, B), min(Ob, O)
+    while G % Gb:
+        Gb -= 1
     grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G // Gb)
     return pl.pallas_call(
         functools.partial(_kernel, Gb=Gb, V=V),

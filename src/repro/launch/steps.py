@@ -136,11 +136,11 @@ def active_matmul_params(cfg) -> int:
     per token; dead padding experts are never routed (excluded exactly by
     scaling the padded tensor count by k/E_pad)."""
     import math
-    from repro.nn.module import ParamSpec
+    from repro.nn.module import ParamSpec, flatten_with_path
 
     model = build_model(cfg)
     specs = model.param_specs()
-    flat, _ = jax.tree.flatten_with_path(
+    flat, _ = flatten_with_path(
         specs, is_leaf=lambda x: isinstance(x, ParamSpec))
     total = 0.0
     for path, spec in flat:

@@ -18,6 +18,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .module import ParamSpec, ShardingRules, logical_to_partition_spec
 
+from repro.compat import shard_map
+
+
+
 __all__ = ["Ctx", "dense_spec", "dense", "embed_spec", "rmsnorm_spec", "rmsnorm",
            "layernorm_spec", "layernorm", "rope", "sinusoidal_positions"]
 
@@ -114,7 +118,7 @@ def row_parallel(ctx: Ctx, x: jax.Array, w: jax.Array, eq: str,
         return jax.lax.psum_scatter(y, "model", scatter_dimension=1,
                                     tiled=True)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=ctx.mesh, in_specs=(x_spec, w_spec),
         out_specs=P(dp, "model", None), check_vma=False,
     )(x, w)

@@ -38,6 +38,7 @@ __all__ = [
     "shardings",
     "shape_structs",
     "materialize",
+    "flatten_with_path",
     "count_params",
     "spec_bytes",
 ]
@@ -170,9 +171,16 @@ def _init_one(spec: ParamSpec, key: jax.Array) -> jax.Array:
     raise ValueError(f"unknown init {spec.init}")
 
 
+def flatten_with_path(tree, is_leaf=None):
+    """``jax.tree.flatten_with_path``, version-tolerant (see ``repro.compat``)."""
+    from repro.compat import tree_flatten_with_path
+
+    return tree_flatten_with_path(tree, is_leaf=is_leaf)
+
+
 def materialize(specs, key: jax.Array):
     """Concrete params; per-leaf keys derived by path so order is stable."""
-    leaves, treedef = jax.tree.flatten_with_path(
+    leaves, treedef = flatten_with_path(
         specs, is_leaf=lambda x: isinstance(x, ParamSpec)
     )
     out = []

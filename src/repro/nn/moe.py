@@ -28,6 +28,10 @@ from jax.sharding import PartitionSpec as P
 from .layers import Ctx, dense
 from .module import ParamSpec
 
+from repro.compat import axis_size, shard_map
+
+
+
 __all__ = ["moe_spec", "moe_apply"]
 
 
@@ -82,7 +86,7 @@ def _moe_body(params, cfg, x_local, model_axis: Optional[str],
     E = m.padded_experts
     tp = 1
     if model_axis is not None:
-        tp = jax.lax.axis_size(model_axis)
+        tp = axis_size(model_axis)
     E_loc = E // tp
     t, d = x_local.shape
 
@@ -191,7 +195,7 @@ def moe_apply(params, cfg, ctx: Ctx, x: jax.Array) -> Tuple[jax.Array, Dict]:
         y, aux = _moe_body(p, cfg, xl.reshape(-1, d), "model", dp_axes, use_a2a)
         return y.reshape(bl, sl, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(wspecs, x_spec),

@@ -1,0 +1,121 @@
+"""Persistent tile-autotune lookup table: miss -> tune-once-and-record,
+hit -> zero-cost dispatch (zero timing runs), across simulated processes."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantSpec, calibrate, build_grouped_tables
+from repro.kernels import autotune as atn
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture
+def tune_cache(tmp_path):
+    """Point the autotuner at a private cache file; restore afterwards."""
+    path = str(tmp_path / "tiles.json")
+    atn.reset_cache(path)
+    atn.TIMING_RUNS = 0
+    yield path
+    atn.TIMING_RUNS = 0
+    atn.reset_cache()
+
+
+def _problem(B=8, n=64, O=256, bits=2, group=2):
+    spec = QuantSpec(bits)
+    x = jnp.asarray(RNG.uniform(0, 3, (B, n)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(n, O)), jnp.float32)
+    s = calibrate(x, spec)
+    T = build_grouped_tables(w, spec, s, group)
+    return x, T, spec, s, group
+
+
+def test_miss_tunes_then_hit_is_free(tune_cache):
+    x, T, spec, s, group = _problem()
+    out1 = ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
+    assert atn.TIMING_RUNS > 0, "cache miss must time candidates"
+    assert os.path.exists(tune_cache)
+    entry = next(iter(json.load(open(tune_cache)).values()))
+    assert entry["candidates"] >= 1 and entry["tiles"]["Gb"] >= 1
+
+    # "Second process": fresh in-memory cache loaded from the same file.
+    atn.reset_cache(tune_cache)
+    atn.TIMING_RUNS = 0
+    out2 = ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
+    assert atn.TIMING_RUNS == 0, "warm cache must perform zero timing runs"
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)
+
+
+def test_round_trip_returns_same_tiles(tune_cache):
+    x, T, spec, s, group = _problem()
+    B, O = x.shape[0], T.shape[-1]
+    G, V = T.shape[0], T.shape[1]
+    key = atn.shape_key("fused_gemv", dtype=T.dtype, backend="cpu",
+                        B=B, G=G, V=V, O=O, g=group, bits=spec.bits)
+    ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
+    first = atn.lookup(key)
+    assert first is not None
+    atn.reset_cache(tune_cache)
+    assert atn.lookup(key) == first
+
+
+def test_lookup_only_dispatch_never_times(tune_cache):
+    """Without autotune=True a miss falls back to the heuristic silently."""
+    x, T, spec, s, group = _problem()
+    ops.pcilt_fused_gemv(x, T, spec, s, group)  # autotune defaults off
+    assert atn.TIMING_RUNS == 0
+    assert not os.path.exists(tune_cache)
+
+
+def test_host_kernels_route_through_cache(tune_cache):
+    """Host-packed gemv/conv2d dispatch also tunes and stays correct."""
+    off = jnp.asarray(RNG.integers(0, 16, (8, 12)), jnp.int32)
+    tab = jnp.asarray(RNG.normal(size=(12, 16, 40)), jnp.float32)
+    got = ops.pcilt_gemv(off, tab, autotune=True)
+    assert atn.TIMING_RUNS > 0
+    np.testing.assert_allclose(got, ref.pcilt_gemv_ref(off, tab),
+                               rtol=1e-5, atol=1e-5)
+    runs_after_gemv = atn.TIMING_RUNS
+    offc = jnp.asarray(RNG.integers(0, 8, (1, 6, 6, 3)), jnp.int32)
+    tabc = jnp.asarray(RNG.normal(size=(3, 8, 20)), jnp.float32)
+    gotc = ops.pcilt_conv2d(offc, tabc, autotune=True)
+    assert atn.TIMING_RUNS > runs_after_gemv
+    np.testing.assert_allclose(gotc, ref.pcilt_conv2d_ref(offc, tabc),
+                               rtol=1e-5, atol=1e-5)
+    # both hits on re-dispatch
+    atn.TIMING_RUNS = 0
+    ops.pcilt_gemv(off, tab, autotune=True)
+    ops.pcilt_conv2d(offc, tabc, autotune=True)
+    assert atn.TIMING_RUNS == 0
+
+
+def test_serving_tune_populates_cache(tune_cache):
+    from repro.core.serving import convert_kernel
+
+    spec = QuantSpec(2)
+    x = jnp.asarray(RNG.uniform(0, 1, (4, 24)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(24, 32)), jnp.float32)
+    lin = convert_kernel(k, spec, calibrate(x, spec), group=2)
+    want = lin(x, path="gather")
+    got = lin.tune(x)
+    assert atn.TIMING_RUNS > 0
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    atn.TIMING_RUNS = 0
+    np.testing.assert_allclose(lin(x, path="fused"), want,
+                               rtol=1e-4, atol=1e-4)
+    assert atn.TIMING_RUNS == 0
+
+
+def test_candidate_generators_valid():
+    for B, G, V, O in [(1, 7, 4, 3), (8, 512, 16, 1024), (128, 24, 256, 384)]:
+        cands = atn.gemv_candidates(B, G, V, O)
+        assert cands and all(G % c.Gb == 0 for c in cands)
+    for Ho, G, V, O in [(5, 9, 16, 12), (28, 100, 16, 350)]:
+        cands = atn.conv2d_candidates(Ho, G, V, O)
+        assert cands and all(G % c.Gb == 0 and Ho % c.row_tile == 0
+                             for c in cands)

@@ -70,6 +70,7 @@ def test_compressed_pmean_int8_and_bf16():
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.optim import compressed_pmean
+    from repro.compat import shard_map
 
     mesh = jax.make_mesh((8,), ("data",))
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 1024))
@@ -78,7 +79,7 @@ def test_compressed_pmean_int8_and_bf16():
         def body(xl):
             r, resid = compressed_pmean(xl[0], "data", scheme)
             return r
-        got = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+        got = jax.jit(shard_map(body, mesh=mesh, in_specs=P("data"),
                                     out_specs=P(), check_vma=False))(x)
         want = x.mean(0)
         err = float(jnp.abs(got - want).max() / (jnp.abs(want).max() + 1e-9))
@@ -90,8 +91,8 @@ def test_compressed_pmean_int8_and_bf16():
         return compressed_pmean(xl[0], "data", "int8")[0]
     def red32(xl):
         return compressed_pmean(xl[0], "data", "none")[0]
-    c8 = jax.jit(jax.shard_map(red8, mesh=mesh, in_specs=P("data"), out_specs=P(), check_vma=False)).lower(x).compile()
-    c32 = jax.jit(jax.shard_map(red32, mesh=mesh, in_specs=P("data"), out_specs=P(), check_vma=False)).lower(x).compile()
+    c8 = jax.jit(shard_map(red8, mesh=mesh, in_specs=P("data"), out_specs=P(), check_vma=False)).lower(x).compile()
+    c32 = jax.jit(shard_map(red32, mesh=mesh, in_specs=P("data"), out_specs=P(), check_vma=False)).lower(x).compile()
     b8 = analyze_hlo(c8.as_text())["collective_bytes"]
     b32 = analyze_hlo(c32.as_text())["collective_bytes"]
     assert b8 < 0.75 * b32, (b8, b32)

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.launch.hlo_analysis import analyze_hlo
+from repro.compat import shard_map
 
 
 def _scan_matmul(L=8, d=128, b=64):
@@ -51,7 +52,7 @@ def test_collectives_weighted_by_trips():
         y, _ = jax.lax.scan(step, xl, None, length=5)
         return y
 
-    f = jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P())
+    f = shard_map(body, mesh=mesh, in_specs=P(), out_specs=P())
     c = jax.jit(f).lower(jnp.zeros((4, 4))).compile()
     a = analyze_hlo(c.as_text())
     # psum of 64B fp32 × 5 trips (single-device AR may be optimized away;

@@ -7,8 +7,18 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels import autotune as atn
 
 RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tune_cache(tmp_path):
+    """Kernel dispatch consults the persistent autotune cache; isolate it so
+    results don't depend on whatever this machine tuned before."""
+    atn.reset_cache(str(tmp_path / "tiles.json"))
+    yield
+    atn.reset_cache()
 
 
 def _mk(shape, dtype=jnp.float32):
@@ -41,6 +51,8 @@ def test_pcilt_gemv_dtypes(dtype):
 
 @pytest.mark.parametrize("B,H,W,G,V,O", [
     (2, 8, 8, 9, 16, 8), (1, 16, 12, 4, 64, 32), (3, 5, 7, 2, 8, 3),
+    # non-128-multiple O exercises the lane padding; odd W the sublane padding
+    (1, 4, 4, 3, 8, 130), (2, 6, 9, 2, 16, 5),
 ])
 def test_pcilt_conv2d_shapes(B, H, W, G, V, O):
     off = jnp.asarray(RNG.integers(0, V, (B, H, W, G)), jnp.int32)
@@ -48,6 +60,18 @@ def test_pcilt_conv2d_shapes(B, H, W, G, V, O):
     np.testing.assert_allclose(
         ops.pcilt_conv2d(off, tab), ref.pcilt_conv2d_ref(off, tab),
         rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pcilt_conv2d_dtypes(dtype):
+    off = jnp.asarray(RNG.integers(0, 16, (2, 6, 6, 4)), jnp.int32)
+    tab = _mk((4, 16, 24), dtype)
+    got = ops.pcilt_conv2d(off, tab)
+    want = ref.pcilt_conv2d_ref(off, tab)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
 
 
 @pytest.mark.parametrize("B,T,C,V", [
@@ -82,3 +106,82 @@ def test_end_to_end_linear_kernel_path():
     a = pcilt_linear(x, T, spec, s, group=4, path="kernel")
     b = pcilt_linear(x, T, spec, s, group=4, path="gather")
     np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# Fused-pipeline parity: path="fused" (and the host-packed path="kernel") must
+# agree with the literal path="gather" semantics across ragged shapes — odd B,
+# non-multiple O, G not divisible by the staged Gb — and both table dtypes.
+# (f32 agrees to reassociation-of-summation tolerance; bf16 to bf16 precision.)
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,n,O,bits,group", [
+    (16, 32, 24, 2, 4),     # baseline
+    (7, 30, 130, 2, 2),     # odd B, non-128-multiple O
+    (3, 36, 257, 2, 3),     # G=12 not divisible by typical Gb splits
+    (1, 16, 5, 4, 1),       # decode-style B=1, tiny O, 4-bit codes
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_gemv_parity(B, n, O, bits, group, dtype):
+    from repro.core import QuantSpec, calibrate, build_grouped_tables, pcilt_linear
+
+    spec = QuantSpec(bits)
+    x = jnp.asarray(RNG.uniform(0, 3, (B, n)), jnp.float32)
+    w = _mk((n, O))
+    s = calibrate(x, spec)
+    T = build_grouped_tables(w, spec, s, group=group).astype(dtype)
+    want = pcilt_linear(x, T, spec, s, group=group, path="gather")
+    tol = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=5e-1)
+    for path in ("fused", "kernel"):
+        got = pcilt_linear(x, T, spec, s, group=group, path=path)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("B,H,W,C,kh,kw,stride,O,bits,group,padding", [
+    (2, 8, 8, 3, 3, 3, 1, 5, 2, 2, "SAME"),     # ragged n=27 -> pad_n
+    (1, 9, 7, 4, 3, 3, 2, 12, 2, 2, "SAME"),    # strided, odd spatial
+    (2, 8, 8, 2, 5, 5, 1, 6, 2, 4, "VALID"),    # 5x5 paper filter
+    (1, 6, 6, 4, 3, 3, 1, 130, 2, 3, "SAME"),   # non-128-multiple O
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_conv2d_parity(B, H, W, C, kh, kw, stride, O, bits, group,
+                             padding, dtype):
+    from repro.core import QuantSpec, calibrate, build_grouped_tables
+    from repro.core.lut_layers import pcilt_conv2d
+
+    spec = QuantSpec(bits)
+    x = jnp.asarray(RNG.uniform(0, 2, (B, H, W, C)), jnp.float32)
+    f = _mk((kh, kw, C, O))
+    s = calibrate(x, spec)
+    n = kh * kw * C
+    wflat = f.reshape(n, O)
+    pad_n = (-n) % group
+    if pad_n:
+        wflat = jnp.concatenate([wflat, jnp.zeros((pad_n, O))], 0)
+    T = build_grouped_tables(wflat, spec, s, group).astype(dtype)
+    want = pcilt_conv2d(x, f, spec, s, group, stride=stride, padding=padding,
+                        path="gather")
+    tol = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=5e-1)
+    for path in ("fused", "kernel"):
+        got = pcilt_conv2d(x, f, spec, s, group, stride=stride,
+                           padding=padding, tables=T, path=path)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol)
+
+
+def test_fused_rejects_segment_plans():
+    from repro.core import QuantSpec, SegmentPlan, calibrate, build_grouped_tables
+    from repro.core import pcilt_linear
+
+    spec = QuantSpec(2)
+    x = jnp.asarray(RNG.uniform(0, 3, (4, 8)), jnp.float32)
+    w = _mk((8, 16))
+    s = calibrate(x, spec)
+    plan = SegmentPlan.contiguous(8, 2)
+    T = build_grouped_tables(w, spec, s, group=2, plan=plan)
+    with pytest.raises(ValueError, match="fused"):
+        pcilt_linear(x, T, spec, s, group=2, plan=plan, path="fused")
