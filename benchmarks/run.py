@@ -13,6 +13,11 @@ Sections:
                once through the persistent tile lookup table first.  Results
                are also written to BENCH_pr1.json at the repo root to seed
                the per-PR perf trajectory.
+  shared.*   — the extension-3 shared-pool fused path
+               (repro.kernels.pcilt_shared) vs the pointer-gather reference
+               and the dense fused path, on weight-clustered layers at the
+               same two regimes, plus the pool-vs-dense table-memory ratio.
+               Results are written to BENCH_pr2.json.
   roofline.* — summary terms per hillclimbed cell (full table:
                ``python -m benchmarks.roofline``).
 """
@@ -174,6 +179,117 @@ def fused_rows(bench_json: str = "BENCH_pr1.json"):
     return rows
 
 
+def shared_rows(bench_json: str = "BENCH_pr2.json"):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (QuantSpec, calibrate, build_shared_grouped_tables,
+                            pcilt_linear)
+    from repro.core.lut_layers import pcilt_conv2d
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    rows = []
+    speedups = {}
+    ratios = {}
+
+    def codebook_weights(n, O, group, X):
+        # Weight-clustered / palettized regime (the ext.-3 precondition):
+        # [group, O] segments drawn from an X-entry codebook.
+        G = n // group
+        cb = rng.normal(size=(X, group, O))
+        return jnp.asarray(cb[rng.integers(0, X, G)].reshape(n, O),
+                           jnp.float32)
+
+    # --- LM decode-GEMV regime over a weight-clustered projection ---------
+    bits, group = 2, 2
+    spec = QuantSpec(bits)
+    B, n, O, X = 8, 1024, 1024, 16
+    x = jnp.asarray(np.abs(rng.normal(size=(B, n))), jnp.float32)
+    w = codebook_weights(n, O, group, X)
+    s = calibrate(x, spec)
+    st = build_shared_grouped_tables(w, spec, s, group)
+    T = st.materialize()  # dense [G, V, O] (for the dense-fused comparison)
+    ops.pcilt_shared_gemv(x, st.pool, st.seg_idx, spec, s, group,
+                          autotune=True)
+    ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
+    ga = jax.jit(lambda x: pcilt_linear(x, st, spec, s, group, path="gather"))
+    sh = jax.jit(lambda x: pcilt_linear(x, st, spec, s, group, path="shared"))
+    fu = jax.jit(lambda x: pcilt_linear(x, T, spec, s, group, path="fused"))
+    for f in (ga, sh, fu):
+        f(x).block_until_ready()
+    t_ga = _timeit(lambda: ga(x).block_until_ready())
+    t_sh = _timeit(lambda: sh(x).block_until_ready())
+    t_fu = _timeit(lambda: fu(x).block_until_ready())
+    speedups["decode_gemv_vs_gather"] = t_ga / t_sh
+    speedups["decode_gemv_vs_dense_fused"] = t_fu / t_sh
+    ratios["decode_gemv_table_mem"] = st.dedup_ratio
+    tag = f"decode_b{bits}g{group}_{n}x{O}_X{st.pool_cardinality}"
+    rows.append((f"shared.{tag}_gather", t_ga, ""))
+    rows.append((f"shared.{tag}_dense_fused", t_fu, ""))
+    rows.append((f"shared.{tag}_fused_shared", t_sh,
+                 f"{t_ga / t_sh:.2f}x vs gather, {t_fu / t_sh:.2f}x vs "
+                 f"dense-fused"))
+    rows.append((f"shared.{tag}_table_mem_ratio", st.dedup_ratio,
+                 f"dense {st.dense_bytes()/2**20:.1f} MiB -> pool "
+                 f"{st.pool_bytes()/2**20:.2f} MiB"))
+
+    # --- the paper's conv regime: 5x5 filter, weight-clustered.  Co=64 (a
+    # realistic channel width) is where the pooled X*V-lane contraction pulls
+    # clear of both the gather and the dense Gb*V-lane fused contraction. ---
+    B, H, W, C, kh, kw, Co, Xc = 2, 14, 14, 8, 5, 5, 64, 8
+    xc = jnp.asarray(np.abs(rng.normal(size=(B, H, W, C))), jnp.float32)
+    nf = kh * kw * C
+    wc = codebook_weights(nf, Co, group, Xc)
+    f = jnp.asarray(np.asarray(wc).reshape(kh, kw, C, Co), jnp.float32)
+    sc = calibrate(xc, spec)
+    stc = build_shared_grouped_tables(wc, spec, sc, group)
+    Tc = stc.materialize()
+    ops.pcilt_shared_conv2d(xc, stc.pool, stc.seg_idx, spec, sc, group,
+                            kh, kw, autotune=True)
+    ops.pcilt_fused_conv2d(xc, Tc, spec, sc, group, kh, kw, autotune=True)
+    gac = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, tables=stc,
+                                         path="gather"))
+    shc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, tables=stc,
+                                         path="shared"))
+    fuc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, tables=Tc,
+                                         path="fused"))
+    for fn in (gac, shc, fuc):
+        fn(xc).block_until_ready()
+    t_gac = _timeit(lambda: gac(xc).block_until_ready())
+    t_shc = _timeit(lambda: shc(xc).block_until_ready())
+    t_fuc = _timeit(lambda: fuc(xc).block_until_ready())
+    speedups["conv5x5_vs_gather"] = t_gac / t_shc
+    speedups["conv5x5_vs_dense_fused"] = t_fuc / t_shc
+    ratios["conv5x5_table_mem"] = stc.dedup_ratio
+    tagc = f"conv5x5_b{bits}g{group}_{C}to{Co}_X{stc.pool_cardinality}"
+    rows.append((f"shared.{tagc}_gather", t_gac, ""))
+    rows.append((f"shared.{tagc}_dense_fused", t_fuc, ""))
+    rows.append((f"shared.{tagc}_fused_shared", t_shc,
+                 f"{t_gac / t_shc:.2f}x vs gather, {t_fuc / t_shc:.2f}x vs "
+                 f"dense-fused"))
+    rows.append((f"shared.{tagc}_table_mem_ratio", stc.dedup_ratio,
+                 f"dense {stc.dense_bytes()/2**10:.0f} KiB -> pool "
+                 f"{stc.pool_bytes()/2**10:.0f} KiB"))
+
+    if bench_json:
+        payload = {
+            "pr": 2,
+            "backend": jax.default_backend(),
+            "timing": "interpret-mode CPU" if jax.default_backend() != "tpu"
+                      else "compiled TPU",
+            "target_min_speedup": 1.0,
+            "speedup": {k: round(v, 3) for k, v in speedups.items()},
+            "table_mem_ratio": {k: round(v, 3) for k, v in ratios.items()},
+            "rows": [
+                {"name": name, "us_per_call": round(us, 2), "derived": derived}
+                for name, us, derived in rows
+            ],
+        }
+        with open(os.path.join(REPO_ROOT, bench_json), "w") as fp:
+            json.dump(payload, fp, indent=1)
+    return rows
+
+
 def roofline_rows():
     import glob
     import json
@@ -203,7 +319,8 @@ def roofline_rows():
 
 def main() -> None:
     print("name,us_per_call,derived")
-    for section in (paper_rows, micro_rows, lm_rows, fused_rows, roofline_rows):
+    for section in (paper_rows, micro_rows, lm_rows, fused_rows, shared_rows,
+                    roofline_rows):
         for name, val, derived in section():
             print(f"{name},{val},{derived}")
 

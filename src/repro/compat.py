@@ -10,7 +10,43 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map", "tree_flatten_with_path", "axis_size"]
+__all__ = ["shard_map", "tree_flatten_with_path", "axis_size", "is_tracer"]
+
+
+_TRACER_TYPES: tuple = ()
+
+
+def _tracer_types() -> tuple:
+    global _TRACER_TYPES
+    if not _TRACER_TYPES:
+        types = []
+        try:  # newer jax: the supported public home
+            from jax.extend import core as _xcore
+
+            t = getattr(_xcore, "Tracer", None)
+            if t is not None:
+                types.append(t)
+        except ImportError:
+            pass
+        t = getattr(getattr(jax, "core", None), "Tracer", None)
+        if t is not None and t not in types:
+            types.append(t)
+        _TRACER_TYPES = tuple(types)
+    return _TRACER_TYPES
+
+
+def is_tracer(x) -> bool:
+    """``isinstance(x, Tracer)`` across jax versions.
+
+    ``jax.core.Tracer`` is deprecated/being removed; newer jax exposes the
+    class under ``jax.extend.core``.  Falls back to an MRO name probe when
+    neither module offers it, so eager-vs-traced dispatch (e.g. the autotune
+    "never time under a jit trace" rule) keeps working across versions.
+    """
+    ts = _tracer_types()
+    if ts:
+        return isinstance(x, ts)
+    return any(c.__name__ == "Tracer" for c in type(x).__mro__)
 
 
 def shard_map(f=None, /, **kwargs):

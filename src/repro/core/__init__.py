@@ -25,9 +25,12 @@ from .pcilt import (
     build_grouped_tables,
     SharedTables,
     build_shared_tables,
+    SharedGroupedTables,
+    build_shared_grouped_tables,
     table_bytes,
     grouped_table_bytes,
     shared_table_bytes,
+    shared_pool_bytes,
     build_cost_multiplies,
 )
 from .lut_layers import (
@@ -36,6 +39,7 @@ from .lut_layers import (
     pcilt_conv2d,
     pcilt_depthwise_conv1d,
     im2col,
+    conv_same_pads,
 )
 from .learnable import (
     init_learnable_pcilt,

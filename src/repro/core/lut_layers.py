@@ -16,6 +16,13 @@ one of three interchangeable paths that produce bit-identical arithmetic:
   float activations, so the int32 offset tensor never touches HBM.  Fastest
   deployment path; requires a per-tensor scale and the default contiguous
   segment plan.
+* ``path="shared"`` — the shared-pool fused pipeline
+  (``repro.kernels.pcilt_shared``) for extension-3 segment-deduped tables:
+  ``tables`` is a ``SharedGroupedTables`` (pool + pointers) and the pointer
+  indirection is resolved inside the kernel, so weight-deduped layers run at
+  fused speed without ever materializing the dense ``[G, V, O]`` tables.
+  A ``SharedGroupedTables`` also executes on ``path="gather"`` (its
+  pointer-gather reference semantics) for parity checking.
 
 Both kernel paths dispatch tile shapes through the persistent autotune lookup
 table (``repro.kernels.autotune``) — recorded winners are used on a cache
@@ -36,7 +43,7 @@ import jax.numpy as jnp
 
 from .quantization import QuantSpec, quantize
 from .offsets import SegmentPlan, pack_offsets
-from .pcilt import build_grouped_tables
+from .pcilt import SharedGroupedTables, build_grouped_tables
 
 __all__ = [
     "lut_lookup",
@@ -44,7 +51,27 @@ __all__ = [
     "pcilt_conv2d",
     "pcilt_depthwise_conv1d",
     "im2col",
+    "conv_same_pads",
 ]
+
+
+def conv_same_pads(h: int, w: int, kh: int, kw: int, stride: int = 1):
+    """XLA-conformant "SAME" pads for NHWC (single source of truth — the
+    fused/shared kernel wrappers in ``repro.kernels.ops`` import this).
+
+    Matches ``lax.conv_general_dilated``: output extent ``ceil(size/stride)``
+    and ``pad_total = (out-1)*stride + k - size`` split low-first as
+    ``pad_total // 2`` — which differs from the naive stride-agnostic
+    ``(k-1)//2`` whenever ``stride > 1`` and the size isn't congruent
+    (e.g. stride 2 on an even extent: the naive split pads one extra low and
+    every window samples shifted positions).
+    """
+    def axis(size: int, k: int):
+        out = -(-size // stride)
+        total = max((out - 1) * stride + k - size, 0)
+        return (total // 2, total - total // 2)
+
+    return ((0, 0), axis(h, kh), axis(w, kw), (0, 0))
 
 
 def lut_lookup(tables: jax.Array, offsets: jax.Array, path: str = "gather") -> jax.Array:
@@ -76,14 +103,35 @@ def lut_lookup(tables: jax.Array, offsets: jax.Array, path: str = "gather") -> j
 
 def pcilt_linear(
     x: jax.Array,
-    tables: jax.Array,
+    tables,
     spec: QuantSpec,
     scale,
     group: int,
     plan: Optional[SegmentPlan] = None,
     path: str = "gather",
 ) -> jax.Array:
-    """Quantize -> pack offsets -> fetch -> sum.   ``x: [..., n] -> [..., out]``."""
+    """Quantize -> pack offsets -> fetch -> sum.   ``x: [..., n] -> [..., out]``.
+
+    ``tables`` is either the dense grouped ``[G, V, out]`` array or a
+    ``SharedGroupedTables`` pool (required for ``path="shared"``; also
+    accepted on ``path="gather"`` for the pointer-gather reference).
+    """
+    shared = tables if isinstance(tables, SharedGroupedTables) else None
+    if path == "shared":
+        if shared is None:
+            raise ValueError(
+                "path='shared' executes a SharedGroupedTables pool; build one "
+                "with build_shared_grouped_tables (got dense tables)")
+        if plan is not None:
+            raise ValueError(
+                "path='shared' packs contiguous segments in-kernel; "
+                "generalized SegmentPlans need a host-packed path")
+        from repro.kernels import ops  # local import: kernels are optional
+
+        flat = x.reshape(-1, x.shape[-1])
+        out = ops.pcilt_shared_gemv(flat, shared.pool, shared.seg_idx, spec,
+                                    scale, shared.group)
+        return out.reshape(*x.shape[:-1], shared.pool.shape[-1])
     if path == "fused":
         if plan is not None:
             raise ValueError(
@@ -91,6 +139,11 @@ def pcilt_linear(
                 "generalized SegmentPlans need a host-packed path")
         from repro.kernels import ops  # local import: kernels are optional
 
+        if shared is not None:
+            raise ValueError(
+                "path='fused' consumes dense [G, V, O] tables; use "
+                "path='shared' for a SharedGroupedTables pool (or "
+                "materialize() it explicitly)")
         G, _, O = tables.shape
         flat = x.reshape(-1, x.shape[-1])
         out = ops.pcilt_fused_gemv(flat, tables, spec, scale, group)
@@ -100,17 +153,28 @@ def pcilt_linear(
         offsets = pack_offsets(codes, spec.bits, group)
     else:
         offsets = plan.pack(codes, spec.bits)
+    if shared is not None:
+        if path != "gather":
+            raise ValueError(
+                f"SharedGroupedTables executes path='shared' or 'gather', "
+                f"not {path!r}")
+        return shared.lookup(offsets)
     return lut_lookup(tables, offsets, path=path)
 
 
 def im2col(
     x: jax.Array, kh: int, kw: int, stride: int = 1, padding: str = "SAME"
 ) -> jax.Array:
-    """NHWC ``[B,H,W,C] -> [B,Ho,Wo,kh*kw*C]`` patch extraction."""
+    """NHWC ``[B,H,W,C] -> [B,Ho,Wo,kh*kw*C]`` patch extraction.
+
+    "SAME" padding follows the XLA/``lax.conv_general_dilated`` convention:
+    output extent ``ceil(size/stride)`` with ``pad_total`` split low-first as
+    ``pad_total // 2`` — stride-aware, unlike the naive ``(k-1)//2``, which
+    samples shifted windows at stride > 1 on non-congruent sizes.
+    """
     pads = ((0, 0),) * 4
     if padding == "SAME":
-        ph, pw = (kh - 1) // 2, (kw - 1) // 2
-        pads = ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0))
+        pads = conv_same_pads(x.shape[1], x.shape[2], kh, kw, stride)
     xp = jnp.pad(x, pads)
     B, H, W, C = xp.shape
     Ho = (H - kh) // stride + 1
@@ -140,14 +204,16 @@ def pcilt_conv2d(
     group: int,
     stride: int = 1,
     padding: str = "SAME",
-    tables: Optional[jax.Array] = None,
+    tables=None,
     path: str = "gather",
 ) -> jax.Array:
     """PCILT convolution, NHWC ``[B,H,W,Cin] -> [B,Ho,Wo,Cout]``.
 
     filters: ``[kh, kw, Cin, Cout]``.  Tables may be passed pre-built (the
     normal deployment: built once, reused for the network lifetime); when
-    omitted they are built on the fly (tests / calibration).
+    omitted they are built on the fly (tests / calibration) — as a
+    segment-deduped ``SharedGroupedTables`` pool for ``path="shared"``,
+    dense grouped tables otherwise.
     """
     kh, kw, cin, cout = filters.shape
     n = kh * kw * cin
@@ -156,7 +222,23 @@ def pcilt_conv2d(
     if pad_n:
         wflat = jnp.concatenate([wflat, jnp.zeros((pad_n, cout), wflat.dtype)], 0)
     if tables is None:
-        tables = build_grouped_tables(wflat, spec, scale, group)
+        if path == "shared":
+            from .pcilt import build_shared_grouped_tables
+
+            tables = build_shared_grouped_tables(wflat, spec, scale, group)
+        else:
+            tables = build_grouped_tables(wflat, spec, scale, group)
+    if path == "shared":
+        if not isinstance(tables, SharedGroupedTables):
+            raise ValueError(
+                "path='shared' executes a SharedGroupedTables pool; build one "
+                "with build_shared_grouped_tables (got dense tables)")
+        from repro.kernels import ops  # local import: kernels are optional
+
+        return ops.pcilt_shared_conv2d(
+            x, tables.pool, tables.seg_idx, spec, scale, tables.group,
+            kh, kw, stride=stride, padding=padding
+        )
     if path == "fused":
         from repro.kernels import ops  # local import: kernels are optional
 

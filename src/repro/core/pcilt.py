@@ -13,6 +13,15 @@ paper's flavors:
 * **shared tables** — tables dedupe to the weight's *actual* cardinality;
   layers keep integer pointers into a shared pool (extension 3), with an
   optional second indirection level onto unique table *values*;
+* **shared grouped tables** — extension 3 applied at *segment* granularity:
+  the grouped ``[G, V, out]`` tables dedupe to a ``pool[X, V, out]`` of the
+  ``X`` unique segment tables plus a ``seg_idx[G]`` int32 pointer vector
+  (``SharedGroupedTables``).  Two segments share a pool row iff their
+  ``[group, out]`` weight blocks are identical — the regime weight
+  clustering / palettization / low weight cardinality produces, where
+  ``X << G`` and table memory shrinks by ``G/X``.  This is the
+  representation the shared-pool fused kernel
+  (``repro.kernels.pcilt_shared``) consumes directly from VMEM;
 * **custom convolutional functions** — ``f`` need not be multiplication
   (extension 2); any ``f(w, a_val)`` builds at the same cost and executes at
   zero extra inference cost.
@@ -42,9 +51,12 @@ __all__ = [
     "build_grouped_tables",
     "SharedTables",
     "build_shared_tables",
+    "SharedGroupedTables",
+    "build_shared_grouped_tables",
     "table_bytes",
     "grouped_table_bytes",
     "shared_table_bytes",
+    "shared_pool_bytes",
     "build_cost_multiplies",
 ]
 
@@ -209,6 +221,120 @@ def build_shared_tables(
 
 
 # ----------------------------------------------------------------------------
+# Shared grouped tables (extension 3 at segment granularity)
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SharedGroupedTables:
+    """Segment-deduped grouped PCILT pool (extension 3 over extension 1).
+
+    ``pool[x, v, o]`` holds the ``X`` *unique* segment tables; ``seg_idx[g]``
+    points segment ``g`` at its pool row, so the dense grouped tables are
+    recoverable as ``pool[seg_idx]`` — "keep only one PCILT for given
+    algorithm base value(s) and replace the others with pointers to it",
+    applied to whole ``[group, out]`` weight segments instead of scalar
+    weights.  Table memory scales with the weights' actual segment
+    cardinality ``X``, not the nominal segment count ``G``.
+    """
+
+    pool: jax.Array  # [X, V, out] unique segment tables
+    seg_idx: jax.Array  # [G] int32 pointers into pool rows
+    group: int  # codes packed per offset (V == K**group)
+
+    @property
+    def n_segments(self) -> int:
+        return int(self.seg_idx.shape[0])
+
+    @property
+    def pool_cardinality(self) -> int:
+        return int(self.pool.shape[0])
+
+    def materialize(self) -> jax.Array:
+        """Expand pointers back into dense grouped tables ``[G, V, out]``.
+
+        Exists for parity testing and for callers that insist on the dense
+        fused path — the shared-pool kernel never calls it.
+        """
+        return jnp.take(self.pool, self.seg_idx, axis=0)
+
+    def lookup(self, offsets: jax.Array) -> jax.Array:
+        """Gather path: offsets ``[..., G]`` -> ``[..., out]`` without ever
+        materializing the dense tables (double advanced-index on the pool)."""
+        partial = self.pool[self.seg_idx, offsets.astype(jnp.int32)]
+        return jnp.sum(partial, axis=-2)
+
+    def pool_bytes(self, value_bytes: Optional[int] = None) -> int:
+        """Ext.-3 memory: unique segment tables plus the pointer vector."""
+        X, V, out = self.pool.shape
+        vb = value_bytes if value_bytes is not None else self.pool.dtype.itemsize
+        # The pool is exactly ext.-3 accounting with one packed-offset "act
+        # bits" entry of log2(V), each table cell holding an out-vector.
+        return (shared_table_bytes(X, [(V - 1).bit_length()], out * vb)
+                + self.n_segments * self.seg_idx.dtype.itemsize)
+
+    def dense_bytes(self, value_bytes: Optional[int] = None) -> int:
+        """What the equivalent dense ``[G, V, out]`` tables would occupy."""
+        _, V, out = self.pool.shape
+        vb = value_bytes if value_bytes is not None else self.pool.dtype.itemsize
+        return self.n_segments * V * out * vb
+
+    @property
+    def dedup_ratio(self) -> float:
+        """Dense-to-pool table-memory ratio (≈ ``G / X`` for large tables)."""
+        return self.dense_bytes() / max(self.pool_bytes(), 1)
+
+
+def build_shared_grouped_tables(
+    w: jax.Array,
+    spec: QuantSpec,
+    scale,
+    group: int,
+    plan: Optional[SegmentPlan] = None,
+    fn: Callable = mul_fn,
+    dtype=jnp.float32,
+    build_chunk: int = 4096,
+) -> SharedGroupedTables:
+    """Segment-level extension-3 dedup over the grouped-table build.
+
+    w: ``[n, out]`` reduction-major weights.  Segments follow ``plan``
+    (default contiguous); segments whose ``[group, out]`` weight blocks are
+    bit-identical share one pool row.  Only the ``X`` unique segment tables
+    are ever built — the build cost, like the memory, scales with the actual
+    segment cardinality.  Must run outside jit (``np.unique`` on concrete
+    weights; table construction is the paper's offline once-per-lifetime
+    step).
+    """
+    n, out = w.shape
+    if plan is None:
+        plan = SegmentPlan.contiguous(n, group)
+    w_seg = np.asarray(plan.gather_weights(jnp.asarray(w)))  # [G, g, out]
+    G = w_seg.shape[0]
+    uniq, inv = np.unique(w_seg.reshape(G, -1), axis=0, return_inverse=True)
+    X = uniq.shape[0]
+    uw = jnp.asarray(uniq.reshape(X, plan.group, out), dtype)
+    grid = offset_grid(spec.bits, plan.group)  # [V, g] codes
+    vals = code_values(spec, scale, dtype)[grid]  # [V, g] values
+    V = vals.shape[0]
+
+    if fn is mul_fn:
+        pool = jnp.einsum("vj,xjo->xvo", vals, uw)
+    else:
+        def chunk_tables(vchunk):  # [C, g] -> [X, C, out]
+            contrib = fn(uw[:, None, :, :], vchunk[None, :, :, None])
+            return jnp.sum(contrib, axis=2)
+
+        pool = jnp.concatenate(
+            [chunk_tables(vals[i:i + build_chunk])
+             for i in range(0, V, build_chunk)], axis=1)
+    return SharedGroupedTables(
+        pool=pool,
+        seg_idx=jnp.asarray(inv.reshape(-1), jnp.int32),
+        group=plan.group,
+    )
+
+
+# ----------------------------------------------------------------------------
 # Memory & build-cost accounting (drives benchmarks/paper_claims.py)
 # ----------------------------------------------------------------------------
 
@@ -239,6 +365,19 @@ def shared_table_bytes(
     if nested:
         return actual_cardinality * (1 << max(act_bits_list)) * value_bytes
     return actual_cardinality * sum(1 << b for b in act_bits_list) * value_bytes
+
+
+def shared_pool_bytes(pool_cardinality: int, act_bits: int, group: int,
+                      out: int, value_bytes: int,
+                      n_segments: int = 0, ptr_bytes: int = 4) -> int:
+    """Segment-level extension-3 memory: ``X`` unique ``[K**group, out]``
+    segment tables (plus the ``[G]`` pointer vector when ``n_segments`` is
+    given) — the pool the shared fused kernel stages.  Delegates to
+    :func:`shared_table_bytes` with the packed-offset width as the single
+    "act bits" entry."""
+    return (shared_table_bytes(pool_cardinality, [act_bits * group],
+                               out * value_bytes)
+            + n_segments * ptr_bytes)
 
 
 def build_cost_multiplies(n_weights: int, act_bits: int) -> int:

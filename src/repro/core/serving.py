@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from .quantization import QuantSpec, calibrate, quantize, dequantize
-from .pcilt import build_grouped_tables
+from .pcilt import (SharedGroupedTables, build_grouped_tables,
+                    build_shared_grouped_tables)
 from .lut_layers import pcilt_linear
 
 __all__ = ["PCILTLinear", "convert_kernel", "pcilt_apply", "mlp_table_bytes"]
@@ -32,48 +33,99 @@ class PCILTLinear:
     """A converted projection: grouped tables + activation quantizer.
 
     ``path="fused"`` executes the whole quantize→pack→fetch pipeline in one
-    Pallas call (``repro.kernels.pcilt_fused``); both kernel paths dispatch
-    tile shapes through the persistent autotune lookup table.  Call
-    :meth:`tune` once per decode shape at serving warmup to populate it —
-    every later dispatch (this process or the next) is a pure cache hit.
+    Pallas call (``repro.kernels.pcilt_fused``); ``path="shared"`` does the
+    same over an extension-3 segment-deduped pool (``repro.kernels.
+    pcilt_shared``) — the configuration that keeps table memory feasible for
+    real LM projections.  All kernel paths dispatch tile shapes through the
+    persistent autotune lookup table.  Call :meth:`tune` once per decode
+    shape at serving warmup to populate it — every later dispatch (this
+    process or the next) is a pure cache hit.
+
+    Exactly one table representation needs to exist: dense ``tables``
+    (``[G, V, O]``) and/or a ``shared`` pool.  A shared-only instance (the
+    memory-feasible deployment) executes ``path="gather"`` and
+    ``path="shared"``; dense-only instances execute everything else.
     """
 
-    def __init__(self, tables: jax.Array, spec: QuantSpec, scale: jax.Array,
-                 group: int):
+    def __init__(self, tables: Optional[jax.Array], spec: QuantSpec,
+                 scale: jax.Array, group: int,
+                 shared: Optional[SharedGroupedTables] = None):
+        if tables is None and shared is None:
+            raise ValueError("PCILTLinear needs dense tables, a shared pool, "
+                             "or both")
         self.tables = tables
         self.spec = spec
         self.scale = scale
         self.group = group
+        self.shared = shared
+
+    @property
+    def n_segments(self) -> int:
+        if self.tables is not None:
+            return self.tables.shape[0]
+        return self.shared.n_segments
+
+    def table_bytes(self) -> int:
+        """Bytes of the representation this layer would deploy (the shared
+        pool when present — the paper's ext.-3 memory argument)."""
+        if self.shared is not None:
+            return self.shared.pool_bytes()
+        return self.tables.size * self.tables.dtype.itemsize
 
     def _pad_x(self, x: jax.Array) -> jax.Array:
-        n = self.tables.shape[0] * self.group
+        n = self.n_segments * self.group
         pad = n - x.shape[-1]
         if pad:
             x = jnp.concatenate([x, jnp.zeros((*x.shape[:-1], pad), x.dtype)], -1)
         return x
 
+    def _tables_for(self, path: str):
+        if path == "shared" or (self.tables is None and path == "gather"):
+            if self.shared is None:
+                raise ValueError(
+                    "no shared pool on this layer; convert with shared=True")
+            return self.shared
+        if self.tables is None:
+            raise ValueError(
+                f"shared-only PCILTLinear executes path='shared' or 'gather', "
+                f"not {path!r}")
+        return self.tables
+
     def __call__(self, x: jax.Array, path: str = "gather") -> jax.Array:
-        return pcilt_linear(self._pad_x(x), self.tables, self.spec, self.scale,
-                            self.group, path=path)
+        return pcilt_linear(self._pad_x(x), self._tables_for(path), self.spec,
+                            self.scale, self.group, path=path)
 
     def tune(self, x: jax.Array) -> jax.Array:
         """Eagerly autotune the fused kernel for this decode shape and record
-        the winner in the persistent lookup table; returns the output."""
+        the winner in the persistent lookup table; returns the output.
+        Shared-only layers tune the shared-pool kernel."""
         from repro.kernels import ops  # local import: kernels are optional
 
         x = self._pad_x(x)
         flat = x.reshape(-1, x.shape[-1])
-        out = ops.pcilt_fused_gemv(flat, self.tables, self.spec, self.scale,
-                                   self.group, autotune=True)
+        if self.tables is None:
+            out = ops.pcilt_shared_gemv(
+                flat, self.shared.pool, self.shared.seg_idx, self.spec,
+                self.scale, self.group, autotune=True)
+        else:
+            out = ops.pcilt_fused_gemv(flat, self.tables, self.spec,
+                                       self.scale, self.group, autotune=True)
         return out.reshape(*x.shape[:-1], out.shape[-1])
 
 
 def convert_kernel(kernel: jax.Array, act_spec: QuantSpec, act_scale,
-                   group: int, weight_bits: Optional[int] = None) -> PCILTLinear:
+                   group: int, weight_bits: Optional[int] = None,
+                   shared: bool = False) -> PCILTLinear:
     """Offline build for one [d_in, d_out] kernel.
 
     weight_bits: optionally quantize weights first (lowers table value
-    diversity, the precondition for shared-PCILT dedup, ext. 3)."""
+    diversity, the precondition for shared-PCILT dedup, ext. 3).
+    shared: build the extension-3 segment-deduped pool *instead of* the dense
+    tables — the layer then executes ``path="shared"`` (fused kernel) and
+    ``path="gather"`` (pointer-gather reference), and its table memory scales
+    with the weights' actual segment cardinality.  Usually combined with
+    ``weight_bits`` (or otherwise weight-clustered kernels): dedup only bites
+    when whole ``[group, d_out]`` segments repeat."""
     k = kernel.astype(jnp.float32)
     if kernel.ndim > 2:
         k = k.reshape(kernel.shape[0], -1)
@@ -85,6 +137,9 @@ def convert_kernel(kernel: jax.Array, act_spec: QuantSpec, act_scale,
     pad = (-n) % group
     if pad:
         k = jnp.concatenate([k, jnp.zeros((pad, out), k.dtype)], 0)
+    if shared:
+        pool = build_shared_grouped_tables(k, act_spec, act_scale, group)
+        return PCILTLinear(None, act_spec, act_scale, group, shared=pool)
     tables = build_grouped_tables(k, act_spec, act_scale, group)
     return PCILTLinear(tables, act_spec, act_scale, group)
 

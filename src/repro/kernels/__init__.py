@@ -13,6 +13,14 @@ Two pipelines implement the paper's fetch-and-add inner loop:
   contraction per staged table tile.  The int32 offset tensor — for convs
   often larger than the activations — never touches HBM.  Tables may be
   stored bf16 to double the groups staged per ~8 MB VMEM budget.
+* **shared-pool fused** (``pcilt_shared.py``): the fused pipeline over the
+  extension-3 segment-deduped representation — a ``[X, V, O]`` pool of
+  unique segment tables plus a ``[G]`` int32 pointer vector
+  (``core.pcilt.SharedGroupedTables``).  The pointer indirection is resolved
+  in-kernel by a one-hot pointer-select matmul on the staged pool, so
+  weight-deduped layers fetch at fused speed and the dense ``[G, V, O]``
+  tables never exist in HBM; staged bytes scale with the actual segment
+  cardinality ``X``, not ``G``.
 
 Dispatch (``ops.py``) routes both pipelines through a **persistent tile
 autotuner** (``autotune.py``): per-shape winning tilings live in a JSON

@@ -9,17 +9,30 @@ shape key is a pure dict hit — zero timing runs, zero extra compiles.
 Cache format (JSON, one object per shape key)::
 
     {
-      "fused_gemv|B=8,G=512,V=16,O=1024,dtype=float32|backend=cpu": {
+      "fused_gemv|B=8,G=512,V=16,O=1024,bits=2,g=2,dtype=float32|backend=cpu": {
         "tiles": {"Bb": 8, "Gb": 512, "Ob": 128, "row_tile": 8},
-        "us": 812.4,          # winning candidate's measured microseconds
+        "us": 812.4,          # winning candidate's measured microseconds,
+                              # or null when every candidate failed to run
+                              # (the heuristic fallback was recorded untimed)
         "candidates": 4       # how many tilings were timed at record time
       },
+      "shared_gemv|B=8,G=512,O=1024,V=16,X=16,bits=2,g=2,...": {...},
       ...
     }
 
+Shape-key dimensions are kernel-specific; the shared-pool kernels
+(``shared_gemv`` / ``shared_conv2d``) add ``X``, the pool cardinality (number
+of deduped segment tables), because the staged-pool VMEM footprint — and so
+the winning tiling — scales with ``X`` rather than ``G``.  ``us`` is strict
+JSON: ``null``, never a bare ``NaN`` token (which ``jq`` and strict parsers
+reject); ``TileCache`` both writes and tolerates it.
+
 The cache file lives at ``$REPRO_PCILT_TUNE_CACHE`` (tests point this at a
 tmpdir) or ``~/.cache/repro-pcilt/tiles.json`` by default, and is written
-atomically (tmp + rename) so concurrent processes can share it.
+atomically (tmp + rename) so concurrent processes can share it.  On save, a
+process merges the freshest on-disk state with **only the keys it recorded
+itself** — last writer wins per key, and a writer can never clobber another
+process's newer entry for a key it merely loaded at startup.
 
 Policy:
 
@@ -39,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence
@@ -53,6 +67,8 @@ __all__ = [
     "tune",
     "gemv_candidates",
     "conv2d_candidates",
+    "shared_gemv_candidates",
+    "shared_conv2d_candidates",
     "autotune_enabled",
     "TIMING_RUNS",
 ]
@@ -109,6 +125,9 @@ class TileCache:
     def __init__(self, path: Optional[str] = None):
         self.path = path or os.environ.get("REPRO_PCILT_TUNE_CACHE") or _DEFAULT_CACHE
         self._entries: Dict[str, dict] = {}
+        #: keys recorded by *this process* — the only keys a save may overwrite
+        #: on disk (the "last writer wins per key only" contract).
+        self._dirty: set = set()
         self._load()
 
     def _load(self) -> None:
@@ -122,17 +141,33 @@ class TileCache:
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
-        # Merge entries recorded by other processes since our load, so
-        # concurrent tuners lose no updates (last writer wins per key only).
+        # Start from the freshest on-disk state and overlay only the keys this
+        # process actually recorded.  Overlaying the whole in-memory dict would
+        # clobber entries a concurrent tuner wrote after our startup load with
+        # our stale copies of them.
         try:
             with open(self.path) as f:
                 on_disk = json.load(f)
         except (OSError, ValueError):
             on_disk = {}
-        self._entries = {**on_disk, **self._entries}
+        merged = dict(on_disk)
+        merged.update({k: self._entries[k] for k in self._dirty
+                       if k in self._entries})
+        for e in merged.values():
+            # Legacy cache files may carry bare-NaN timings (json.load accepts
+            # them); sanitize on the way out or allow_nan=False below would
+            # crash every later record() — dispatch must never crash on a
+            # malformed cache.
+            if isinstance(e, dict) and isinstance(e.get("us"), float) \
+                    and not math.isfinite(e["us"]):
+                e["us"] = None
+        self._entries = merged
         tmp = f"{self.path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
-            json.dump(self._entries, f, indent=1, sort_keys=True)
+            # allow_nan=False: a bare NaN token is not valid JSON and breaks
+            # strict parsers / jq on the shared cache file.
+            json.dump(self._entries, f, indent=1, sort_keys=True,
+                      allow_nan=False)
         os.replace(tmp, self.path)
 
     def lookup(self, key: str) -> Optional[TileConfig]:
@@ -146,10 +181,14 @@ class TileCache:
             # the heuristic, never crash dispatch.
             return None
 
-    def record(self, key: str, tiles: TileConfig, us: float, candidates: int) -> None:
+    def record(self, key: str, tiles: TileConfig, us: Optional[float],
+               candidates: int) -> None:
+        if us is not None and not math.isfinite(us):
+            us = None  # "untimed fallback" is null in the JSON, never NaN/Inf
         self._entries[key] = {
             "tiles": tiles.to_json(), "us": us, "candidates": candidates,
         }
+        self._dirty.add(key)
         self._save()
 
 
@@ -217,7 +256,8 @@ def tune(
         if us < best_us:
             best, best_us = cfg, us
     if best is None:  # nothing ran; fall back to the first heuristic candidate
-        best, best_us = candidates[0], float("nan")
+        # Recorded with us=null (valid JSON) — "untimed", not a bare NaN token.
+        best, best_us = candidates[0], None
     cache.record(key, best, best_us, tried)
     return best
 
@@ -307,3 +347,48 @@ def conv2d_candidates(Ho: int, G: int, V: int, O: int, itemsize: int = 4
         add(rt, Gb, Ob0)
         add(rt, max(1, Gb // 4), Ob0)
     return out[:6]
+
+
+def _div_down(x: int, cap: int) -> int:
+    """Largest divisor of ``x`` that is ``<= cap`` (and ``>= 1``)."""
+    d = max(1, min(x, cap))
+    while x % d:
+        d -= 1
+    return d
+
+
+def shared_gemv_candidates(B: int, G: int, V: int, O: int, X: int,
+                           itemsize: int = 4) -> List[TileConfig]:
+    """Tilings for the shared-pool GEMV (``kernels/pcilt_shared.py``).
+
+    The staged table operand is the deduped ``[X, V, Ob]`` pool — its VMEM
+    footprint is *independent of Gb*, so unlike the dense kernels ``Gb`` only
+    trades one-hot scratch / MXU contraction size against grid steps.  The
+    dense sweep stays valid (its budget is just conservative), and "stage
+    every group" is forced into the candidate set: the pool side always fits,
+    and when the ``[Bb, Gb, V]`` one-hot scratch oversubscribes VMEM the
+    candidate is compile-rejected on TPU and skipped by ``tune`` (on CPU
+    interpret, where grid-step overhead dominates, it usually wins).
+    """
+    out = list(gemv_candidates(B, G, V, O, itemsize))
+    Bb = min(128, _round_up(max(B, 1), 8))
+    O_full = _round_up(O, 128) if O >= 128 else O
+    for cand in (TileConfig(Bb=Bb, Gb=G, Ob=min(128, O_full)),
+                 TileConfig(Bb=Bb, Gb=G, Ob=O_full)):
+        if cand not in out:
+            out.append(cand)
+    return out[:7]
+
+
+def shared_conv2d_candidates(Ho: int, G: int, V: int, O: int, X: int,
+                             itemsize: int = 4) -> List[TileConfig]:
+    """Shared-pool conv2d tilings: the dense sweep plus the always-feasible
+    "stage every group per row strip" configuration (see
+    :func:`shared_gemv_candidates` for why ``Gb`` is unconstrained by VMEM)."""
+    out = list(conv2d_candidates(Ho, G, V, O, itemsize))
+    O_full = _round_up(O, 128) if O >= 128 else O
+    for rt in (_div_down(Ho, 8), Ho):
+        cand = TileConfig(Bb=1, Gb=G, Ob=min(128, O_full), row_tile=rt)
+        if cand not in out:
+            out.append(cand)
+    return out[:7]

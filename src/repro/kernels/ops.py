@@ -14,13 +14,19 @@ lookup table** (``autotune.py``, Inductor-style):
   candidate tilings are timed once and the winner recorded for every later
   process.
 
-Two pipelines are exposed per op:
+Three pipelines are exposed per op:
 
 * **host-packed** (``pcilt_gemv`` / ``pcilt_conv2d`` / ``pcilt_dwconv1d``):
   caller quantizes + packs offsets on the host; kernels fetch-and-add.
 * **fused** (``pcilt_fused_gemv`` / ``pcilt_fused_conv2d``): raw float
   activations in; quantize → pack → fetch → adder-tree run entirely in VMEM
   (see ``pcilt_fused.py``), so the int32 offset tensor never touches HBM.
+* **shared-pool fused** (``pcilt_shared_gemv`` / ``pcilt_shared_conv2d``):
+  the extension-3 weight-deduped configuration — a ``[X, V, O]`` pool of
+  unique segment tables plus ``[G]`` int pointers — executed at fused speed;
+  the pointer indirection is resolved inside the kernel
+  (``pcilt_shared.py``) and the dense ``[G, V, O]`` tables are never
+  materialized in HBM.  Shape keys carry the pool cardinality ``X``.
 """
 
 from __future__ import annotations
@@ -30,11 +36,18 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+# Single source of truth for the XLA-conformant stride-aware "SAME" split —
+# the host im2col and the fused/shared kernel wrappers must pad identically.
+from repro.core.lut_layers import conv_same_pads as _conv_same_pads
+
 from . import autotune as atn
 from .pcilt_gemv import pcilt_gemv_pallas, default_tiles
 from .pcilt_conv2d import pcilt_conv2d_pallas
 from .pcilt_dwconv1d import pcilt_dwconv1d_pallas
 from .pcilt_fused import pcilt_fused_gemv_pallas, pcilt_fused_conv2d_pallas
+from .pcilt_shared import (pcilt_shared_gemv_pallas,
+                           pcilt_shared_conv2d_pallas)
 
 __all__ = [
     "pcilt_gemv",
@@ -42,6 +55,8 @@ __all__ = [
     "pcilt_dwconv1d",
     "pcilt_fused_gemv",
     "pcilt_fused_conv2d",
+    "pcilt_shared_gemv",
+    "pcilt_shared_conv2d",
     "on_tpu",
 ]
 
@@ -51,7 +66,7 @@ def on_tpu() -> bool:
 
 
 def _is_concrete(*xs) -> bool:
-    return not any(isinstance(x, jax.core.Tracer) for x in xs)
+    return not any(compat.is_tracer(x) for x in xs)
 
 
 _round_up = atn._round_up
@@ -171,6 +186,11 @@ def pcilt_conv2d(
             )
         if cfg is not None:
             tiles = (cfg.row_tile, cfg.Gb, cfg.Ob)
+    if tiles is not None:
+        # Same clamp the fused path applies: a hand-edited or cross-version
+        # cache entry with Gb ∤ G (or oversized Hb/Ob) must never reach the
+        # kernel unclamped.
+        tiles = _fit_conv_tiles(tiles, Ho, G, O)
     # Padded-Wo offsets index table row 0; the fetched garbage is sliced off.
     offsets, _ = _pad_axis(offsets, 2, 8 if Wo >= 8 else 1)
     tables, _ = _pad_axis(
@@ -259,9 +279,6 @@ def _fused_gemv_bench(x, s2, tables, cfg, kw):
     ).block_until_ready()
 
 
-def _conv_same_pads(kh: int, kw: int):
-    ph, pw = (kh - 1) // 2, (kw - 1) // 2
-    return ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0))
 
 
 def pcilt_fused_conv2d(
@@ -287,7 +304,7 @@ def pcilt_fused_conv2d(
     zero weights, as ``core.lut_layers.pcilt_conv2d`` does).
     """
     if padding == "SAME":
-        x = jnp.pad(x, _conv_same_pads(kh, kw))
+        x = jnp.pad(x, _conv_same_pads(x.shape[1], x.shape[2], kh, kw, stride))
     B, Hp, Wp, C = x.shape
     G, V, O = tables.shape
     Ho = (Hp - kh) // stride + 1
@@ -322,4 +339,143 @@ def _fused_conv2d_bench(x, s2, tables, cfg, kw_args, Ho):
     tp, _ = _pad_axis(tables, 2, Ob if O >= 128 else 1)
     return lambda: pcilt_fused_conv2d_pallas(
         x, s2, tp, tiles=(Hb, Gb, Ob), **kw_args
+    ).block_until_ready()
+
+
+# ----------------------------------------------------------------------------
+# Shared-pool fused pipeline (extension 3): pool + pointers in, indirection
+# resolved in VMEM — the dense [G, V, O] tables never exist in HBM.
+# ----------------------------------------------------------------------------
+
+
+def pcilt_shared_gemv(
+    x: jax.Array,
+    pool: jax.Array,
+    seg_idx: jax.Array,
+    spec,
+    scale,
+    group: int,
+    tiles=None,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """x [B, n] float, pool [X, V, O], seg_idx [G] int32 (``n == G * group``)
+    -> [B, O].
+
+    The fused quantize→pack→fetch pipeline over the extension-3 shared pool;
+    the per-shape tiling is dispatched through the autotune lookup table
+    under a ``shared_gemv`` key that includes the pool cardinality ``X``.
+    """
+    B, n = x.shape
+    X, V, O = pool.shape
+    G = int(seg_idx.shape[-1])
+    if n != G * group:
+        raise ValueError(f"x trailing dim {n} != G*group = {G}*{group}")
+    key = atn.shape_key("shared_gemv", dtype=pool.dtype,
+                        backend=jax.default_backend(),
+                        B=B, G=G, V=V, O=O, X=X, g=group, bits=spec.bits)
+    s2 = _scale_2d(scale, x.dtype)
+    idx2 = seg_idx.astype(jnp.int32).reshape(1, G)
+    kw = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
+              interpret=not on_tpu())
+    if tiles is None:
+        cfg = atn.lookup(key)
+        if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
+                x, s2, idx2, pool):
+            cfg = atn.tune(
+                key,
+                atn.shared_gemv_candidates(B, G, V, O, X,
+                                           pool.dtype.itemsize),
+                lambda c: _shared_gemv_bench(x, s2, idx2, pool, c, kw),
+            )
+        if cfg is None:
+            # The staged pool is Gb-independent, but the in-kernel one-hot
+            # scratch still scales with Gb — the untuned fallback must use
+            # the VMEM-bounded heuristic (candidate 0), like every other
+            # pipeline; "stage everything" is only reached via tuning, where
+            # a compile rejection is skipped rather than fatal.
+            cfg = atn.shared_gemv_candidates(B, G, V, O, X,
+                                             pool.dtype.itemsize)[0]
+        tiles = (cfg.Bb, cfg.Gb, cfg.Ob)
+    tiles = _fit_tiles(tiles, B, G, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])  # zero rows quantize harmlessly
+    pp, _ = _pad_axis(pool, 2, tiles[2] if O >= 128 else 1)
+    out = pcilt_shared_gemv_pallas(xp, s2, idx2, pp, tiles=tiles, **kw)
+    return out[:B, :O]
+
+
+def _shared_gemv_bench(x, s2, idx2, pool, cfg, kw):
+    B, O = x.shape[0], pool.shape[-1]
+    G = idx2.shape[-1]
+    tiles = _fit_tiles((cfg.Bb, cfg.Gb, cfg.Ob), B, G, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])
+    pp, _ = _pad_axis(pool, 2, tiles[2] if O >= 128 else 1)
+    return lambda: pcilt_shared_gemv_pallas(
+        xp, s2, idx2, pp, tiles=tiles, **kw
+    ).block_until_ready()
+
+
+def pcilt_shared_conv2d(
+    x: jax.Array,
+    pool: jax.Array,
+    seg_idx: jax.Array,
+    spec,
+    scale,
+    group: int,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: str = "SAME",
+    tiles=None,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """x [B, H, W, C] float NHWC, pool [X, V, O], seg_idx [G] int32
+    -> [B, Ho, Wo, O].
+
+    The shared-pool sibling of :func:`pcilt_fused_conv2d`: same host-side
+    spatial pad and in-VMEM im2col, with the dense table operand replaced by
+    (pointers, pool).  ``G * group >= kh*kw*C`` (alignment slots must have
+    been built from zero weights).
+    """
+    if padding == "SAME":
+        x = jnp.pad(x, _conv_same_pads(x.shape[1], x.shape[2], kh, kw, stride))
+    B, Hp, Wp, C = x.shape
+    X, V, O = pool.shape
+    G = int(seg_idx.shape[-1])
+    Ho = (Hp - kh) // stride + 1
+    key = atn.shape_key("shared_conv2d", dtype=pool.dtype,
+                        backend=jax.default_backend(),
+                        B=B, Ho=Ho, W=Wp, C=C, k=kh * kw, s=stride,
+                        G=G, V=V, O=O, X=X, g=group, bits=spec.bits)
+    s2 = _scale_2d(scale, x.dtype)
+    idx2 = seg_idx.astype(jnp.int32).reshape(1, G)
+    kw_args = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
+                   kh=kh, kw=kw, stride=stride, interpret=not on_tpu())
+    if tiles is None:
+        cfg = atn.lookup(key)
+        if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
+                x, s2, idx2, pool):
+            cfg = atn.tune(
+                key,
+                atn.shared_conv2d_candidates(Ho, G, V, O, X,
+                                             pool.dtype.itemsize),
+                lambda c: _shared_conv2d_bench(x, s2, idx2, pool, c,
+                                               kw_args, Ho),
+            )
+        if cfg is None:
+            cfg = atn.shared_conv2d_candidates(Ho, G, V, O, X,
+                                               pool.dtype.itemsize)[0]
+        tiles = (cfg.row_tile, cfg.Gb, cfg.Ob)
+    Hb, Gb, Ob = _fit_conv_tiles(tiles, Ho, G, O)
+    pp, _ = _pad_axis(pool, 2, Ob if O >= 128 else 1)
+    out = pcilt_shared_conv2d_pallas(x, s2, idx2, pp, tiles=(Hb, Gb, Ob),
+                                     **kw_args)
+    return out[..., :O]
+
+
+def _shared_conv2d_bench(x, s2, idx2, pool, cfg, kw_args, Ho):
+    G, O = idx2.shape[-1], pool.shape[-1]
+    Hb, Gb, Ob = _fit_conv_tiles((cfg.row_tile, cfg.Gb, cfg.Ob), Ho, G, O)
+    pp, _ = _pad_axis(pool, 2, Ob if O >= 128 else 1)
+    return lambda: pcilt_shared_conv2d_pallas(
+        x, s2, idx2, pp, tiles=(Hb, Gb, Ob), **kw_args
     ).block_until_ready()

@@ -26,14 +26,15 @@ def _kernel(off_ref, tab_ref, out_ref, *, V: int):
     _, Tb, Cb = off_ref.shape
     # For every offset value v: mask where off == v, add T[c, v].
     # Expressed as a V-step accumulation entirely on the VPU; V is small for
-    # the depthwise case (K**k with K<=4, k=4 ⇒ V<=256).
+    # the depthwise case (K**k with K<=4, k=4 ⇒ V<=256).  Accumulate f32 and
+    # cast once at the end — bf16 tables must not round through bf16 on every
+    # loop step (same contract as the gemv/conv kernels).
     def body(v, acc):
-        hit = (off_ref[0] == v).astype(tab_ref.dtype)  # [Tb, Cb]
-        return acc + hit * tab_ref[:, v][None, :]
+        hit = (off_ref[0] == v).astype(jnp.float32)  # [Tb, Cb]
+        return acc + hit * tab_ref[:, v][None, :].astype(jnp.float32)
 
-    out_ref[0] = jax.lax.fori_loop(
-        0, V, body, jnp.zeros((Tb, Cb), tab_ref.dtype)
-    )
+    acc = jax.lax.fori_loop(0, V, body, jnp.zeros((Tb, Cb), jnp.float32))
+    out_ref[0] = acc.astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("time_tile", "interpret"))

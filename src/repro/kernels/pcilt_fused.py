@@ -133,14 +133,16 @@ def pcilt_fused_gemv_pallas(
 # ----------------------------------------------------------------------------
 
 
-def _conv_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
-                 bits: int, zero_point: int, group: int,
-                 kh: int, kw: int, stride: int,
-                 Gb: int, V: int, Hb: int, n_pad: int):
-    @pl.when(pl.program_id(3) == 0)
-    def _zero():
-        out_ref[...] = jnp.zeros_like(out_ref)
+def _strip_offsets(x_ref, scale_ref, *, bits: int, zero_point: int,
+                   group: int, kh: int, kw: int, stride: int,
+                   Gb: int, Hb: int, n_pad: int):
+    """Quantize this grid step's row strip, im2col it in VMEM, slice the
+    current group range, and pack offsets -> ``[Hb*Wo, Gb]``.
 
+    Shared between the dense-fused conv kernel and the shared-pool conv
+    kernel (``pcilt_shared.py``) — the activation side of the pipeline is
+    identical; only the table operand differs.
+    """
     _, Hp, Wp, C = x_ref.shape
     Wo = (Wp - kw) // stride + 1
     strip_h = (Hb - 1) * stride + kh
@@ -167,7 +169,20 @@ def _conv_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
     # This grid step's group range: segments [k*Gb, (k+1)*Gb).
     seg = jax.lax.dynamic_slice(
         patch, (0, pl.program_id(3) * (Gb * group)), (Hb * Wo, Gb * group))
-    off = _pack_flat(seg, bits=bits, group=group, Gseg=Gb)  # [Hb*Wo, Gb]
+    return _pack_flat(seg, bits=bits, group=group, Gseg=Gb)  # [Hb*Wo, Gb]
+
+
+def _conv_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
+                 bits: int, zero_point: int, group: int,
+                 kh: int, kw: int, stride: int,
+                 Gb: int, V: int, Hb: int, n_pad: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    off = _strip_offsets(x_ref, scale_ref, bits=bits, zero_point=zero_point,
+                         group=group, kh=kh, kw=kw, stride=stride,
+                         Gb=Gb, Hb=Hb, n_pad=n_pad)
     acc = _flat_onehot_dot(off, tab_ref[...], V=V)  # [Hb*Wo, Ob] f32
     out_ref[...] += acc.reshape(out_ref.shape)
 

@@ -1,0 +1,224 @@
+"""Fused Pallas kernels for shared-pool PCILTs (paper extension 3).
+
+Extension 3 keeps "only one PCILT for given algorithm base value(s) and
+replace[s] the others with pointers to it".  At segment granularity that is a
+deduped pool ``pool[X, V, O]`` of unique segment tables plus an integer
+pointer vector ``seg_idx[G]`` mapping each of the ``G`` segments onto its pool
+row (``core.pcilt.SharedGroupedTables``).  The dense-fused kernels
+(``pcilt_fused.py``) cannot consume that representation — they would force a
+``materialize()`` back to the full ``[G, V, O]`` tables in HBM, forfeiting the
+entire ext.-3 memory win before the first fetch.
+
+The kernels here stage **the pool and the pointers, never the dense tables**:
+
+* the ``[X, V, Ob]`` pool tile and the ``[Gb]`` pointer block live in VMEM
+  (``X << G`` is the whole point — the staged bytes scale with the weights'
+  *actual* segment cardinality, so even "stage every group" tilings fit);
+* the pointer indirection is resolved *inside* the kernel by accumulating the
+  activation one-hot into **pool space**: every segment pointing at pool row
+  ``x`` with offset ``v`` fetches the *same* table cell, so the fetch-and-add
+  over this grid step's ``Gb`` segments collapses to a multiplicity count
+  followed by one small contraction::
+
+      ohv[r, g, v]     = (off[r, g] == v)          # [R, Gb, V] — same build
+      sel[g, x]        = (seg_idx[g] == x)         # [Gb, X]    — tiny
+      counts[r, v, x]  = sum_g ohv[r, g, v] * sel[g, x]
+      out[r, :]       += counts.reshape(R, V*X) @ pool_t.reshape(V*X, Ob)
+
+  where ``pool_t`` is the pool staged **pre-transposed** to ``[V, X, Ob]``
+  (done once on the host by ``ops.py``) so the count layout lines up with no
+  in-kernel transpose.  The fetch contraction therefore shrinks from the
+  dense path's ``[R, Gb*V] x [Gb*V, Ob]`` to ``[R, X*V] x [X*V, Ob]`` —
+  fetch compute scales with the pool cardinality ``X``, not the segment
+  count ``G``, mirroring exactly how ext. 3 makes the table *memory* scale
+  with ``X``.  No data-dependent addressing reaches the memory system
+  (compares + two matmuls, TPU-friendly);
+* the activation side is identical to the dense-fused pipeline — quantize and
+  little-endian shift-or pack in VMEM (helpers imported from
+  ``pcilt_fused``) — and counts are small integers built in f32 (exact up to
+  2**24 ≫ any Gb), so ``path="shared"`` matches the gather reference to f32
+  summation-order tolerance.
+
+Tiling comes from the caller (``ops.py``) via the persistent autotune lookup
+table under the ``shared_gemv`` / ``shared_conv2d`` shape keys, which include
+the pool cardinality ``X`` (``autotune.shared_*_candidates``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pcilt_fused import _pack_flat, _quantize, _strip_offsets
+
+__all__ = ["pcilt_shared_gemv_pallas", "pcilt_shared_conv2d_pallas"]
+
+
+def _pool_counts_dot(off, idx, pool_t, *, V: int, X: int):
+    """The pooled fetch: ``off [R, Gb]``, ``idx [Gb]``,
+    ``pool_t [V, X, Ob]`` (pre-transposed pool) -> f32 ``[R, Ob]``.
+
+    Every segment pointing at pool row ``x`` with offset ``v`` fetches the
+    *same* cell, so the adder tree over this grid step's ``Gb`` segments is
+    ``counts @ pool``: count how many segments land on each ``(v, x)`` cell
+    (an ``[R*V, Gb] x [Gb, X]`` contraction over the dense-cost one-hot),
+    then one ``[R, V*X] x [V*X, Ob]`` MXU contraction — ``X/Gb`` of the
+    dense kernel's fetch FLOPs.  Counts are small integers built in f32
+    (exact up to 2**24 ≫ any Gb), so no precision is lost to the
+    multiplicity trick; bf16 pools are promoted to f32 for the contraction
+    like the dense path's ``preferred_element_type`` accumulation.
+    """
+    R, Gb = off.shape
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (R, Gb, V), 2)
+    ohv = (off[:, :, None] == lanes).astype(jnp.float32)  # [R, Gb, V]
+    sel = (idx[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (Gb, X), 1)).astype(jnp.float32)  # [Gb, X]
+    counts = jax.lax.dot_general(
+        ohv, sel, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # [R, V, X]
+    return jnp.dot(counts.reshape(R, V * X),
+                   pool_t.reshape(V * X, pool_t.shape[-1]).astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# Shared-pool fused GEMV
+# ----------------------------------------------------------------------------
+
+
+def _gemv_kernel(x_ref, scale_ref, idx_ref, pool_ref, out_ref, *,
+                 bits: int, zero_point: int, group: int,
+                 Gb: int, V: int, X: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = _quantize(x_ref[...], scale_ref[0, 0],
+                      bits=bits, zero_point=zero_point)  # [Bb, Gb*group]
+    off = _pack_flat(codes, bits=bits, group=group, Gseg=Gb)  # [Bb, Gb]
+    out_ref[...] += _pool_counts_dot(off, idx_ref[0], pool_ref[...], V=V, X=X)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "zero_point", "group", "tiles", "interpret"),
+)
+def pcilt_shared_gemv_pallas(
+    x: jax.Array,
+    scale: jax.Array,
+    seg_idx: jax.Array,
+    pool: jax.Array,
+    *,
+    bits: int,
+    zero_point: int,
+    group: int,
+    tiles,
+    interpret: bool = False,
+) -> jax.Array:
+    """x ``[B, n]`` float, scale ``[1, 1]``, seg_idx ``[1, G]`` int32,
+    pool ``[X, V, O]`` -> ``[B, O]``.
+
+    ``n == G * group``; B, O are padded to tile multiples by ``ops.py``;
+    ``tiles`` is a ``(Bb, Gb, Ob)`` tuple with ``Gb | G``.  The whole pool is
+    staged per output tile (pre-transposed to ``[V, X, Ob]`` so the count
+    layout needs no in-kernel transpose); only the ``[Gb]`` pointer block
+    walks the G axis.
+    """
+    B, n = x.shape
+    G = seg_idx.shape[-1]
+    X, V, O = pool.shape
+    assert n == G * group, (n, G, group)
+    pool_t = jnp.transpose(pool, (1, 0, 2))  # [V, X, O], once per call
+    Bb, Gb, Ob = tiles
+    grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G // Gb)
+    return pl.pallas_call(
+        functools.partial(_gemv_kernel, bits=bits, zero_point=zero_point,
+                          group=group, Gb=Gb, V=V, X=X),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bb, Gb * group), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, Gb), lambda i, j, k: (0, k)),
+            pl.BlockSpec((V, X, Ob), lambda i, j, k: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((Bb, Ob), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
+        interpret=interpret,
+    )(x, scale, seg_idx, pool_t).astype(pool.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Shared-pool fused conv2d
+# ----------------------------------------------------------------------------
+
+
+def _conv_kernel(x_ref, scale_ref, idx_ref, pool_ref, out_ref, *,
+                 bits: int, zero_point: int, group: int,
+                 kh: int, kw: int, stride: int,
+                 Gb: int, V: int, X: int, Hb: int, n_pad: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    off = _strip_offsets(x_ref, scale_ref, bits=bits, zero_point=zero_point,
+                         group=group, kh=kh, kw=kw, stride=stride,
+                         Gb=Gb, Hb=Hb, n_pad=n_pad)  # [Hb*Wo, Gb]
+    acc = _pool_counts_dot(off, idx_ref[0], pool_ref[...], V=V, X=X)
+    out_ref[...] += acc.reshape(out_ref.shape)  # [Hb*Wo, Ob] f32
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "zero_point", "group", "kh", "kw", "stride",
+                     "tiles", "interpret"),
+)
+def pcilt_shared_conv2d_pallas(
+    x: jax.Array,
+    scale: jax.Array,
+    seg_idx: jax.Array,
+    pool: jax.Array,
+    *,
+    bits: int,
+    zero_point: int,
+    group: int,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    tiles=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """x ``[B, Hp, Wp, C]`` float (already spatially padded), scale ``[1, 1]``,
+    seg_idx ``[1, G]`` int32, pool ``[X, V, O]`` -> ``[B, Ho, Wo, O]``.
+
+    Same contract as ``pcilt_fused_conv2d_pallas`` with the dense ``[G, V, O]``
+    table operand replaced by (pointers, pool); ``tiles`` is ``(Hb, Gb, Ob)``
+    with ``Gb | G`` and ``Hb | Ho``; ``G * group >= kh*kw*C``.
+    """
+    B, Hp, Wp, C = x.shape
+    G = seg_idx.shape[-1]
+    X, V, O = pool.shape
+    n, n_tot = kh * kw * C, G * group
+    assert n_tot >= n, (n_tot, n)
+    pool_t = jnp.transpose(pool, (1, 0, 2))  # [V, X, O], once per call
+    Ho = (Hp - kh) // stride + 1
+    Wo = (Wp - kw) // stride + 1
+    Hb, Gb, Ob = tiles
+    grid = (B, Ho // Hb, pl.cdiv(O, Ob), G // Gb)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, bits=bits, zero_point=zero_point,
+                          group=group, kh=kh, kw=kw, stride=stride,
+                          Gb=Gb, V=V, X=X, Hb=Hb, n_pad=n_tot - n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, C), lambda b, r, j, k: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, r, j, k: (0, 0)),
+            pl.BlockSpec((1, Gb), lambda b, r, j, k: (0, k)),
+            pl.BlockSpec((V, X, Ob), lambda b, r, j, k: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, Hb, Wo, Ob), lambda b, r, j, k: (b, r, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, O), jnp.float32),
+        interpret=interpret,
+    )(x, scale, seg_idx, pool_t).astype(pool.dtype)

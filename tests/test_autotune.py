@@ -111,6 +111,69 @@ def test_serving_tune_populates_cache(tune_cache):
     assert atn.TIMING_RUNS == 0
 
 
+def test_concurrent_saves_keep_newest_per_key(tune_cache):
+    """Regression: a process must merge back only keys it recorded itself.
+
+    Two interleaved caches share one file.  Cache B re-records key "a" after
+    cache A loaded the stale copy; when A later records its own key "b", A's
+    save must not clobber B's newer "a" with A's stale startup copy ("last
+    writer wins per key only")."""
+    t = atn.TileConfig(Bb=8, Gb=1, Ob=128)
+    seed = atn.TileCache(tune_cache)
+    seed.record("a", atn.TileConfig(Bb=8, Gb=1, Ob=1), 5.0, 1)
+
+    cache_a = atn.TileCache(tune_cache)  # loads a@v1
+    cache_b = atn.TileCache(tune_cache)  # loads a@v1
+    newer = atn.TileConfig(Bb=16, Gb=2, Ob=256)
+    cache_b.record("a", newer, 3.0, 2)   # concurrent tuner updates "a"
+    cache_a.record("b", t, 7.0, 1)       # we only recorded "b"
+
+    final = atn.TileCache(tune_cache)
+    assert final.lookup("a") == newer, "stale startup copy clobbered newer entry"
+    assert final.lookup("b") == t
+
+
+def test_failed_tune_records_null_not_nan(tune_cache):
+    """Regression: an all-candidates-failed tune must write valid JSON
+    (us: null), never a bare NaN token that breaks strict parsers/jq."""
+    cands = [atn.TileConfig(Bb=8, Gb=1, Ob=128)]
+
+    def bench(cfg):
+        raise RuntimeError("no candidate can run")
+
+    got = atn.tune("k|dtype=float32|backend=cpu", cands, bench)
+    assert got == cands[0]  # heuristic fallback still dispatches
+    raw = open(tune_cache).read()
+    assert "NaN" not in raw
+    entry = json.loads(raw)["k|dtype=float32|backend=cpu"]  # strict parse ok
+    assert entry["us"] is None and entry["candidates"] == 0
+    # lookup tolerates the null timing and returns the recorded tiles
+    atn.reset_cache(tune_cache)
+    assert atn.lookup("k|dtype=float32|backend=cpu") == cands[0]
+
+
+def test_record_sanitizes_nonfinite_us(tune_cache):
+    atn.get_cache().record("k2", atn.TileConfig(Bb=8, Gb=1, Ob=128),
+                           float("nan"), 1)
+    assert json.load(open(tune_cache))["k2"]["us"] is None
+
+
+def test_legacy_nan_cache_file_does_not_break_record(tune_cache):
+    """A tiles.json written by older code with a bare `us: NaN` entry
+    (json.load accepts it) must not crash later record()s under
+    allow_nan=False — the legacy timing is rewritten as null."""
+    with open(tune_cache, "w") as f:
+        json.dump({"legacy": {"tiles": {"Bb": 8, "Gb": 1, "Ob": 128},
+                              "us": float("nan"), "candidates": 1}}, f)
+    cache = atn.TileCache(tune_cache)
+    cache.record("fresh", atn.TileConfig(Bb=8, Gb=2, Ob=128), 4.2, 1)
+    raw = open(tune_cache).read()
+    assert "NaN" not in raw
+    entries = json.loads(raw)
+    assert entries["legacy"]["us"] is None and entries["fresh"]["us"] == 4.2
+    assert atn.TileCache(tune_cache).lookup("legacy") is not None
+
+
 def test_candidate_generators_valid():
     for B, G, V, O in [(1, 7, 4, 3), (8, 512, 16, 1024), (128, 24, 256, 384)]:
         cands = atn.gemv_candidates(B, G, V, O)

@@ -86,6 +86,20 @@ def test_conv2d_matches_lax_conv():
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+def test_conv2d_strided_same_matches_lax_conv():
+    """Stride-2 "SAME" on even extents: pads must follow the XLA split
+    (pad_total//2 low), not the stride-agnostic (k-1)//2."""
+    spec = QuantSpec(bits=2)
+    img = jax.random.uniform(KEY, (1, 8, 10, 2)) * 2
+    f = jax.random.normal(jax.random.fold_in(KEY, 7), (3, 3, 2, 4))
+    s = calibrate(img, spec)
+    got = pcilt_conv2d(img, f, spec, s, group=2, stride=2, padding="SAME")
+    imq = dequantize(quantize(img, spec, s), spec, s)
+    want = jax.lax.conv_general_dilated(
+        imq, f, (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
 def test_conv2d_strided_valid():
     spec = QuantSpec(bits=2)
     img = jax.random.uniform(KEY, (1, 12, 12, 2)) * 2

@@ -173,6 +173,72 @@ def test_fused_conv2d_parity(B, H, W, C, kh, kw, stride, O, bits, group,
                                    np.asarray(want, np.float32), **tol)
 
 
+def test_pcilt_dwconv1d_bf16_tables_f32_accumulation():
+    """bf16 tables must not round through bf16 on every fori_loop step: the
+    kernel accumulates f32 and casts once, so each output equals its bf16
+    table cell exactly (one fetch per output element)."""
+    off = jnp.asarray(RNG.integers(0, 16, (2, 32, 6)), jnp.int32)
+    tab = _mk((6, 16), jnp.bfloat16)
+    got = ops.pcilt_dwconv1d(off, tab)
+    want = ref.pcilt_dwconv1d_ref(off, tab)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("H,W", [(8, 8), (9, 7), (10, 8)])
+def test_strided_same_matches_lax_conv(H, W):
+    """Stride-2 "SAME" must sample the exact windows XLA samples (pad_total
+    split low-first), on every path — even sizes used to shift by one."""
+    from repro.core import QuantSpec, calibrate, quantize, dequantize
+    from repro.core.lut_layers import pcilt_conv2d
+
+    spec = QuantSpec(2)
+    x = jnp.asarray(RNG.uniform(0, 2, (1, H, W, 2)), jnp.float32)
+    f = _mk((3, 3, 2, 4))
+    s = calibrate(x, spec)
+    xq = dequantize(quantize(x, spec, s), spec, s)
+    want = jax.lax.conv_general_dilated(
+        xq, f, (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    for path in ("gather", "kernel", "fused"):
+        got = pcilt_conv2d(x, f, spec, s, group=2, stride=2, padding="SAME",
+                           path=path)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"path={path} H={H} W={W}")
+
+
+def test_host_conv2d_clamps_malformed_cache_tiles(tmp_path):
+    """A hand-edited / cross-version cache entry with Gb ∤ G (and oversized
+    Hb/Ob) must be clamped before reaching the kernel, like the fused path."""
+    import json
+
+    off = jnp.asarray(RNG.integers(0, 8, (1, 6, 6, 9)), jnp.int32)  # G=9
+    tab = _mk((9, 8, 20))
+    key = atn.shape_key("conv2d_host", dtype=tab.dtype,
+                        backend=jax.default_backend(),
+                        B=1, Ho=6, Wo=6, G=9, V=8, O=20)
+    path = str(tmp_path / "tiles.json")
+    with open(path, "w") as f:
+        json.dump({key: {"tiles": {"Bb": 8, "Gb": 7, "Ob": 999,
+                                   "row_tile": 5}, "us": 1.0,
+                         "candidates": 1}}, f)
+    atn.reset_cache(path)
+    got = ops.pcilt_conv2d(off, tab)  # 7 ∤ 9, 5 ∤ 6, Ob > O: must not crash
+    np.testing.assert_allclose(got, ref.pcilt_conv2d_ref(off, tab),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_is_concrete_uses_compat_tracer_probe():
+    from repro import compat
+
+    seen = []
+    jax.jit(lambda t: seen.append(compat.is_tracer(t)) or t)(jnp.zeros(1))
+    assert seen == [True]
+    assert not compat.is_tracer(jnp.zeros(1))
+    assert not compat.is_tracer(np.zeros(1))
+
+
 def test_fused_rejects_segment_plans():
     from repro.core import QuantSpec, SegmentPlan, calibrate, build_grouped_tables
     from repro.core import pcilt_linear
