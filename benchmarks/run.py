@@ -18,6 +18,12 @@ Sections:
                and the dense fused path, on weight-clustered layers at the
                same two regimes, plus the pool-vs-dense table-memory ratio.
                Results are written to BENCH_pr2.json.
+  shard.*    — mesh-sharded tables for tensor-parallel decode
+               (benchmarks/shard_bench.py, run as a subprocess because the
+               forced host-device count must be set before jax initializes):
+               per-device table bytes and decode-GEMV latency at
+               model=1/2/4/8 over 8 forced host devices.  Results are
+               written to BENCH_pr3.json.
   roofline.* — summary terms per hillclimbed cell (full table:
                ``python -m benchmarks.roofline``).
 """
@@ -26,6 +32,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -290,6 +298,30 @@ def shared_rows(bench_json: str = "BENCH_pr2.json"):
     return rows
 
 
+def shard_rows(bench_json: str = "BENCH_pr3.json"):
+    """Run benchmarks/shard_bench.py in a subprocess (it must force the host
+    device count before jax initializes — this process has usually already
+    initialized jax on 1 device) and relay the rows it recorded."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    try:
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.shard_bench"],
+            cwd=REPO_ROOT, env=env, capture_output=True, text=True,
+            timeout=1800,
+        )
+    except subprocess.TimeoutExpired:
+        return [("shard.error", 0.0, "shard_bench timed out after 1800s")]
+    if r.returncode != 0:
+        lines = (r.stderr or r.stdout).strip().splitlines()
+        detail = lines[-1][:120] if lines else f"exit code {r.returncode}"
+        return [("shard.error", 0.0, detail)]
+    payload = json.load(open(os.path.join(REPO_ROOT, bench_json)))
+    return [(row["name"], row["us_per_call"], row["derived"])
+            for row in payload["rows"]]
+
+
 def roofline_rows():
     import glob
     import json
@@ -320,7 +352,7 @@ def roofline_rows():
 def main() -> None:
     print("name,us_per_call,derived")
     for section in (paper_rows, micro_rows, lm_rows, fused_rows, shared_rows,
-                    roofline_rows):
+                    shard_rows, roofline_rows):
         for name, val, derived in section():
             print(f"{name},{val},{derived}")
 

@@ -1,0 +1,132 @@
+"""Mesh-sharded PCILT decode benchmark -> BENCH_pr3.json.
+
+Standalone on purpose: forcing a host-platform device count requires
+``XLA_FLAGS`` to be set *before* jax initializes, so this module pins the
+flag at import time and ``benchmarks/run.py`` invokes it as a subprocess
+(``shard.*`` section).  Run directly with::
+
+    PYTHONPATH=src python -m benchmarks.shard_bench
+
+Measures, at ``model`` axis sizes 1/2/4/8 over 8 forced host devices:
+
+* **per-device table bytes** — dense ``[G, V, O]`` tables shard the segment
+  axis, so each device holds ``G/D`` segments and bytes shrink linearly with
+  the model axis (the acceptance criterion for the tensor-parallel decode
+  path), plus the ext.-3 sharded pool's padded-local-pool bytes;
+* **decode-GEMV latency** — the batch-starved fused path under ``shard_map``
+  with its single psum.  On CPU interpret mode this measures dispatch
+  plumbing, not TPU kernels; the number seeds the trajectory the TPU tune
+  pass will overwrite.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+FORCED_DEVICES = 8
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + f" --xla_force_host_platform_device_count={FORCED_DEVICES}"
+    ).strip()
+
+import numpy as np  # noqa: E402
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _timeit(fn, reps=5, warmup=2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def shard_rows(bench_json: str = "BENCH_pr3.json"):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import QuantSpec, calibrate
+    from repro.core.serving import convert_kernel
+    from repro.launch.mesh import make_decode_mesh
+
+    assert jax.device_count() >= FORCED_DEVICES, (
+        f"forced host device count did not apply: {jax.device_count()} "
+        f"(XLA_FLAGS must be set before jax initializes)")
+
+    rng = np.random.default_rng(0)
+    rows = []
+    bytes_per_dev = {}
+    pool_bytes_per_dev = {}
+    latency_us = {}
+
+    # LM decode-GEMV regime: batch-starved projection, 2-bit codes, g=2.
+    bits, group = 2, 2
+    spec = QuantSpec(bits)
+    B, n, O, X = 8, 1024, 512, 16
+    x = jnp.asarray(np.abs(rng.normal(size=(B, n))), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, O)), jnp.float32)
+    cb = rng.normal(size=(X, group, O))
+    wc = jnp.asarray(cb[rng.integers(0, X, n // group)].reshape(n, O),
+                     jnp.float32)
+    s = calibrate(x, spec)
+
+    for model in (1, 2, 4, 8):
+        mesh = make_decode_mesh(model)
+        lin = convert_kernel(w, spec, s, group, mesh=mesh)
+        lsh = convert_kernel(wc, spec, s, group, shared=True, mesh=mesh)
+        lin.tune(x)  # local-shard-shape key into the persistent lookup table
+        fn = jax.jit(lambda a: lin(a, path="fused"))
+        fn(x).block_until_ready()
+        t = _timeit(lambda: fn(x).block_until_ready())
+        d = str(model)
+        bytes_per_dev[d] = lin.per_device_table_bytes()
+        pool_bytes_per_dev[d] = lsh.per_device_table_bytes()
+        latency_us[d] = t
+        rows.append((f"shard.decode_gemv_b{bits}g{group}_{n}x{O}_m{model}", t,
+                     f"fused under shard_map, psum over model={model}"))
+        rows.append((f"shard.dense_bytes_per_dev_m{model}",
+                     bytes_per_dev[d],
+                     f"[G/D,V,O] shard, D={lin.shard_count}"))
+        rows.append((f"shard.shared_pool_bytes_per_dev_m{model}",
+                     pool_bytes_per_dev[d],
+                     f"padded local pool, Xmax="
+                     f"{lsh.shard_pools.max_cardinality if lsh.shard_pools else X}"))
+
+    base = bytes_per_dev["1"]
+    scaling = {d: base / v for d, v in bytes_per_dev.items()}
+    rows.append(("shard.dense_bytes_scaling_m8", scaling["8"],
+                 "per-device table bytes shrink ~linearly with model axis"))
+
+    payload = {
+        "pr": 3,
+        "backend": jax.default_backend(),
+        "timing": "interpret-mode CPU" if jax.default_backend() != "tpu"
+                  else "compiled TPU",
+        "forced_host_devices": FORCED_DEVICES,
+        "per_device_table_bytes": bytes_per_dev,
+        "per_device_shared_pool_bytes": pool_bytes_per_dev,
+        "table_bytes_scaling": {k: round(v, 3) for k, v in scaling.items()},
+        "decode_gemv_us": {k: round(v, 2) for k, v in latency_us.items()},
+        "rows": [
+            {"name": name, "us_per_call": round(float(val), 2),
+             "derived": derived}
+            for name, val, derived in rows
+        ],
+    }
+    if bench_json:
+        with open(os.path.join(REPO_ROOT, bench_json), "w") as fp:
+            json.dump(payload, fp, indent=1)
+    return rows
+
+
+def main() -> None:
+    for name, val, derived in shard_rows():
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,8 @@ from .pcilt import (
     build_shared_tables,
     SharedGroupedTables,
     build_shared_grouped_tables,
+    ShardedSharedPool,
+    shard_shared_grouped_tables,
     table_bytes,
     grouped_table_bytes,
     shared_table_bytes,
@@ -40,6 +42,7 @@ from .lut_layers import (
     pcilt_depthwise_conv1d,
     im2col,
     conv_same_pads,
+    mesh_shard_count,
 )
 from .learnable import (
     init_learnable_pcilt,

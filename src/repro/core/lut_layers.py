@@ -32,6 +32,22 @@ The convolution layers reduce to the linear case by im2col — a PCILT is
 indexed by (segment, offset) regardless of whether the segment came from a
 flattened conv receptive field or a projection row.  (``path="fused"`` does
 the im2col on quantized codes inside the kernel instead.)
+
+Mesh execution (tensor-parallel decode)
+---------------------------------------
+
+Every path also runs sharded: pass ``mesh=`` (and optionally
+``mesh_axis=``, default ``"model"``) and the segment axis ``G`` is split
+across the mesh axis under ``shard_map`` — each device holds a ``[G/D, V, O]``
+table shard (or a local ext.-3 pool, see ``pcilt.ShardedSharedPool``) plus
+the matching slice of the activation's reduction dim, fetches and sums its
+local segments with the *same* single-device kernels it would use unsharded,
+and a single ``psum`` over the mesh axis combines the partial adder-tree
+sums (the paper's segment sum is associative).  When the mesh axis does not
+divide ``G`` the call falls back to replicated single-device execution — the
+same divisibility fallback ``repro.nn.module.ShardingRules`` applies to
+parameters.  Because the kernels see *local* shapes, the autotune lookup
+table is keyed on the local shard shape automatically.
 """
 
 from __future__ import annotations
@@ -40,10 +56,12 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from .quantization import QuantSpec, quantize
 from .offsets import SegmentPlan, pack_offsets
-from .pcilt import SharedGroupedTables, build_grouped_tables
+from .pcilt import (SharedGroupedTables, ShardedSharedPool,
+                    build_grouped_tables, shard_shared_grouped_tables)
 
 __all__ = [
     "lut_lookup",
@@ -52,6 +70,7 @@ __all__ = [
     "pcilt_depthwise_conv1d",
     "im2col",
     "conv_same_pads",
+    "mesh_shard_count",
 ]
 
 
@@ -101,6 +120,102 @@ def lut_lookup(tables: jax.Array, offsets: jax.Array, path: str = "gather") -> j
     raise ValueError(f"unknown path {path!r}")
 
 
+def mesh_shard_count(mesh, mesh_axis: str, n_segments: int) -> int:
+    """How many G-shards a mesh yields; 1 means replicate (fallback).
+
+    Falls back to replication when there is no mesh, the axis is absent, or
+    the axis size does not divide the segment count — the same divisibility
+    fallback ``repro.nn.module.ShardingRules`` applies to parameter dims.
+    """
+    if mesh is None or mesh_axis not in mesh.axis_names:
+        return 1
+    d = int(mesh.shape[mesh_axis])
+    if d <= 1 or n_segments % d:
+        return 1
+    return d
+
+
+def _check_contiguous_segments(path: str, plan, n: int, n_segments: int,
+                               group: int) -> None:
+    """Typed boundary validation for the in-kernel-packing paths.
+
+    ``path="fused"`` / ``path="shared"`` pack contiguous segments inside the
+    kernel, so a generalized ``SegmentPlan`` (non-adjacent / skipped /
+    reused positions) cannot execute there — reject it here, at the dispatch
+    boundary, instead of letting a bare shape error surface from deep inside
+    the kernel wrapper.  Catches both spellings of the mistake: an explicit
+    ``plan=`` argument, and tables *built* with a generalized plan (their
+    segment count no longer satisfies ``G * group == n``).
+    """
+    if plan is not None:
+        raise ValueError(
+            f"path={path!r} packs contiguous segments in-kernel and cannot "
+            f"follow a generalized SegmentPlan; drop plan= (contiguous "
+            f"default) or use the host-packed paths ('gather'/'onehot'/"
+            f"'kernel'), which honor plan.pack()")
+    if n != n_segments * group:
+        raise ValueError(
+            f"path={path!r} requires contiguous segments covering the "
+            f"reduction dim: got x trailing dim {n} but G*group = "
+            f"{n_segments}*{group} = {n_segments * group}. Tables built from "
+            f"a generalized SegmentPlan (skipped/reused positions) execute "
+            f"on the host-packed paths ('gather'/'onehot'/'kernel') with the "
+            f"same plan passed as plan=")
+
+
+def _shard_pool_for(tables: SharedGroupedTables,
+                    n_shards: int) -> ShardedSharedPool:
+    from repro import compat
+
+    if compat.is_tracer(tables.seg_idx):
+        raise ValueError(
+            "sharding a SharedGroupedTables pool is an offline build step "
+            "(np.unique on concrete pointers) and cannot run under jit; "
+            "pre-shard with pcilt.shard_shared_grouped_tables(...) — or "
+            "convert_kernel(..., shared=True, mesh=...) — and pass the "
+            "ShardedSharedPool instead")
+    return shard_shared_grouped_tables(tables, n_shards)
+
+
+def _pcilt_linear_sharded(x, tables, spec, scale, group, path, mesh,
+                          mesh_axis) -> jax.Array:
+    """Run one fetch-and-sum layer under ``shard_map`` over local G-shards.
+
+    Each device executes the unsharded layer on its table shard and the
+    matching slice of the reduction dim, then contributes its partial sum to
+    the ``psum`` over ``mesh_axis`` — the one collective of the whole layer.
+    ``check_vma=False``: Pallas calls carry no replication rule.
+    """
+    from repro import compat
+
+    lead = x.shape[:-1]
+    flat = x.reshape(-1, x.shape[-1])
+
+    if isinstance(tables, ShardedSharedPool):
+        def shard_fn(xl, pool_l, idx_l):
+            local = SharedGroupedTables(pool=pool_l[0], seg_idx=idx_l[0],
+                                        group=group)
+            part = pcilt_linear(xl, local, spec, scale, group, path=path)
+            return jax.lax.psum(part, mesh_axis)
+
+        out = compat.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(None, mesh_axis), P(mesh_axis), P(mesh_axis)),
+            out_specs=P(), check_vma=False,
+        )(flat, tables.pools, tables.seg_idx)
+    else:
+        def shard_fn(xl, tab_l):
+            part = pcilt_linear(xl, tab_l, spec, scale, group, path=path)
+            return jax.lax.psum(part, mesh_axis)
+
+        out = compat.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(None, mesh_axis), P(mesh_axis, None, None)),
+            out_specs=P(), check_vma=False,
+        )(flat, tables)
+    return out.reshape(*lead, out.shape[-1])
+
+
 def pcilt_linear(
     x: jax.Array,
     tables,
@@ -109,23 +224,91 @@ def pcilt_linear(
     group: int,
     plan: Optional[SegmentPlan] = None,
     path: str = "gather",
+    mesh=None,
+    mesh_axis: str = "model",
 ) -> jax.Array:
     """Quantize -> pack offsets -> fetch -> sum.   ``x: [..., n] -> [..., out]``.
 
-    ``tables`` is either the dense grouped ``[G, V, out]`` array or a
+    ``tables`` is the dense grouped ``[G, V, out]`` array, a
     ``SharedGroupedTables`` pool (required for ``path="shared"``; also
-    accepted on ``path="gather"`` for the pointer-gather reference).
+    accepted on ``path="gather"`` for the pointer-gather reference), or a
+    pre-sharded ``ShardedSharedPool`` (mesh execution only).
+
+    With ``mesh=``, the segment axis is sharded over ``mesh_axis`` and the
+    partial sums are ``psum``-combined (see the module docstring); without a
+    mesh — or when the axis does not divide ``G`` — execution is the
+    single-device reference.  A generalized ``SegmentPlan`` cannot shard
+    (its positions are arbitrary): combining ``plan=`` with a mesh that
+    would shard raises rather than silently replicating.
     """
     shared = tables if isinstance(tables, SharedGroupedTables) else None
-    if path == "shared":
-        if shared is None:
+    if isinstance(tables, ShardedSharedPool):
+        if path not in ("shared", "gather"):
             raise ValueError(
-                "path='shared' executes a SharedGroupedTables pool; build one "
-                "with build_shared_grouped_tables (got dense tables)")
+                f"a ShardedSharedPool executes path='shared' or 'gather', "
+                f"not {path!r}")
         if plan is not None:
             raise ValueError(
-                "path='shared' packs contiguous segments in-kernel; "
-                "generalized SegmentPlans need a host-packed path")
+                "a ShardedSharedPool was built over contiguous segment "
+                "blocks; generalized SegmentPlans cannot execute on sharded "
+                "pools — use the unsharded SharedGroupedTables with a "
+                "host-packed path instead")
+        if x.shape[-1] != tables.n_segments * group:
+            raise ValueError(
+                f"x trailing dim {x.shape[-1]} != G*group = "
+                f"{tables.n_segments}*{group} = {tables.n_segments * group} "
+                f"for this ShardedSharedPool")
+        if mesh is None or mesh_axis not in mesh.axis_names:
+            raise ValueError(
+                "a ShardedSharedPool is a mesh operand; pass mesh= (and the "
+                "mesh_axis its pools were sharded for), or execute the "
+                "unsharded SharedGroupedTables instead")
+        if int(mesh.shape[mesh_axis]) != tables.n_shards:
+            raise ValueError(
+                f"ShardedSharedPool was built for {tables.n_shards} shards "
+                f"but mesh axis {mesh_axis!r} has size "
+                f"{int(mesh.shape[mesh_axis])}; rebuild with "
+                f"shard_shared_grouped_tables(st, {int(mesh.shape[mesh_axis])})")
+        return _pcilt_linear_sharded(x, tables, spec, scale, group, path,
+                                     mesh, mesh_axis)
+
+    n_segments = shared.n_segments if shared is not None else (
+        tables.shape[0] if path in ("fused", "shared") else None)
+    if path == "shared" and shared is None:
+        raise ValueError(
+            "path='shared' executes a SharedGroupedTables pool; build one "
+            "with build_shared_grouped_tables (got dense tables)")
+    if path == "fused" and shared is not None:
+        raise ValueError(
+            "path='fused' consumes dense [G, V, O] tables; use "
+            "path='shared' for a SharedGroupedTables pool (or "
+            "materialize() it explicitly)")
+    if path in ("fused", "shared"):
+        _check_contiguous_segments(path, plan, x.shape[-1], n_segments, group)
+
+    D = mesh_shard_count(mesh, mesh_axis,
+                         shared.n_segments if shared is not None
+                         else tables.shape[0])
+    if D > 1 and plan is not None:
+        # Refuse rather than silently replicate: a generalized plan maps
+        # positions arbitrarily, so it cannot shard along contiguous
+        # G-blocks — and a silent fallback would keep full per-device table
+        # residency exactly where the caller asked for sharding.
+        raise ValueError(
+            "mesh execution shards contiguous segment blocks; a generalized "
+            "SegmentPlan cannot be sharded — pass mesh=None to execute the "
+            "plan replicated")
+    if D > 1:
+        if shared is not None:
+            if path not in ("shared", "gather"):
+                raise ValueError(
+                    f"SharedGroupedTables executes path='shared' or "
+                    f"'gather', not {path!r}")
+            tables = _shard_pool_for(shared, D)
+        return _pcilt_linear_sharded(x, tables, spec, scale, group, path,
+                                     mesh, mesh_axis)
+
+    if path == "shared":
         from repro.kernels import ops  # local import: kernels are optional
 
         flat = x.reshape(-1, x.shape[-1])
@@ -133,17 +316,8 @@ def pcilt_linear(
                                     scale, shared.group)
         return out.reshape(*x.shape[:-1], shared.pool.shape[-1])
     if path == "fused":
-        if plan is not None:
-            raise ValueError(
-                "path='fused' packs contiguous segments in-kernel; "
-                "generalized SegmentPlans need a host-packed path")
         from repro.kernels import ops  # local import: kernels are optional
 
-        if shared is not None:
-            raise ValueError(
-                "path='fused' consumes dense [G, V, O] tables; use "
-                "path='shared' for a SharedGroupedTables pool (or "
-                "materialize() it explicitly)")
         G, _, O = tables.shape
         flat = x.reshape(-1, x.shape[-1])
         out = ops.pcilt_fused_gemv(flat, tables, spec, scale, group)
@@ -206,6 +380,8 @@ def pcilt_conv2d(
     padding: str = "SAME",
     tables=None,
     path: str = "gather",
+    mesh=None,
+    mesh_axis: str = "model",
 ) -> jax.Array:
     """PCILT convolution, NHWC ``[B,H,W,Cin] -> [B,Ho,Wo,Cout]``.
 
@@ -214,6 +390,15 @@ def pcilt_conv2d(
     omitted they are built on the fly (tests / calibration) — as a
     segment-deduped ``SharedGroupedTables`` pool for ``path="shared"``,
     dense grouped tables otherwise.
+
+    With ``mesh=`` the segment axis (the flattened ``kh*kw*Cin`` receptive
+    field) is sharded over ``mesh_axis``: patches are extracted host-side
+    (``im2col``) and routed through the sharded linear layer, so each device
+    fetches only its local segments and the partial sums meet in one
+    ``psum``.  The fused/shared conv kernels keep their in-VMEM im2col on
+    the single-device (or fallback) path; under a mesh they execute as the
+    fused/shared *GEMV* kernels over the patch slices — same arithmetic,
+    sharded tables.
     """
     kh, kw, cin, cout = filters.shape
     n = kh * kw * cin
@@ -228,28 +413,48 @@ def pcilt_conv2d(
             tables = build_shared_grouped_tables(wflat, spec, scale, group)
         else:
             tables = build_grouped_tables(wflat, spec, scale, group)
-    if path == "shared":
-        if not isinstance(tables, SharedGroupedTables):
-            raise ValueError(
-                "path='shared' executes a SharedGroupedTables pool; build one "
-                "with build_shared_grouped_tables (got dense tables)")
-        from repro.kernels import ops  # local import: kernels are optional
+    if isinstance(tables, ShardedSharedPool):
+        n_seg = tables.n_segments
+    elif isinstance(tables, SharedGroupedTables):
+        n_seg = tables.n_segments
+    else:
+        n_seg = tables.shape[0]
+    sharded = (isinstance(tables, ShardedSharedPool)
+               or mesh_shard_count(mesh, mesh_axis, n_seg) > 1)
+    if not sharded:
+        # The conv-native kernels (in-VMEM im2col) serve the single-device /
+        # fallback case; under a mesh both paths execute as sharded GEMV
+        # kernels over host-extracted patches (the tail below).
+        if path == "shared":
+            if not isinstance(tables, SharedGroupedTables):
+                raise ValueError(
+                    "path='shared' executes a SharedGroupedTables pool; "
+                    "build one with build_shared_grouped_tables (got dense "
+                    "tables)")
+            from repro.kernels import ops  # local import: kernels are optional
 
-        return ops.pcilt_shared_conv2d(
-            x, tables.pool, tables.seg_idx, spec, scale, tables.group,
-            kh, kw, stride=stride, padding=padding
-        )
-    if path == "fused":
-        from repro.kernels import ops  # local import: kernels are optional
+            return ops.pcilt_shared_conv2d(
+                x, tables.pool, tables.seg_idx, spec, scale, tables.group,
+                kh, kw, stride=stride, padding=padding
+            )
+        if path == "fused":
+            if isinstance(tables, SharedGroupedTables):
+                raise ValueError(
+                    "path='fused' consumes dense [G, V, O] tables; use "
+                    "path='shared' for a SharedGroupedTables pool (or "
+                    "materialize() it explicitly)")
+            from repro.kernels import ops  # local import: kernels are optional
 
-        return ops.pcilt_fused_conv2d(
-            x, tables, spec, scale, group, kh, kw, stride=stride, padding=padding
-        )
+            return ops.pcilt_fused_conv2d(
+                x, tables, spec, scale, group, kh, kw, stride=stride,
+                padding=padding
+            )
     patches = im2col(x, kh, kw, stride, padding)
     if pad_n:
         zeros = jnp.zeros((*patches.shape[:-1], pad_n), patches.dtype)
         patches = jnp.concatenate([patches, zeros], axis=-1)
-    return pcilt_linear(patches, tables, spec, scale, group, path=path)
+    return pcilt_linear(patches, tables, spec, scale, group, path=path,
+                        mesh=mesh, mesh_axis=mesh_axis)
 
 
 def pcilt_depthwise_conv1d(

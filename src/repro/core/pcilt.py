@@ -30,12 +30,38 @@ Memory accounting lives here too (``table_bytes`` and friends) — the paper's
 own feasibility argument is a memory argument, and ``benchmarks/paper_claims``
 reproduces its 1.65 GB / ~100 MB / ~75 MB / ~25 MB / ~18 MB examples from
 these formulas.
+
+Sharded-table layout (tensor-parallel decode)
+---------------------------------------------
+
+Grouped tables for real LM projections reach GBs (``benchmarks/run.py``
+``lm.*`` rows) — past single-device HBM.  The mesh execution path shards the
+**segment axis** ``G`` across the ``"model"`` mesh axis:
+
+* dense ``[G, V, O]`` tables live under ``PartitionSpec("model", None, None)``
+  (logical axis ``"table_seg"`` in ``repro.nn.module.DEFAULT_RULES``), so each
+  of the ``D`` devices holds the ``[G/D, V, O]`` tables of its contiguous
+  segment block — per-device table bytes shrink linearly with the model axis;
+* the paper's adder tree ``sum_s T[s, off_s]`` is associative, so each device
+  fetches and sums only its local segments and one ``psum`` over ``"model"``
+  combines the partial sums (the single cross-device collective, placed in
+  ``repro.core.lut_layers``);
+* shared (ext.-3) pools are sharded by **partitioning the pointer vector**:
+  shard ``d`` keeps only the pool rows its ``seg_idx[d*G/D:(d+1)*G/D]`` slice
+  references, remapped to local indices (:class:`ShardedSharedPool`,
+  :func:`shard_shared_grouped_tables`) — per-device pool memory scales with
+  the *local* cardinality ``X_d <= X``, preserving the extension-3 property
+  under tensor parallelism.
+
+If the mesh axis does not divide ``G``, execution falls back to replication
+(single-device semantics), mirroring the divisibility fallback of
+``repro.nn.module.ShardingRules``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -53,6 +79,8 @@ __all__ = [
     "build_shared_tables",
     "SharedGroupedTables",
     "build_shared_grouped_tables",
+    "ShardedSharedPool",
+    "shard_shared_grouped_tables",
     "table_bytes",
     "grouped_table_bytes",
     "shared_table_bytes",
@@ -331,6 +359,103 @@ def build_shared_grouped_tables(
         pool=pool,
         seg_idx=jnp.asarray(inv.reshape(-1), jnp.int32),
         group=plan.group,
+    )
+
+
+# ----------------------------------------------------------------------------
+# Mesh-sharded shared pools (extension 3 under tensor parallelism)
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardedSharedPool:
+    """Per-shard shared pools for mesh execution of an ext.-3 layer.
+
+    The global ``SharedGroupedTables`` is partitioned along the segment axis
+    into ``D`` contiguous blocks of ``Gl = G / D`` segments.  Shard ``d``
+    keeps only the pool rows its pointer slice references — its *local*
+    cardinality ``X_d <= X`` — remapped to local indices, and every local
+    pool is zero-padded to ``Xmax = max_d X_d`` so the stacked operands have
+    uniform shapes for ``shard_map`` (padded rows are never referenced by any
+    local pointer).
+
+    Layout (leading axis = shard = ``"model"`` mesh axis):
+
+    * ``pools   [D, Xmax, V, O]`` — ``PartitionSpec("model", None, None, None)``
+    * ``seg_idx [D, Gl]`` int32   — ``PartitionSpec("model", None)``
+
+    so under ``shard_map`` each device sees one ``[Xmax, V, O]`` local pool
+    plus its ``[Gl]`` local pointers, executes the shared-pool kernel over
+    them, and contributes its partial adder-tree sum to the ``psum`` over the
+    model axis.  Per-device table memory is ``Xmax*V*O*itemsize + Gl*4`` —
+    local-``X`` pool math, not global ``G`` or global ``X``.
+    """
+
+    pools: jax.Array  # [D, Xmax, V, O] stacked local pools (rows zero-padded)
+    seg_idx: jax.Array  # [D, Gl] int32 local pointers into the local pool
+    group: int  # codes packed per offset (V == K**group)
+    shard_cards: Tuple[int, ...] = ()  # true per-shard cardinality X_d (pre-pad)
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.pools.shape[0])
+
+    @property
+    def n_segments(self) -> int:
+        return int(self.seg_idx.shape[0] * self.seg_idx.shape[1])
+
+    @property
+    def max_cardinality(self) -> int:
+        """Padded local pool rows ``Xmax`` — what every device stages."""
+        return int(self.pools.shape[1])
+
+    def local_pool_bytes(self, value_bytes: Optional[int] = None) -> int:
+        """Per-device table memory: the padded local pool + local pointers."""
+        _, Xmax, V, out = self.pools.shape
+        vb = value_bytes if value_bytes is not None else self.pools.dtype.itemsize
+        return (shared_table_bytes(Xmax, [(V - 1).bit_length()], out * vb)
+                + self.seg_idx.shape[1] * self.seg_idx.dtype.itemsize)
+
+    def materialize(self) -> jax.Array:
+        """Dense ``[G, V, O]`` tables recovered shard by shard (parity tests)."""
+        parts = [jnp.take(self.pools[d], self.seg_idx[d], axis=0)
+                 for d in range(self.n_shards)]
+        return jnp.concatenate(parts, axis=0)
+
+
+def shard_shared_grouped_tables(
+    st: SharedGroupedTables, n_shards: int
+) -> ShardedSharedPool:
+    """Offline shard build: partition ``seg_idx`` and dedupe pools per shard.
+
+    Must run outside jit (``np.unique`` on concrete pointers — like every
+    table build, sharding is part of the paper's once-per-lifetime offline
+    step).  ``n_shards`` must divide ``G``; the mesh execution path applies
+    its divisibility fallback *before* calling this.
+    """
+    G = st.n_segments
+    if n_shards < 1 or G % n_shards:
+        raise ValueError(
+            f"n_shards={n_shards} must divide the segment count G={G} "
+            f"(the caller applies the replication fallback otherwise)")
+    Gl = G // n_shards
+    si = np.asarray(st.seg_idx)
+    pool = np.asarray(st.pool)
+    locals_: list = []
+    for d in range(n_shards):
+        rows, inv = np.unique(si[d * Gl:(d + 1) * Gl], return_inverse=True)
+        locals_.append((rows, inv.astype(np.int32)))
+    x_max = max(len(rows) for rows, _ in locals_)
+    pools = np.zeros((n_shards, x_max) + pool.shape[1:], pool.dtype)
+    idx = np.zeros((n_shards, Gl), np.int32)
+    for d, (rows, inv) in enumerate(locals_):
+        pools[d, : len(rows)] = pool[rows]
+        idx[d] = inv
+    return ShardedSharedPool(
+        pools=jnp.asarray(pools),
+        seg_idx=jnp.asarray(idx),
+        group=st.group,
+        shard_cards=tuple(len(rows) for rows, _ in locals_),
     )
 
 

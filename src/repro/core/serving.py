@@ -22,9 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from .quantization import QuantSpec, calibrate, quantize, dequantize
-from .pcilt import (SharedGroupedTables, build_grouped_tables,
-                    build_shared_grouped_tables)
-from .lut_layers import pcilt_linear
+from .pcilt import (SharedGroupedTables, ShardedSharedPool,
+                    build_grouped_tables, build_shared_grouped_tables,
+                    shard_shared_grouped_tables)
+from .lut_layers import mesh_shard_count, pcilt_linear
 
 __all__ = ["PCILTLinear", "convert_kernel", "pcilt_apply", "mlp_table_bytes"]
 
@@ -45,11 +46,22 @@ class PCILTLinear:
     (``[G, V, O]``) and/or a ``shared`` pool.  A shared-only instance (the
     memory-feasible deployment) executes ``path="gather"`` and
     ``path="shared"``; dense-only instances execute everything else.
+
+    With ``mesh=``, the layer is tensor-parallel: dense tables are placed
+    under ``PartitionSpec(mesh_axis, None, None)`` (each device holds the
+    ``[G/D, V, O]`` shard), a shared pool is pre-sharded into a
+    ``ShardedSharedPool`` (per-device memory scales with the *local* pool
+    cardinality), every ``__call__`` runs the fetch under ``shard_map`` with
+    one ``psum`` of the partial adder-tree sums, and :meth:`tune` keys the
+    autotune cache on the **local shard shape** — the shape the kernels
+    actually see per device.  When ``mesh_axis`` does not divide ``G`` the
+    layer falls back to replicated execution (divisibility fallback).
     """
 
     def __init__(self, tables: Optional[jax.Array], spec: QuantSpec,
                  scale: jax.Array, group: int,
-                 shared: Optional[SharedGroupedTables] = None):
+                 shared: Optional[SharedGroupedTables] = None,
+                 mesh=None, mesh_axis: str = "model"):
         if tables is None and shared is None:
             raise ValueError("PCILTLinear needs dense tables, a shared pool, "
                              "or both")
@@ -58,6 +70,36 @@ class PCILTLinear:
         self.scale = scale
         self.group = group
         self.shared = shared
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.shard_pools: Optional[ShardedSharedPool] = None
+        if mesh is not None and self.shard_count > 1:
+            if shared is not None:
+                self.shard_pools = shard_shared_grouped_tables(
+                    shared, self.shard_count)
+                self._place_shard_pools()
+            if tables is not None:
+                # Park each [G/D, V, O] shard on its device now — the whole
+                # point is that no device ever holds the global tables.
+                from repro.nn.module import pcilt_table_sharding
+
+                self.tables = jax.device_put(
+                    tables, pcilt_table_sharding(mesh, tables.shape[0],
+                                                 mesh_axis=mesh_axis))
+
+    def _place_shard_pools(self) -> None:
+        from repro.nn.module import pcilt_table_sharding
+
+        sp = self.shard_pools
+        self.shard_pools = ShardedSharedPool(
+            pools=jax.device_put(
+                sp.pools, pcilt_table_sharding(self.mesh, sp.n_shards, ndim=4,
+                                               mesh_axis=self.mesh_axis)),
+            seg_idx=jax.device_put(
+                sp.seg_idx, pcilt_table_sharding(self.mesh, sp.n_shards,
+                                                 ndim=2,
+                                                 mesh_axis=self.mesh_axis)),
+            group=sp.group, shard_cards=sp.shard_cards)
 
     @property
     def n_segments(self) -> int:
@@ -65,12 +107,28 @@ class PCILTLinear:
             return self.tables.shape[0]
         return self.shared.n_segments
 
+    @property
+    def shard_count(self) -> int:
+        """Effective G-shards on the layer's mesh (1 = replicated fallback)."""
+        return mesh_shard_count(self.mesh, self.mesh_axis, self.n_segments)
+
     def table_bytes(self) -> int:
         """Bytes of the representation this layer would deploy (the shared
         pool when present — the paper's ext.-3 memory argument)."""
         if self.shared is not None:
             return self.shared.pool_bytes()
         return self.tables.size * self.tables.dtype.itemsize
+
+    def per_device_table_bytes(self) -> int:
+        """Table bytes each device holds under the layer's mesh.
+
+        Dense tables shard exactly linearly (``G/D`` segments per device);
+        shared layers stage the padded local pool.  Replicated layers (no
+        mesh / fallback) hold everything everywhere.
+        """
+        if self.shard_pools is not None:
+            return self.shard_pools.local_pool_bytes()
+        return -(-self.table_bytes() // self.shard_count)
 
     def _pad_x(self, x: jax.Array) -> jax.Array:
         n = self.n_segments * self.group
@@ -84,7 +142,7 @@ class PCILTLinear:
             if self.shared is None:
                 raise ValueError(
                     "no shared pool on this layer; convert with shared=True")
-            return self.shared
+            return self.shard_pools if self.shard_pools is not None else self.shared
         if self.tables is None:
             raise ValueError(
                 f"shared-only PCILTLinear executes path='shared' or 'gather', "
@@ -93,16 +151,38 @@ class PCILTLinear:
 
     def __call__(self, x: jax.Array, path: str = "gather") -> jax.Array:
         return pcilt_linear(self._pad_x(x), self._tables_for(path), self.spec,
-                            self.scale, self.group, path=path)
+                            self.scale, self.group, path=path,
+                            mesh=self.mesh, mesh_axis=self.mesh_axis)
 
     def tune(self, x: jax.Array) -> jax.Array:
         """Eagerly autotune the fused kernel for this decode shape and record
         the winner in the persistent lookup table; returns the output.
-        Shared-only layers tune the shared-pool kernel."""
+        Shared-only layers tune the shared-pool kernel.
+
+        Under a mesh, tuning runs on the **local shard shape** — one shard's
+        ``[G/D, V, O]`` tables (or local pool) against the matching slice of
+        the reduction dim — because that is the problem each device's kernel
+        dispatches, and the shape key the sharded ``shard_map`` execution
+        looks up at trace time.  Caches tuned at different device counts
+        therefore occupy different keys and never collide.
+        """
         from repro.kernels import ops  # local import: kernels are optional
 
         x = self._pad_x(x)
         flat = x.reshape(-1, x.shape[-1])
+        D = self.shard_count
+        if D > 1:
+            Gl = self.n_segments // D
+            xl = flat[:, : Gl * self.group]
+            if self.tables is None:
+                sp = self.shard_pools
+                ops.pcilt_shared_gemv(xl, sp.pools[0], sp.seg_idx[0],
+                                      self.spec, self.scale, self.group,
+                                      autotune=True)
+                return self(x, path="shared")
+            ops.pcilt_fused_gemv(xl, self.tables[:Gl], self.spec, self.scale,
+                                 self.group, autotune=True)
+            return self(x, path="fused")
         if self.tables is None:
             out = ops.pcilt_shared_gemv(
                 flat, self.shared.pool, self.shared.seg_idx, self.spec,
@@ -115,7 +195,8 @@ class PCILTLinear:
 
 def convert_kernel(kernel: jax.Array, act_spec: QuantSpec, act_scale,
                    group: int, weight_bits: Optional[int] = None,
-                   shared: bool = False) -> PCILTLinear:
+                   shared: bool = False, mesh=None,
+                   mesh_axis: str = "model") -> PCILTLinear:
     """Offline build for one [d_in, d_out] kernel.
 
     weight_bits: optionally quantize weights first (lowers table value
@@ -125,7 +206,12 @@ def convert_kernel(kernel: jax.Array, act_spec: QuantSpec, act_scale,
     ``path="gather"`` (pointer-gather reference), and its table memory scales
     with the weights' actual segment cardinality.  Usually combined with
     ``weight_bits`` (or otherwise weight-clustered kernels): dedup only bites
-    when whole ``[group, d_out]`` segments repeat."""
+    when whole ``[group, d_out]`` segments repeat.
+    mesh: build a tensor-parallel layer — tables are sharded on the segment
+    axis over ``mesh_axis`` at conversion time (shared pools become per-shard
+    local pools) and every call executes under ``shard_map`` with a psum of
+    the partial sums.  Conversion is the offline step, so the sharding is
+    too."""
     k = kernel.astype(jnp.float32)
     if kernel.ndim > 2:
         k = k.reshape(kernel.shape[0], -1)
@@ -139,9 +225,11 @@ def convert_kernel(kernel: jax.Array, act_spec: QuantSpec, act_scale,
         k = jnp.concatenate([k, jnp.zeros((pad, out), k.dtype)], 0)
     if shared:
         pool = build_shared_grouped_tables(k, act_spec, act_scale, group)
-        return PCILTLinear(None, act_spec, act_scale, group, shared=pool)
+        return PCILTLinear(None, act_spec, act_scale, group, shared=pool,
+                           mesh=mesh, mesh_axis=mesh_axis)
     tables = build_grouped_tables(k, act_spec, act_scale, group)
-    return PCILTLinear(tables, act_spec, act_scale, group)
+    return PCILTLinear(tables, act_spec, act_scale, group, mesh=mesh,
+                       mesh_axis=mesh_axis)
 
 
 def pcilt_apply(lin: PCILTLinear, x: jax.Array, path: str = "gather"):

@@ -27,6 +27,17 @@ the winning tiling — scales with ``X`` rather than ``G``.  ``us`` is strict
 JSON: ``null``, never a bare ``NaN`` token (which ``jq`` and strict parsers
 reject); ``TileCache`` both writes and tolerates it.
 
+**Sharded keying policy.**  Mesh execution (``core.lut_layers`` ``mesh=``)
+dispatches the kernels from inside ``shard_map``, so the shapes reaching
+``shape_key`` are the per-device *local* shard shapes — ``G/D`` segments,
+local pool cardinality — and ``PCILTLinear.tune`` likewise tunes on the
+local shard.  Two caches tuned at different device counts therefore record
+under different keys (``G=512`` at 1 device vs ``G=256`` at 2 vs ``G=128``
+at 4 ...) and can never collide; conversely, two deployments whose local
+problems are identical deliberately share one entry — the tiling depends
+only on the problem the kernel actually sees.  A failed sharded tune records
+``us: null`` exactly like an unsharded one.
+
 The cache file lives at ``$REPRO_PCILT_TUNE_CACHE`` (tests point this at a
 tmpdir) or ``~/.cache/repro-pcilt/tiles.json`` by default, and is written
 atomically (tmp + rename) so concurrent processes can share it.  On save, a

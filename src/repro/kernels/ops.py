@@ -27,6 +27,19 @@ Three pipelines are exposed per op:
   the pointer indirection is resolved inside the kernel
   (``pcilt_shared.py``) and the dense ``[G, V, O]`` tables are never
   materialized in HBM.  Shape keys carry the pool cardinality ``X``.
+
+Mesh execution (``core.lut_layers`` ``mesh=``) calls these same wrappers
+from inside ``shard_map``: the table operand arrives as one device's
+``[G/D, V, O]`` shard (``PartitionSpec("model", None, None)`` — only the
+segment axis shards) or its local ext.-3 pool (``ShardedSharedPool``:
+``[Xmax, V, O]`` with ``Xmax = max_d X_d`` the largest *local* pool
+cardinality, so staged bytes follow local X, not global G or X), and the
+wrapper's output is that shard's partial adder-tree sum — the ``psum`` over
+the model axis lives one level up, in ``lut_layers``, never in a kernel.
+Consequently the autotune shape keys are built from the **local** shapes
+(``G/D``, local ``X``): tunings recorded at different device counts occupy
+different keys, and two deployments whose local problems coincide share one
+entry on purpose.
 """
 
 from __future__ import annotations
@@ -242,7 +255,10 @@ def pcilt_fused_gemv(
     B, n = x.shape
     G, V, O = tables.shape
     if n != G * group:
-        raise ValueError(f"x trailing dim {n} != G*group = {G}*{group}")
+        raise ValueError(
+            f"x trailing dim {n} != G*group = {G}*{group} (the fused kernel "
+            f"packs contiguous segments; generalized SegmentPlans are "
+            f"rejected upstream at the core.lut_layers dispatch boundary)")
     key = atn.shape_key("fused_gemv", dtype=tables.dtype,
                         backend=jax.default_backend(),
                         B=B, G=G, V=V, O=O, g=group, bits=spec.bits)
@@ -369,7 +385,10 @@ def pcilt_shared_gemv(
     X, V, O = pool.shape
     G = int(seg_idx.shape[-1])
     if n != G * group:
-        raise ValueError(f"x trailing dim {n} != G*group = {G}*{group}")
+        raise ValueError(
+            f"x trailing dim {n} != G*group = {G}*{group} (the shared-pool "
+            f"kernel packs contiguous segments; generalized SegmentPlans are "
+            f"rejected upstream at the core.lut_layers dispatch boundary)")
     key = atn.shape_key("shared_gemv", dtype=pool.dtype,
                         backend=jax.default_backend(),
                         B=B, G=G, V=V, O=O, X=X, g=group, bits=spec.bits)

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_decode_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,3 +27,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / local runs)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_decode_mesh(model: int = 0):
+    """Tensor-parallel decode mesh: all of ``model`` on one axis, data=1.
+
+    The batch-starved decode GEMV has no batch to shard; what needs sharding
+    is the *weight state* — for PCILT layers the ``[G, V, O]`` tables, whose
+    segment axis shards over ``"model"`` (``nn.module.DEFAULT_RULES``
+    ``"table_seg"``) with the partial adder-tree sums psum'd.  ``model=0``
+    (default) spans every local device; tests pass 1/2/4/8 under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    return make_host_mesh(1, model or jax.device_count())

@@ -3,5 +3,6 @@
 from .module import (
     ParamSpec, ShardingRules, DEFAULT_RULES, logical_to_partition_spec,
     shardings, shape_structs, materialize, count_params, spec_bytes,
+    PCILT_TABLE_AXES, pcilt_table_pspec, pcilt_table_sharding,
 )
 from .layers import Ctx

@@ -41,6 +41,9 @@ __all__ = [
     "flatten_with_path",
     "count_params",
     "spec_bytes",
+    "PCILT_TABLE_AXES",
+    "pcilt_table_pspec",
+    "pcilt_table_sharding",
 ]
 
 
@@ -105,7 +108,43 @@ DEFAULT_RULES: Dict[str, Any] = {
     "ssm_heads": "model",
     "layers": None,
     "stage": "stage",
+    # PCILT [G, V, O] grouped tables (and ShardedSharedPool shard stacks):
+    # the segment axis G shards over the tensor-parallel axis; each device's
+    # fetch-and-sum partial is psum'd (core.lut_layers mesh execution).
+    "table_seg": "model",
 }
+
+
+#: Logical axes of a grouped PCILT table ``[G, V, O]``: only the segment
+#: axis shards — the offset axis V is addressed by every device's local
+#: fetches and the out axis rides the adder tree / psum.
+PCILT_TABLE_AXES: Tuple[Optional[str], ...] = ("table_seg", None, None)
+
+
+def pcilt_table_pspec(G: int, ndim: int = 3,
+                      rules: Optional[ShardingRules] = None,
+                      mesh_axis: Optional[str] = None) -> P:
+    """PartitionSpec for a ``[G, ...]``-leading PCILT operand.
+
+    The leading axis (``G`` for dense ``[G, V, O]`` tables, the shard stack
+    for ``ShardedSharedPool.pools``/``.seg_idx``) shards over the
+    ``"table_seg"`` rule with the usual divisibility fallback; trailing axes
+    replicate.  ``mesh_axis`` overrides the rule table (still applying the
+    fallback) for callers that shard over a non-default axis.
+    """
+    if mesh_axis is not None and rules is not None:
+        rules = ShardingRules(rules={"table_seg": mesh_axis},
+                              mesh_axis_sizes=rules.mesh_axis_sizes)
+    resolved = rules.mesh_axes_for("table_seg", G) if rules is not None else None
+    return P(resolved, *([None] * (ndim - 1)))
+
+
+def pcilt_table_sharding(mesh: Mesh, G: int, ndim: int = 3,
+                         rules: Optional[ShardingRules] = None,
+                         mesh_axis: Optional[str] = None) -> NamedSharding:
+    """NamedSharding placing a PCILT table operand on ``mesh`` (G sharded)."""
+    rules = rules or ShardingRules.for_mesh(mesh)
+    return NamedSharding(mesh, pcilt_table_pspec(G, ndim, rules, mesh_axis))
 
 
 def logical_to_partition_spec(

@@ -138,6 +138,35 @@ def test_segment_plan_skip_dup_nonadjacent():
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
 
+def test_generalized_plan_rejected_at_fused_boundary():
+    """Regression: a generalized SegmentPlan on the in-kernel-packing paths
+    must raise a typed, actionable ValueError at the lut_layers dispatch
+    boundary — not a bare shape error from deep inside the kernel wrapper."""
+    spec, x, w, scale, _ = _data(2)
+    plan = SegmentPlan(np.array([[0, 3], [5, 5], [-1, 7]], np.int32))
+    T = build_grouped_tables(w, spec, scale, 2, plan=plan)
+    # Spelling 1: the plan passed explicitly.
+    with pytest.raises(ValueError, match="SegmentPlan"):
+        pcilt_linear(x, T, spec, scale, 2, plan=plan, path="fused")
+    from repro.core import build_shared_grouped_tables
+
+    st = build_shared_grouped_tables(w, spec, scale, 2, plan=plan)
+    with pytest.raises(ValueError, match="SegmentPlan"):
+        pcilt_linear(x, st, spec, scale, 2, plan=plan, path="shared")
+    # Spelling 2: tables *built* from the plan (G*group != n) with plan
+    # omitted, as the fused signature forces — the boundary must still name
+    # the SegmentPlan cause and point at the host-packed paths.
+    with pytest.raises(ValueError, match="generalized SegmentPlan"):
+        pcilt_linear(x, T, spec, scale, 2, path="fused")
+    with pytest.raises(ValueError, match="host-packed"):
+        pcilt_linear(x, T, spec, scale, 2, path="fused")
+    # The plan still executes on the host-packed paths it is pointed at.
+    codes = quantize(x, spec, scale)
+    got = pcilt_linear(x, T, spec, scale, 2, plan=plan, path="gather")
+    np.testing.assert_allclose(got, lut_lookup(T, plan.pack(codes, spec.bits)),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_learnable_pcilt_trains():
     """Extension 4: table entries receive gradients and reduce a loss."""
     spec = QuantSpec(bits=2)

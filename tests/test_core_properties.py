@@ -1,17 +1,51 @@
-"""Hypothesis property tests for the PCILT invariants."""
+"""Property tests for the PCILT invariants.
+
+Runs under Hypothesis when it is installed (CI: ``requirements-dev.txt``).
+Without it, the ``@given`` tests report skipped — and the newer properties
+(``conv_same_pads`` vs the XLA oracle, quantize→dequantize codebook
+round-trips) additionally ship a seeded random sweep so those invariants
+stay locked even in environments without Hypothesis.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: any strategy call -> None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(**kwargs):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        def deco(fn):
+            def placeholder():
+                pass
+
+            placeholder.__name__ = fn.__name__
+            placeholder.__doc__ = fn.__doc__
+            return pytest.mark.skip(
+                reason="hypothesis not installed (seeded sweeps below still "
+                       "run)")(placeholder)
+        return deco
 
 from repro.core import (
-    QuantSpec, calibrate, quantize, dequantize,
+    QuantSpec, calibrate, quantize, dequantize, fake_quant, code_values,
     pack_offsets, unpack_offsets, offset_grid,
-    build_grouped_tables, pcilt_linear,
+    build_grouped_tables, pcilt_linear, conv_same_pads, im2col,
     table_bytes, grouped_table_bytes, shared_table_bytes,
     build_cost_multiplies,
 )
@@ -113,3 +147,90 @@ def test_build_then_infer_is_pure(bits, seed):
     T1 = build_grouped_tables(w, spec, 0.37, 2)
     T2 = build_grouped_tables(w, spec, 0.37, 2)
     np.testing.assert_array_equal(np.asarray(T1), np.asarray(T2))
+
+
+# ----------------------------------------------------------------------------
+# conv_same_pads vs the XLA oracle, and quantize<->dequantize round-trips.
+# These properties lock the PR 2 stride-aware "SAME" fix; they run under
+# Hypothesis when available and as a seeded random sweep otherwise.
+# ----------------------------------------------------------------------------
+
+
+def _check_conv_same_pads(h, w, kh, kw, stride):
+    """``conv_same_pads`` must agree with XLA: identical pad amounts
+    (``lax.padtype_to_pads`` is the oracle), identical output extents from
+    ``lax.conv_general_dilated``, and an im2col convolution built on those
+    pads must reproduce the lax convolution's values."""
+    pads = conv_same_pads(h, w, kh, kw, stride)
+    assert pads[0] == (0, 0) and pads[3] == (0, 0)
+    oracle = jax.lax.padtype_to_pads((h, w), (kh, kw), (stride, stride),
+                                     "SAME")
+    assert tuple(map(int, pads[1])) == tuple(map(int, oracle[0]))
+    assert tuple(map(int, pads[2])) == tuple(map(int, oracle[1]))
+
+    rng = np.random.default_rng(h * 1000 + w * 100 + kh * 10 + kw + stride)
+    x = jnp.asarray(rng.normal(size=(1, h, w, 2)), jnp.float32)
+    f = jnp.asarray(rng.normal(size=(kh, kw, 2, 3)), jnp.float32)
+    want = jax.lax.conv_general_dilated(
+        x, f, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    patches = im2col(x, kh, kw, stride, "SAME")
+    assert patches.shape[1:3] == want.shape[1:3], (
+        f"im2col extent {patches.shape[1:3]} != lax {want.shape[1:3]}")
+    got = patches @ f.reshape(kh * kw * 2, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def _check_codebook_roundtrip(bits, sym, scale):
+    """Every representable grid value quantizes to its own code and
+    dequantizes back bit-exactly, and fake-quant is idempotent — the
+    codebook is a fixed point of quantize∘dequantize."""
+    spec = QuantSpec(bits=bits, symmetric=sym)
+    cv = code_values(spec, scale)  # [K] the representable values
+    codes = quantize(cv, spec, scale)
+    np.testing.assert_array_equal(
+        np.asarray(codes), np.arange(spec.cardinality, dtype=np.uint8))
+    np.testing.assert_array_equal(
+        np.asarray(dequantize(codes, spec, scale)), np.asarray(cv))
+    rng = np.random.default_rng(bits * 7 + int(sym))
+    x = jnp.asarray(rng.normal(size=(64,)) * 3 * scale, jnp.float32)
+    once = fake_quant(x, spec, scale)
+    twice = fake_quant(once, spec, scale)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+if HAVE_HYPOTHESIS:
+
+    @SET
+    @given(h=st.integers(1, 17), w=st.integers(1, 17),
+           kh=st.integers(1, 5), kw=st.integers(1, 5),
+           stride=st.integers(1, 3))
+    def test_conv_same_pads_matches_lax(h, w, kh, kw, stride):
+        _check_conv_same_pads(h, w, kh, kw, stride)
+
+    @SET
+    @given(bits=st.integers(1, 8), sym=st.booleans(),
+           log_scale=st.floats(-3.0, 3.0))
+    def test_codebook_roundtrip(bits, sym, log_scale):
+        if bits == 1 and sym:
+            return  # rejected by QuantSpec validation
+        _check_codebook_roundtrip(bits, sym, float(10.0 ** log_scale))
+
+else:
+
+    @pytest.mark.parametrize("seed", range(25))
+    def test_conv_same_pads_matches_lax(seed):
+        rng = np.random.default_rng(seed)
+        _check_conv_same_pads(
+            int(rng.integers(1, 18)), int(rng.integers(1, 18)),
+            int(rng.integers(1, 6)), int(rng.integers(1, 6)),
+            int(rng.integers(1, 4)))
+
+    @pytest.mark.parametrize("seed", range(25))
+    def test_codebook_roundtrip(seed):
+        rng = np.random.default_rng(seed)
+        bits = int(rng.integers(1, 9))
+        sym = bool(rng.integers(0, 2)) and bits > 1
+        _check_codebook_roundtrip(bits, sym,
+                                  float(10.0 ** rng.uniform(-3, 3)))
