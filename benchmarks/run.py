@@ -24,8 +24,27 @@ Sections:
                per-device table bytes and decode-GEMV latency at
                model=1/2/4/8 over 8 forced host devices.  Results are
                written to BENCH_pr3.json.
+  dwconv.*   — the fused depthwise-conv1d pipeline (quantize + causal
+               tap-stack + pack + fetch in VMEM,
+               repro.kernels.pcilt_fused_dwconv1d) vs the host-packed
+               offsets path, at the Mamba conv-frontend shape (k=4) for
+               full-sequence and decode-window regimes.
+  shard_conv.* — sharded conv2d with in-VMEM im2col per shard (the
+               seg_offset kernels) vs the PR 3 host-im2col + sharded-GEMV
+               route at model=4 (subprocess, forced host devices).
+               dwconv.* and shard_conv.* write BENCH_pr4.json.
   roofline.* — summary terms per hillclimbed cell (full table:
                ``python -m benchmarks.roofline``).
+
+A sub-benchmark that raises no longer silently vanishes: the failure is
+recorded as a ``skipped`` row — both in the CSV (``skipped: <reason>`` in
+the derived column) and in the JSON payload (``"skipped"`` key on the row
+and a top-level ``skipped`` map) — so a BENCH json can never silently
+under-report coverage.
+
+``--smoke`` runs every section with minimal reps and writes the JSON
+payloads to a temp directory (the checked-in BENCH files are not
+clobbered): the CI guard that keeps this harness executable.
 """
 
 from __future__ import annotations
@@ -34,20 +53,61 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 import time
 
 import numpy as np
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+#: set by ``main(--smoke)``: minimal reps, JSON to a tempdir.
+_SMOKE = False
+
 
 def _timeit(fn, reps=5, warmup=2):
+    """Median-of-reps microseconds per call (the median shrugs off the
+    scheduler hiccups that dominate shared/throttled CPU runners, where a
+    mean-of-reps ratio between two paths can swing 2x run to run)."""
+    if _SMOKE:
+        reps, warmup = 1, 1
     for _ in range(warmup):
         fn()
-    t0 = time.perf_counter()
+    times = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         fn()
-    return (time.perf_counter() - t0) / reps * 1e6  # us
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6  # us
+
+
+def _bench_path(bench_json: str) -> str:
+    return bench_json if os.path.isabs(bench_json) else os.path.join(
+        REPO_ROOT, bench_json)
+
+
+_SKIP_PREFIX = "skipped: "
+
+
+def _guard(rows, skipped, name, fn):
+    """Run one sub-benchmark; a failure records a skip row instead of
+    silently dropping the whole section (or killing the harness)."""
+    try:
+        fn()
+    except Exception as e:  # noqa: BLE001 — any failure becomes a skip row
+        reason = f"{type(e).__name__}: {e}".splitlines()[0][:160]
+        skipped[name] = reason
+        rows.append((name, 0.0, _SKIP_PREFIX + reason))
+
+
+def _json_rows(rows):
+    out = []
+    for name, us, derived in rows:
+        d = {"name": name, "us_per_call": round(float(us), 2),
+             "derived": derived}
+        if isinstance(derived, str) and derived.startswith(_SKIP_PREFIX):
+            d["skipped"] = derived[len(_SKIP_PREFIX):]
+        out.append(d)
+    return out
 
 
 def paper_rows():
@@ -116,58 +176,64 @@ def fused_rows(bench_json: str = "BENCH_pr1.json"):
     rng = np.random.default_rng(0)
     rows = []
     speedups = {}
-
-    # --- LM decode-GEMV regime: batch-starved projection [n -> O] ---------
+    skipped = {}
     bits, group = 2, 2
     spec = QuantSpec(bits)
-    B, n, O = 8, 1024, 1024
-    x = jnp.asarray(np.abs(rng.normal(size=(B, n))), jnp.float32)
-    w = jnp.asarray(rng.normal(size=(n, O)), jnp.float32)
-    s = calibrate(x, spec)
-    T = build_grouped_tables(w, spec, s, group)
-    # tune-once-and-record through the persistent lookup table; the jitted
-    # dispatch below then hits the cache at trace time (zero-cost lookup).
-    ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
-    host = jax.jit(lambda x: pcilt_linear(x, T, spec, s, group, path="kernel"))
-    fused = jax.jit(lambda x: pcilt_linear(x, T, spec, s, group, path="fused"))
-    host(x).block_until_ready()
-    fused(x).block_until_ready()
-    t_host = _timeit(lambda: host(x).block_until_ready())
-    t_fused = _timeit(lambda: fused(x).block_until_ready())
-    speedups["decode_gemv"] = t_host / t_fused
-    tag = f"decode_b{bits}g{group}_{n}x{O}"
-    rows.append((f"fused.{tag}_hostpacked", t_host, ""))
-    rows.append((f"fused.{tag}_fused", t_fused,
-                 f"{t_host / t_fused:.2f}x vs host-packed kernel"))
 
-    Tb = T.astype(jnp.bfloat16)
-    ops.pcilt_fused_gemv(x, Tb, spec, s, group, autotune=True)
-    fused_b = jax.jit(lambda x: pcilt_linear(x, Tb, spec, s, group, path="fused"))
-    fused_b(x).block_until_ready()
-    t_fused_b = _timeit(lambda: fused_b(x).block_until_ready())
-    speedups["decode_gemv_bf16"] = t_host / t_fused_b
-    rows.append((f"fused.{tag}_fused_bf16tab", t_fused_b,
-                 f"{t_host / t_fused_b:.2f}x vs host-packed kernel"))
+    def gemv_block():
+        # --- LM decode-GEMV regime: batch-starved projection [n -> O] -----
+        B, n, O = 8, 1024, 1024
+        x = jnp.asarray(np.abs(rng.normal(size=(B, n))), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(n, O)), jnp.float32)
+        s = calibrate(x, spec)
+        T = build_grouped_tables(w, spec, s, group)
+        # tune-once-and-record through the persistent lookup table; the
+        # jitted dispatch below then hits the cache at trace time.
+        ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
+        host = jax.jit(lambda x: pcilt_linear(x, T, spec, s, group, path="kernel"))
+        fused = jax.jit(lambda x: pcilt_linear(x, T, spec, s, group, path="fused"))
+        host(x).block_until_ready()
+        fused(x).block_until_ready()
+        t_host = _timeit(lambda: host(x).block_until_ready())
+        t_fused = _timeit(lambda: fused(x).block_until_ready())
+        speedups["decode_gemv"] = t_host / t_fused
+        tag = f"decode_b{bits}g{group}_{n}x{O}"
+        rows.append((f"fused.{tag}_hostpacked", t_host, ""))
+        rows.append((f"fused.{tag}_fused", t_fused,
+                     f"{t_host / t_fused:.2f}x vs host-packed kernel"))
 
-    # --- the paper's conv regime: 5x5 filter, small image, low-bit codes --
-    B, H, W, C, kh, kw, Co = 2, 14, 14, 8, 5, 5, 16
-    xc = jnp.asarray(np.abs(rng.normal(size=(B, H, W, C))), jnp.float32)
-    f = jnp.asarray(rng.normal(size=(kh, kw, C, Co)), jnp.float32)
-    sc = calibrate(xc, spec)
-    nf = kh * kw * C
-    Tc = build_grouped_tables(f.reshape(nf, Co), spec, sc, group)
-    ops.pcilt_fused_conv2d(xc, Tc, spec, sc, group, kh, kw, autotune=True)
-    hostc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, path="kernel"))
-    fusedc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, path="fused"))
-    hostc(xc).block_until_ready()
-    fusedc(xc).block_until_ready()
-    t_hostc = _timeit(lambda: hostc(xc).block_until_ready())
-    t_fusedc = _timeit(lambda: fusedc(xc).block_until_ready())
-    speedups["conv5x5"] = t_hostc / t_fusedc
-    tagc = f"conv5x5_b{bits}g{group}_{C}to{Co}"
-    rows.append((f"fused.{tagc}_hostpacked", t_hostc, ""))
-    rows.append((f"fused.{tagc}_fused", t_fusedc,
-                 f"{t_hostc / t_fusedc:.2f}x vs host-packed kernel"))
+        Tb = T.astype(jnp.bfloat16)
+        ops.pcilt_fused_gemv(x, Tb, spec, s, group, autotune=True)
+        fused_b = jax.jit(lambda x: pcilt_linear(x, Tb, spec, s, group, path="fused"))
+        fused_b(x).block_until_ready()
+        t_fused_b = _timeit(lambda: fused_b(x).block_until_ready())
+        speedups["decode_gemv_bf16"] = t_host / t_fused_b
+        rows.append((f"fused.{tag}_fused_bf16tab", t_fused_b,
+                     f"{t_host / t_fused_b:.2f}x vs host-packed kernel"))
+
+    def conv_block():
+        # --- the paper's conv regime: 5x5 filter, small image, low bits ---
+        B, H, W, C, kh, kw, Co = 2, 14, 14, 8, 5, 5, 16
+        xc = jnp.asarray(np.abs(rng.normal(size=(B, H, W, C))), jnp.float32)
+        f = jnp.asarray(rng.normal(size=(kh, kw, C, Co)), jnp.float32)
+        sc = calibrate(xc, spec)
+        nf = kh * kw * C
+        Tc = build_grouped_tables(f.reshape(nf, Co), spec, sc, group)
+        ops.pcilt_fused_conv2d(xc, Tc, spec, sc, group, kh, kw, autotune=True)
+        hostc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, path="kernel"))
+        fusedc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, path="fused"))
+        hostc(xc).block_until_ready()
+        fusedc(xc).block_until_ready()
+        t_hostc = _timeit(lambda: hostc(xc).block_until_ready())
+        t_fusedc = _timeit(lambda: fusedc(xc).block_until_ready())
+        speedups["conv5x5"] = t_hostc / t_fusedc
+        tagc = f"conv5x5_b{bits}g{group}_{C}to{Co}"
+        rows.append((f"fused.{tagc}_hostpacked", t_hostc, ""))
+        rows.append((f"fused.{tagc}_fused", t_fusedc,
+                     f"{t_hostc / t_fusedc:.2f}x vs host-packed kernel"))
+
+    _guard(rows, skipped, "fused.decode_gemv", gemv_block)
+    _guard(rows, skipped, "fused.conv5x5", conv_block)
 
     if bench_json:
         payload = {
@@ -177,12 +243,10 @@ def fused_rows(bench_json: str = "BENCH_pr1.json"):
                       else "compiled TPU",
             "target_min_speedup": 1.3,
             "speedup": {k: round(v, 3) for k, v in speedups.items()},
-            "rows": [
-                {"name": name, "us_per_call": round(us, 2), "derived": derived}
-                for name, us, derived in rows
-            ],
+            "skipped": skipped,
+            "rows": _json_rows(rows),
         }
-        with open(os.path.join(REPO_ROOT, bench_json), "w") as fp:
+        with open(_bench_path(bench_json), "w") as fp:
             json.dump(payload, fp, indent=1)
     return rows
 
@@ -199,6 +263,9 @@ def shared_rows(bench_json: str = "BENCH_pr2.json"):
     rows = []
     speedups = {}
     ratios = {}
+    skipped = {}
+    bits, group = 2, 2
+    spec = QuantSpec(bits)
 
     def codebook_weights(n, O, group, X):
         # Weight-clustered / palettized regime (the ext.-3 precondition):
@@ -208,76 +275,80 @@ def shared_rows(bench_json: str = "BENCH_pr2.json"):
         return jnp.asarray(cb[rng.integers(0, X, G)].reshape(n, O),
                            jnp.float32)
 
-    # --- LM decode-GEMV regime over a weight-clustered projection ---------
-    bits, group = 2, 2
-    spec = QuantSpec(bits)
-    B, n, O, X = 8, 1024, 1024, 16
-    x = jnp.asarray(np.abs(rng.normal(size=(B, n))), jnp.float32)
-    w = codebook_weights(n, O, group, X)
-    s = calibrate(x, spec)
-    st = build_shared_grouped_tables(w, spec, s, group)
-    T = st.materialize()  # dense [G, V, O] (for the dense-fused comparison)
-    ops.pcilt_shared_gemv(x, st.pool, st.seg_idx, spec, s, group,
-                          autotune=True)
-    ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
-    ga = jax.jit(lambda x: pcilt_linear(x, st, spec, s, group, path="gather"))
-    sh = jax.jit(lambda x: pcilt_linear(x, st, spec, s, group, path="shared"))
-    fu = jax.jit(lambda x: pcilt_linear(x, T, spec, s, group, path="fused"))
-    for f in (ga, sh, fu):
-        f(x).block_until_ready()
-    t_ga = _timeit(lambda: ga(x).block_until_ready())
-    t_sh = _timeit(lambda: sh(x).block_until_ready())
-    t_fu = _timeit(lambda: fu(x).block_until_ready())
-    speedups["decode_gemv_vs_gather"] = t_ga / t_sh
-    speedups["decode_gemv_vs_dense_fused"] = t_fu / t_sh
-    ratios["decode_gemv_table_mem"] = st.dedup_ratio
-    tag = f"decode_b{bits}g{group}_{n}x{O}_X{st.pool_cardinality}"
-    rows.append((f"shared.{tag}_gather", t_ga, ""))
-    rows.append((f"shared.{tag}_dense_fused", t_fu, ""))
-    rows.append((f"shared.{tag}_fused_shared", t_sh,
-                 f"{t_ga / t_sh:.2f}x vs gather, {t_fu / t_sh:.2f}x vs "
-                 f"dense-fused"))
-    rows.append((f"shared.{tag}_table_mem_ratio", st.dedup_ratio,
-                 f"dense {st.dense_bytes()/2**20:.1f} MiB -> pool "
-                 f"{st.pool_bytes()/2**20:.2f} MiB"))
+    def gemv_block():
+        # --- LM decode-GEMV regime over a weight-clustered projection -----
+        B, n, O, X = 8, 1024, 1024, 16
+        x = jnp.asarray(np.abs(rng.normal(size=(B, n))), jnp.float32)
+        w = codebook_weights(n, O, group, X)
+        s = calibrate(x, spec)
+        st = build_shared_grouped_tables(w, spec, s, group)
+        T = st.materialize()  # dense [G, V, O] (for the dense-fused comparison)
+        ops.pcilt_shared_gemv(x, st.pool, st.seg_idx, spec, s, group,
+                              autotune=True)
+        ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
+        ga = jax.jit(lambda x: pcilt_linear(x, st, spec, s, group, path="gather"))
+        sh = jax.jit(lambda x: pcilt_linear(x, st, spec, s, group, path="shared"))
+        fu = jax.jit(lambda x: pcilt_linear(x, T, spec, s, group, path="fused"))
+        for f in (ga, sh, fu):
+            f(x).block_until_ready()
+        t_ga = _timeit(lambda: ga(x).block_until_ready())
+        t_sh = _timeit(lambda: sh(x).block_until_ready())
+        t_fu = _timeit(lambda: fu(x).block_until_ready())
+        speedups["decode_gemv_vs_gather"] = t_ga / t_sh
+        speedups["decode_gemv_vs_dense_fused"] = t_fu / t_sh
+        ratios["decode_gemv_table_mem"] = st.dedup_ratio
+        tag = f"decode_b{bits}g{group}_{n}x{O}_X{st.pool_cardinality}"
+        rows.append((f"shared.{tag}_gather", t_ga, ""))
+        rows.append((f"shared.{tag}_dense_fused", t_fu, ""))
+        rows.append((f"shared.{tag}_fused_shared", t_sh,
+                     f"{t_ga / t_sh:.2f}x vs gather, {t_fu / t_sh:.2f}x vs "
+                     f"dense-fused"))
+        rows.append((f"shared.{tag}_table_mem_ratio", st.dedup_ratio,
+                     f"dense {st.dense_bytes()/2**20:.1f} MiB -> pool "
+                     f"{st.pool_bytes()/2**20:.2f} MiB"))
 
-    # --- the paper's conv regime: 5x5 filter, weight-clustered.  Co=64 (a
-    # realistic channel width) is where the pooled X*V-lane contraction pulls
-    # clear of both the gather and the dense Gb*V-lane fused contraction. ---
-    B, H, W, C, kh, kw, Co, Xc = 2, 14, 14, 8, 5, 5, 64, 8
-    xc = jnp.asarray(np.abs(rng.normal(size=(B, H, W, C))), jnp.float32)
-    nf = kh * kw * C
-    wc = codebook_weights(nf, Co, group, Xc)
-    f = jnp.asarray(np.asarray(wc).reshape(kh, kw, C, Co), jnp.float32)
-    sc = calibrate(xc, spec)
-    stc = build_shared_grouped_tables(wc, spec, sc, group)
-    Tc = stc.materialize()
-    ops.pcilt_shared_conv2d(xc, stc.pool, stc.seg_idx, spec, sc, group,
-                            kh, kw, autotune=True)
-    ops.pcilt_fused_conv2d(xc, Tc, spec, sc, group, kh, kw, autotune=True)
-    gac = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, tables=stc,
-                                         path="gather"))
-    shc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, tables=stc,
-                                         path="shared"))
-    fuc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, tables=Tc,
-                                         path="fused"))
-    for fn in (gac, shc, fuc):
-        fn(xc).block_until_ready()
-    t_gac = _timeit(lambda: gac(xc).block_until_ready())
-    t_shc = _timeit(lambda: shc(xc).block_until_ready())
-    t_fuc = _timeit(lambda: fuc(xc).block_until_ready())
-    speedups["conv5x5_vs_gather"] = t_gac / t_shc
-    speedups["conv5x5_vs_dense_fused"] = t_fuc / t_shc
-    ratios["conv5x5_table_mem"] = stc.dedup_ratio
-    tagc = f"conv5x5_b{bits}g{group}_{C}to{Co}_X{stc.pool_cardinality}"
-    rows.append((f"shared.{tagc}_gather", t_gac, ""))
-    rows.append((f"shared.{tagc}_dense_fused", t_fuc, ""))
-    rows.append((f"shared.{tagc}_fused_shared", t_shc,
-                 f"{t_gac / t_shc:.2f}x vs gather, {t_fuc / t_shc:.2f}x vs "
-                 f"dense-fused"))
-    rows.append((f"shared.{tagc}_table_mem_ratio", stc.dedup_ratio,
-                 f"dense {stc.dense_bytes()/2**10:.0f} KiB -> pool "
-                 f"{stc.pool_bytes()/2**10:.0f} KiB"))
+    def conv_block():
+        # --- the paper's conv regime: 5x5 filter, weight-clustered.  Co=64
+        # (a realistic channel width) is where the pooled X*V-lane
+        # contraction pulls clear of both the gather and the dense
+        # Gb*V-lane fused contraction. ---
+        B, H, W, C, kh, kw, Co, Xc = 2, 14, 14, 8, 5, 5, 64, 8
+        xc = jnp.asarray(np.abs(rng.normal(size=(B, H, W, C))), jnp.float32)
+        nf = kh * kw * C
+        wc = codebook_weights(nf, Co, group, Xc)
+        f = jnp.asarray(np.asarray(wc).reshape(kh, kw, C, Co), jnp.float32)
+        sc = calibrate(xc, spec)
+        stc = build_shared_grouped_tables(wc, spec, sc, group)
+        Tc = stc.materialize()
+        ops.pcilt_shared_conv2d(xc, stc.pool, stc.seg_idx, spec, sc, group,
+                                kh, kw, autotune=True)
+        ops.pcilt_fused_conv2d(xc, Tc, spec, sc, group, kh, kw, autotune=True)
+        gac = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, tables=stc,
+                                             path="gather"))
+        shc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, tables=stc,
+                                             path="shared"))
+        fuc = jax.jit(lambda x: pcilt_conv2d(x, f, spec, sc, group, tables=Tc,
+                                             path="fused"))
+        for fn in (gac, shc, fuc):
+            fn(xc).block_until_ready()
+        t_gac = _timeit(lambda: gac(xc).block_until_ready())
+        t_shc = _timeit(lambda: shc(xc).block_until_ready())
+        t_fuc = _timeit(lambda: fuc(xc).block_until_ready())
+        speedups["conv5x5_vs_gather"] = t_gac / t_shc
+        speedups["conv5x5_vs_dense_fused"] = t_fuc / t_shc
+        ratios["conv5x5_table_mem"] = stc.dedup_ratio
+        tagc = f"conv5x5_b{bits}g{group}_{C}to{Co}_X{stc.pool_cardinality}"
+        rows.append((f"shared.{tagc}_gather", t_gac, ""))
+        rows.append((f"shared.{tagc}_dense_fused", t_fuc, ""))
+        rows.append((f"shared.{tagc}_fused_shared", t_shc,
+                     f"{t_gac / t_shc:.2f}x vs gather, {t_fuc / t_shc:.2f}x "
+                     f"vs dense-fused"))
+        rows.append((f"shared.{tagc}_table_mem_ratio", stc.dedup_ratio,
+                     f"dense {stc.dense_bytes()/2**10:.0f} KiB -> pool "
+                     f"{stc.pool_bytes()/2**10:.0f} KiB"))
+
+    _guard(rows, skipped, "shared.decode_gemv", gemv_block)
+    _guard(rows, skipped, "shared.conv5x5", conv_block)
 
     if bench_json:
         payload = {
@@ -288,38 +359,150 @@ def shared_rows(bench_json: str = "BENCH_pr2.json"):
             "target_min_speedup": 1.0,
             "speedup": {k: round(v, 3) for k, v in speedups.items()},
             "table_mem_ratio": {k: round(v, 3) for k, v in ratios.items()},
-            "rows": [
-                {"name": name, "us_per_call": round(us, 2), "derived": derived}
-                for name, us, derived in rows
-            ],
+            "skipped": skipped,
+            "rows": _json_rows(rows),
         }
-        with open(os.path.join(REPO_ROOT, bench_json), "w") as fp:
+        with open(_bench_path(bench_json), "w") as fp:
             json.dump(payload, fp, indent=1)
     return rows
 
 
-def shard_rows(bench_json: str = "BENCH_pr3.json"):
+def _shard_subprocess(argv, timeout=1800):
     """Run benchmarks/shard_bench.py in a subprocess (it must force the host
     device count before jax initializes — this process has usually already
-    initialized jax on 1 device) and relay the rows it recorded."""
+    initialized jax on 1 device).  Raises RuntimeError with a one-line
+    detail on timeout or a non-zero exit."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     try:
         r = subprocess.run(
-            [sys.executable, "-m", "benchmarks.shard_bench"],
+            [sys.executable, "-m", "benchmarks.shard_bench"] + argv,
             cwd=REPO_ROOT, env=env, capture_output=True, text=True,
-            timeout=1800,
+            timeout=timeout,
         )
     except subprocess.TimeoutExpired:
-        return [("shard.error", 0.0, "shard_bench timed out after 1800s")]
+        raise RuntimeError(f"shard_bench timed out after {timeout}s") from None
     if r.returncode != 0:
         lines = (r.stderr or r.stdout).strip().splitlines()
-        detail = lines[-1][:120] if lines else f"exit code {r.returncode}"
-        return [("shard.error", 0.0, detail)]
-    payload = json.load(open(os.path.join(REPO_ROOT, bench_json)))
+        raise RuntimeError(lines[-1][:160] if lines
+                           else f"exit code {r.returncode}")
+
+
+def shard_rows(bench_json: str = "BENCH_pr3.json"):
+    """Relay the rows the shard_bench subprocess recorded (shard.* section)."""
+    out = _bench_path(bench_json)
+    try:
+        _shard_subprocess(["--out", out] + (["--smoke"] if _SMOKE else []))
+    except RuntimeError as e:
+        return [("shard.error", 0.0, _SKIP_PREFIX + str(e))]
+    payload = json.load(open(out))
     return [(row["name"], row["us_per_call"], row["derived"])
             for row in payload["rows"]]
+
+
+def pr4_rows(bench_json: str = "BENCH_pr4.json"):
+    """dwconv.* + shard_conv.* -> BENCH_pr4.json.
+
+    * **dwconv.*** — the fused depthwise-conv1d pipeline vs the host-packed
+      offsets path at the Mamba conv-frontend shape (k=4 taps, 2-bit codes):
+      the full-sequence causal regime and the ``[B, k, C]`` decode-window
+      regime (one fetch per channel).
+    * **shard_conv.*** — sharded conv2d with in-VMEM im2col per shard (the
+      ``seg_offset`` kernels) vs the PR 3 host-im2col + sharded-GEMV route
+      at model=4, measured in the forced-host-device subprocess.
+    """
+    import jax
+
+    rows = []
+    speedups = {}
+    skipped = {}
+
+    def dwconv_block():
+        import jax.numpy as jnp
+        from repro.core import QuantSpec, calibrate
+        from repro.core.lut_layers import (build_dwconv_tables,
+                                           pcilt_depthwise_conv1d)
+        from repro.kernels import ops
+
+        # Batch-starved decode-chunk regime (the PCILT serving target): on a
+        # throttled CPU runner the host kernel's 256-step V-loop overhead is
+        # the signal here, and it dominates most reliably at small row tiles.
+        rng = np.random.default_rng(0)
+        bits, k = 2, 4
+        B, T, C = 1, 128, 96
+        if _SMOKE:
+            T, C = 64, 64
+        spec = QuantSpec(bits)
+        x = jnp.asarray(np.abs(rng.normal(size=(B, T, C))), jnp.float32)
+        f = jnp.asarray(rng.normal(size=(k, C)), jnp.float32)
+        s = calibrate(x, spec)
+        tab = build_dwconv_tables(f, spec, s)
+        ops.pcilt_fused_dwconv1d(x, tab, spec, s, k, autotune=True)
+        host = jax.jit(lambda a: pcilt_depthwise_conv1d(
+            a, f, spec, s, tables=tab, path="kernel"))
+        fused = jax.jit(lambda a: pcilt_depthwise_conv1d(
+            a, f, spec, s, tables=tab, path="fused"))
+        host(x).block_until_ready()
+        fused(x).block_until_ready()
+        t_host = _timeit(lambda: host(x).block_until_ready())
+        t_fused = _timeit(lambda: fused(x).block_until_ready())
+        speedups["dwconv_fused_vs_hostpacked"] = t_host / t_fused
+        tag = f"causal_b{bits}k{k}_T{T}xC{C}"
+        rows.append((f"dwconv.{tag}_hostpacked", t_host,
+                     "host quantize+tap-stack+pack, V-loop kernel"))
+        rows.append((f"dwconv.{tag}_fused", t_fused,
+                     f"{t_host / t_fused:.2f}x vs host-packed offsets"))
+
+        # decode-window regime: the assembled [B, k, C] window, one output
+        xw = x[:, :k]
+        ops.pcilt_fused_dwconv1d(xw, tab, spec, s, k, padding="VALID",
+                                 autotune=True)
+        hostw = jax.jit(lambda a: pcilt_depthwise_conv1d(
+            a, f, spec, s, tables=tab, path="kernel", padding="VALID"))
+        fusedw = jax.jit(lambda a: pcilt_depthwise_conv1d(
+            a, f, spec, s, tables=tab, path="fused", padding="VALID"))
+        hostw(xw).block_until_ready()
+        fusedw(xw).block_until_ready()
+        t_hw = _timeit(lambda: hostw(xw).block_until_ready())
+        t_fw = _timeit(lambda: fusedw(xw).block_until_ready())
+        speedups["dwconv_decode_window_fused_vs_hostpacked"] = t_hw / t_fw
+        rows.append((f"dwconv.decode_window_b{bits}k{k}_C{C}_hostpacked",
+                     t_hw, ""))
+        rows.append((f"dwconv.decode_window_b{bits}k{k}_C{C}_fused", t_fw,
+                     f"{t_hw / t_fw:.2f}x vs host-packed offsets"))
+
+    def shard_conv_block():
+        tmp = tempfile.NamedTemporaryFile(suffix=".json", delete=False)
+        tmp.close()
+        try:
+            _shard_subprocess(["--conv-json", tmp.name, "--model", "4"]
+                              + (["--smoke"] if _SMOKE else []))
+            payload = json.load(open(tmp.name))
+            speedups.update(payload["speedup"])
+            rows.extend((row["name"], row["us_per_call"], row["derived"])
+                        for row in payload["rows"])
+        finally:
+            os.unlink(tmp.name)
+
+    _guard(rows, skipped, "dwconv.causal", dwconv_block)
+    _guard(rows, skipped, "shard_conv.model4", shard_conv_block)
+
+    if bench_json:
+        payload = {
+            "pr": 4,
+            "backend": jax.default_backend(),
+            "timing": "interpret-mode CPU" if jax.default_backend() != "tpu"
+                      else "compiled TPU",
+            "target_min_speedup": {"dwconv_fused_vs_hostpacked": 2.0,
+                                   "shard_conv_in_vmem_vs_host_im2col_m4": 1.2},
+            "speedup": {k: round(v, 3) for k, v in speedups.items()},
+            "skipped": skipped,
+            "rows": _json_rows(rows),
+        }
+        with open(_bench_path(bench_json), "w") as fp:
+            json.dump(payload, fp, indent=1)
+    return rows
 
 
 def roofline_rows():
@@ -349,12 +532,46 @@ def roofline_rows():
     return rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+    import functools
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal reps, JSON to a tempdir (CI harness guard "
+                         "— checked-in BENCH files are not touched)")
+    args = ap.parse_args(argv)
+    global _SMOKE
+    _SMOKE = args.smoke
+    sections = [paper_rows, micro_rows, lm_rows, fused_rows, shared_rows,
+                shard_rows, pr4_rows, roofline_rows]
+    if args.smoke:
+        outdir = tempfile.mkdtemp(prefix="bench-smoke-")
+        os.environ.setdefault("REPRO_PCILT_TUNE_CACHE",
+                              os.path.join(outdir, "tiles.json"))
+        print(f"# smoke mode: JSON payloads under {outdir}", file=sys.stderr)
+        for i, fn in enumerate(sections):
+            if "bench_json" in fn.__code__.co_varnames:
+                sections[i] = functools.partial(
+                    fn, bench_json=os.path.join(
+                        outdir, fn.__defaults__[0]))
     print("name,us_per_call,derived")
-    for section in (paper_rows, micro_rows, lm_rows, fused_rows, shared_rows,
-                    shard_rows, roofline_rows):
-        for name, val, derived in section():
+    failures = 0
+    for section in sections:
+        try:
+            section_rows = section()
+        except Exception as e:  # noqa: BLE001 — one section must not kill the rest
+            fn = section.func if hasattr(section, "func") else section
+            reason = f"{type(e).__name__}: {e}".splitlines()[0][:160]
+            section_rows = [(f"{fn.__name__}.error", 0.0,
+                             _SKIP_PREFIX + reason)]
+            failures += 1
+        for name, val, derived in section_rows:
+            if isinstance(derived, str) and derived.startswith(_SKIP_PREFIX):
+                failures += 1
             print(f"{name},{val},{derived}")
+    if args.smoke and failures:
+        sys.exit(1)  # the CI smoke run must fail loudly, not rot silently
 
 
 if __name__ == "__main__":

@@ -17,6 +17,12 @@ Measures, at ``model`` axis sizes 1/2/4/8 over 8 forced host devices:
   with its single psum.  On CPU interpret mode this measures dispatch
   plumbing, not TPU kernels; the number seeds the trajectory the TPU tune
   pass will overwrite.
+
+``--conv-json PATH`` runs the ``shard_conv.*`` section instead (PR 4): the
+sharded conv2d with in-VMEM im2col per shard (the conv kernels'
+``seg_offset`` parameter) against the reconstructed PR 3 host-im2col +
+sharded-GEMV route, at ``--model`` (default 4).  ``benchmarks/run.py``
+merges the emitted JSON into BENCH_pr4.json.
 """
 
 from __future__ import annotations
@@ -38,15 +44,19 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _timeit(fn, reps=5, warmup=2):
+    """Median-of-reps microseconds per call (robust to scheduler hiccups on
+    shared/throttled CPU runners — see benchmarks/run.py)."""
     for _ in range(warmup):
         fn()
-    t0 = time.perf_counter()
+    times = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         fn()
-    return (time.perf_counter() - t0) / reps * 1e6  # us
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6  # us
 
 
-def shard_rows(bench_json: str = "BENCH_pr3.json"):
+def shard_rows(bench_json: str = "BENCH_pr3.json", smoke: bool = False):
     import jax
     import jax.numpy as jnp
     from repro.core import QuantSpec, calibrate
@@ -67,6 +77,8 @@ def shard_rows(bench_json: str = "BENCH_pr3.json"):
     bits, group = 2, 2
     spec = QuantSpec(bits)
     B, n, O, X = 8, 1024, 512, 16
+    if smoke:
+        n, O = 256, 128
     x = jnp.asarray(np.abs(rng.normal(size=(B, n))), jnp.float32)
     w = jnp.asarray(rng.normal(size=(n, O)), jnp.float32)
     cb = rng.normal(size=(X, group, O))
@@ -74,14 +86,15 @@ def shard_rows(bench_json: str = "BENCH_pr3.json"):
                      jnp.float32)
     s = calibrate(x, spec)
 
-    for model in (1, 2, 4, 8):
+    for model in (1, 8) if smoke else (1, 2, 4, 8):
         mesh = make_decode_mesh(model)
         lin = convert_kernel(w, spec, s, group, mesh=mesh)
         lsh = convert_kernel(wc, spec, s, group, shared=True, mesh=mesh)
         lin.tune(x)  # local-shard-shape key into the persistent lookup table
         fn = jax.jit(lambda a: lin(a, path="fused"))
         fn(x).block_until_ready()
-        t = _timeit(lambda: fn(x).block_until_ready())
+        t = _timeit(lambda: fn(x).block_until_ready(),
+                    reps=1 if smoke else 5, warmup=1 if smoke else 2)
         d = str(model)
         bytes_per_dev[d] = lin.per_device_table_bytes()
         pool_bytes_per_dev[d] = lsh.per_device_table_bytes()
@@ -106,6 +119,7 @@ def shard_rows(bench_json: str = "BENCH_pr3.json"):
         "backend": jax.default_backend(),
         "timing": "interpret-mode CPU" if jax.default_backend() != "tpu"
                   else "compiled TPU",
+        "smoke": smoke,
         "forced_host_devices": FORCED_DEVICES,
         "per_device_table_bytes": bytes_per_dev,
         "per_device_shared_pool_bytes": pool_bytes_per_dev,
@@ -123,8 +137,102 @@ def shard_rows(bench_json: str = "BENCH_pr3.json"):
     return rows
 
 
-def main() -> None:
-    for name, val, derived in shard_rows():
+def shard_conv_rows(model: int = 4, smoke: bool = False):
+    """Sharded conv2d: the PR 4 in-VMEM-im2col route vs the PR 3 detour.
+
+    Both execute the *same* sharded fused GEMV-or-conv kernels over the same
+    ``[G/D, V, O]`` table shards with one psum; the difference is purely
+    where the im2col happens — PR 3 extracted patches host-side and fed the
+    sharded fused *GEMV*, PR 4 passes the kernels a ``seg_offset`` and
+    rebuilds the patch in VMEM per shard.  Returns ``(rows, speedup)``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import QuantSpec, build_grouped_tables, calibrate
+    from repro.core.lut_layers import im2col, pcilt_conv2d, pcilt_linear
+    from repro.kernels import ops
+    from repro.launch.mesh import make_decode_mesh
+
+    rng = np.random.default_rng(0)
+    bits, group = 2, 2
+    spec = QuantSpec(bits)
+    B, H, W, C, kh, kw, Co = 2, 20, 20, 8, 5, 5, 64
+    if smoke:
+        B, H, W, Co = 1, 10, 10, 32
+    x = jnp.asarray(np.abs(rng.normal(size=(B, H, W, C))), jnp.float32)
+    f = jnp.asarray(rng.normal(size=(kh, kw, C, Co)), jnp.float32)
+    s = calibrate(x, spec)
+    n = kh * kw * C
+    G = n // group
+    assert G % model == 0, (G, model)
+    T = build_grouped_tables(f.reshape(n, Co), spec, s, group)
+    mesh = make_decode_mesh(model)
+    Gl = G // model
+
+    # Tune both routes' kernels eagerly on the local shard shapes (the shape
+    # keys the shard_map traces look up): the conv kernel at local G with a
+    # concrete seg_offset, and the GEMV kernel over the patch-row problem.
+    ops.pcilt_fused_conv2d(x, T[:Gl], spec, s, group, kh, kw,
+                           seg_offset=0, n_total=G * group, autotune=True)
+    patches = im2col(x, kh, kw)
+    flat = patches.reshape(-1, n)
+    ops.pcilt_fused_gemv(flat[:, :Gl * group], T[:Gl], spec, s, group,
+                         autotune=True)
+
+    new_route = jax.jit(lambda a: pcilt_conv2d(a, f, spec, s, group,
+                                               tables=T, path="fused",
+                                               mesh=mesh))
+
+    def _old(a):  # the PR 3 detour, reconstructed: host im2col + sharded GEMV
+        p = im2col(a, kh, kw)
+        out = pcilt_linear(p, T, spec, s, group, path="fused", mesh=mesh)
+        return out
+
+    old_route = jax.jit(_old)
+    got, want = new_route(x), old_route(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    got.block_until_ready()
+    t_new = _timeit(lambda: new_route(x).block_until_ready(),
+                    reps=1 if smoke else 5, warmup=1 if smoke else 2)
+    t_old = _timeit(lambda: old_route(x).block_until_ready(),
+                    reps=1 if smoke else 5, warmup=1 if smoke else 2)
+    tag = f"conv5x5_b{bits}g{group}_{C}to{Co}_m{model}"
+    rows = [
+        (f"shard_conv.{tag}_host_im2col", t_old,
+         "PR3 route: host im2col + sharded fused GEMV"),
+        (f"shard_conv.{tag}_in_vmem_im2col", t_new,
+         f"{t_old / t_new:.2f}x vs host-im2col route (seg_offset kernels)"),
+    ]
+    return rows, {f"shard_conv_in_vmem_vs_host_im2col_m{model}":
+                  t_old / t_new}
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--conv-json", default=None,
+                    help="run the shard_conv section instead of shard.* and "
+                         "write rows+speedup JSON to this path")
+    ap.add_argument("--model", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_pr3.json",
+                    help="output JSON for the shard.* section (relative "
+                         "paths land at the repo root)")
+    args = ap.parse_args(argv)
+    if args.conv_json:
+        rows, speedup = shard_conv_rows(args.model, smoke=args.smoke)
+        with open(args.conv_json, "w") as fp:
+            json.dump({
+                "speedup": {k: round(v, 3) for k, v in speedup.items()},
+                "rows": [{"name": n, "us_per_call": round(float(v), 2),
+                          "derived": d} for n, v, d in rows],
+            }, fp, indent=1)
+        for name, val, derived in rows:
+            print(f"{name},{val},{derived}")
+        return
+    for name, val, derived in shard_rows(args.out, smoke=args.smoke):
         print(f"{name},{val},{derived}")
 
 

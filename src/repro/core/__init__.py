@@ -40,6 +40,7 @@ from .lut_layers import (
     pcilt_linear,
     pcilt_conv2d,
     pcilt_depthwise_conv1d,
+    build_dwconv_tables,
     im2col,
     conv_same_pads,
     mesh_shard_count,

@@ -43,15 +43,20 @@ table shard (or a local ext.-3 pool, see ``pcilt.ShardedSharedPool``) plus
 the matching slice of the activation's reduction dim, fetches and sums its
 local segments with the *same* single-device kernels it would use unsharded,
 and a single ``psum`` over the mesh axis combines the partial adder-tree
-sums (the paper's segment sum is associative).  When the mesh axis does not
-divide ``G`` the call falls back to replicated single-device execution — the
-same divisibility fallback ``repro.nn.module.ShardingRules`` applies to
-parameters.  Because the kernels see *local* shapes, the autotune lookup
-table is keyed on the local shard shape automatically.
+sums (the paper's segment sum is associative).  The fused/shared **conv**
+paths stay VMEM-resident under the mesh too: the image is replicated, each
+shard's conv kernel rebuilds the patch in VMEM and slices exactly the
+columns its table shard covers (the kernels' ``seg_offset`` parameter) —
+there is no host-im2col detour at any device count.  When the mesh axis
+does not divide ``G`` the call falls back to replicated single-device
+execution — the same divisibility fallback ``repro.nn.module.ShardingRules``
+applies to parameters.  Because the kernels see *local* shapes, the autotune
+lookup table is keyed on the local shard shape automatically.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -68,12 +73,14 @@ __all__ = [
     "pcilt_linear",
     "pcilt_conv2d",
     "pcilt_depthwise_conv1d",
+    "build_dwconv_tables",
     "im2col",
     "conv_same_pads",
     "mesh_shard_count",
 ]
 
 
+@functools.lru_cache(maxsize=4096)
 def conv_same_pads(h: int, w: int, kh: int, kw: int, stride: int = 1):
     """XLA-conformant "SAME" pads for NHWC (single source of truth — the
     fused/shared kernel wrappers in ``repro.kernels.ops`` import this).
@@ -84,6 +91,10 @@ def conv_same_pads(h: int, w: int, kh: int, kw: int, stride: int = 1):
     ``(k-1)//2`` whenever ``stride > 1`` and the size isn't congruent
     (e.g. stride 2 on an even extent: the naive split pads one extra low and
     every window samples shifted positions).
+
+    Memoized (pure int arithmetic, hashable args): eager serving calls this
+    on every conv step, and ``serving.PCILTConv2d`` additionally caches the
+    whole padded-shape plan per input shape.
     """
     def axis(size: int, k: int):
         out = -(-size // stride)
@@ -370,6 +381,70 @@ def im2col(
     return jnp.concatenate(cols, axis=-1).reshape(B, Ho, Wo, kh * kw * C)
 
 
+def _pcilt_conv2d_sharded_kernel(x, tables, spec, scale, group, kh, kw,
+                                 stride, padding, path, mesh, mesh_axis):
+    """Fused/shared conv under a mesh: **in-VMEM im2col per shard**.
+
+    Every device stages the full (replicated) activation image, its
+    ``[G/D, V, O]`` table shard (or local ext.-3 pool), and the shard's
+    global segment offset; the conv kernel rebuilds the patch in VMEM and
+    slices exactly the columns its shard covers (``seg_offset`` /
+    ``n_total`` on the kernel wrappers), so neither the float patch tensor
+    nor any offset tensor is ever materialized in HBM — the host-im2col +
+    sharded-GEMV detour this route replaces paid for both.  One ``psum``
+    over ``mesh_axis`` combines the partial adder-tree sums, exactly like
+    the sharded linear path.
+    """
+    from repro import compat
+    from repro.kernels import ops  # local import: kernels are optional
+
+    if isinstance(tables, ShardedSharedPool):
+        n_seg, D = tables.n_segments, tables.n_shards
+        if mesh is None or mesh_axis not in mesh.axis_names:
+            raise ValueError(
+                "a ShardedSharedPool is a mesh operand; pass mesh= (and the "
+                "mesh_axis its pools were sharded for), or execute the "
+                "unsharded SharedGroupedTables instead")
+        if int(mesh.shape[mesh_axis]) != D:
+            raise ValueError(
+                f"ShardedSharedPool was built for {D} shards but mesh axis "
+                f"{mesh_axis!r} has size {int(mesh.shape[mesh_axis])}; "
+                f"rebuild with shard_shared_grouped_tables(st, "
+                f"{int(mesh.shape[mesh_axis])})")
+    else:
+        n_seg = tables.shape[0]
+        D = int(mesh.shape[mesh_axis])
+    n_total = n_seg * group
+    Gl = n_seg // D
+
+    if path == "fused":
+        def shard_fn(xl, tab_l):
+            seg0 = jax.lax.axis_index(mesh_axis) * Gl
+            part = ops.pcilt_fused_conv2d(
+                xl, tab_l, spec, scale, group, kh, kw, stride=stride,
+                padding=padding, seg_offset=seg0, n_total=n_total)
+            return jax.lax.psum(part, mesh_axis)
+
+        return compat.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(), P(mesh_axis, None, None)),
+            out_specs=P(), check_vma=False,
+        )(x, tables)
+
+    def shard_fn(xl, pool_l, idx_l):
+        seg0 = jax.lax.axis_index(mesh_axis) * Gl
+        part = ops.pcilt_shared_conv2d(
+            xl, pool_l[0], idx_l[0], spec, scale, group, kh, kw,
+            stride=stride, padding=padding, seg_offset=seg0, n_total=n_total)
+        return jax.lax.psum(part, mesh_axis)
+
+    return compat.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(mesh_axis), P(mesh_axis)),
+        out_specs=P(), check_vma=False,
+    )(x, tables.pools, tables.seg_idx)
+
+
 def pcilt_conv2d(
     x: jax.Array,
     filters: jax.Array,
@@ -392,13 +467,13 @@ def pcilt_conv2d(
     dense grouped tables otherwise.
 
     With ``mesh=`` the segment axis (the flattened ``kh*kw*Cin`` receptive
-    field) is sharded over ``mesh_axis``: patches are extracted host-side
-    (``im2col``) and routed through the sharded linear layer, so each device
-    fetches only its local segments and the partial sums meet in one
-    ``psum``.  The fused/shared conv kernels keep their in-VMEM im2col on
-    the single-device (or fallback) path; under a mesh they execute as the
-    fused/shared *GEMV* kernels over the patch slices — same arithmetic,
-    sharded tables.
+    field) is sharded over ``mesh_axis``.  The fused/shared paths keep
+    their **in-VMEM im2col even under the mesh**: each device's conv kernel
+    rebuilds the patch in VMEM and indexes its local table slice directly
+    via the kernels' ``seg_offset`` parameter (one ``psum`` of partial
+    sums).  Only the host-packed paths (``gather``/``onehot``/``kernel``),
+    which consume explicit offset tensors, extract patches host-side
+    (``im2col``) and route through the sharded linear layer.
     """
     kh, kw, cin, cout = filters.shape
     n = kh * kw * cin
@@ -413,48 +488,78 @@ def pcilt_conv2d(
             tables = build_shared_grouped_tables(wflat, spec, scale, group)
         else:
             tables = build_grouped_tables(wflat, spec, scale, group)
-    if isinstance(tables, ShardedSharedPool):
-        n_seg = tables.n_segments
-    elif isinstance(tables, SharedGroupedTables):
+    if isinstance(tables, (ShardedSharedPool, SharedGroupedTables)):
         n_seg = tables.n_segments
     else:
         n_seg = tables.shape[0]
     sharded = (isinstance(tables, ShardedSharedPool)
                or mesh_shard_count(mesh, mesh_axis, n_seg) > 1)
-    if not sharded:
-        # The conv-native kernels (in-VMEM im2col) serve the single-device /
-        # fallback case; under a mesh both paths execute as sharded GEMV
-        # kernels over host-extracted patches (the tail below).
-        if path == "shared":
-            if not isinstance(tables, SharedGroupedTables):
-                raise ValueError(
-                    "path='shared' executes a SharedGroupedTables pool; "
-                    "build one with build_shared_grouped_tables (got dense "
-                    "tables)")
-            from repro.kernels import ops  # local import: kernels are optional
+    if path == "shared" and not isinstance(
+            tables, (SharedGroupedTables, ShardedSharedPool)):
+        raise ValueError(
+            "path='shared' executes a SharedGroupedTables pool; "
+            "build one with build_shared_grouped_tables (got dense "
+            "tables)")
+    if path == "fused" and isinstance(
+            tables, (SharedGroupedTables, ShardedSharedPool)):
+        raise ValueError(
+            "path='fused' consumes dense [G, V, O] tables; use "
+            "path='shared' for a SharedGroupedTables pool (or "
+            "materialize() it explicitly)")
+    if path in ("fused", "shared"):
+        _check_contiguous_segments(path, None, n + pad_n, n_seg, group)
+        if sharded:
+            if isinstance(tables, SharedGroupedTables):
+                tables = _shard_pool_for(
+                    tables, mesh_shard_count(mesh, mesh_axis, n_seg))
+            return _pcilt_conv2d_sharded_kernel(
+                x, tables, spec, scale, group, kh, kw, stride, padding,
+                path, mesh, mesh_axis)
+        # Single-device / fallback: the same conv-native kernels, unsharded.
+        from repro.kernels import ops  # local import: kernels are optional
 
+        if path == "shared":
             return ops.pcilt_shared_conv2d(
                 x, tables.pool, tables.seg_idx, spec, scale, tables.group,
                 kh, kw, stride=stride, padding=padding
             )
-        if path == "fused":
-            if isinstance(tables, SharedGroupedTables):
-                raise ValueError(
-                    "path='fused' consumes dense [G, V, O] tables; use "
-                    "path='shared' for a SharedGroupedTables pool (or "
-                    "materialize() it explicitly)")
-            from repro.kernels import ops  # local import: kernels are optional
-
-            return ops.pcilt_fused_conv2d(
-                x, tables, spec, scale, group, kh, kw, stride=stride,
-                padding=padding
-            )
+        return ops.pcilt_fused_conv2d(
+            x, tables, spec, scale, group, kh, kw, stride=stride,
+            padding=padding
+        )
     patches = im2col(x, kh, kw, stride, padding)
     if pad_n:
         zeros = jnp.zeros((*patches.shape[:-1], pad_n), patches.dtype)
         patches = jnp.concatenate([patches, zeros], axis=-1)
     return pcilt_linear(patches, tables, spec, scale, group, path=path,
                         mesh=mesh, mesh_axis=mesh_axis)
+
+
+def _dwconv_pads(k: int, padding: str):
+    try:
+        return {"CAUSAL": (k - 1, 0),
+                "SAME": ((k - 1) // 2, k - 1 - (k - 1) // 2),
+                "VALID": (0, 0)}[padding]
+    except KeyError:
+        raise ValueError(
+            f"padding must be CAUSAL|SAME|VALID, got {padding!r}") from None
+
+
+def build_dwconv_tables(filters: jax.Array, spec: QuantSpec, scale) -> jax.Array:
+    """Per-channel depthwise-conv1d PCILTs: ``[k, C]`` filters -> ``[C, V]``.
+
+    Segment slot ``j`` corresponds to tap ``j`` (slot ``j`` of the packed
+    offset holds the code at time ``t-k+1+j`` ⇒ weight ``filters[j]``).
+    Offline, once per network lifetime — serving callers
+    (``serving.PCILTDwConv1d``) cache the result instead of rebuilding the
+    ``V``-entry enumeration on every step.
+    """
+    from .offsets import offset_grid
+    from .quantization import code_values
+
+    k, _ = filters.shape
+    vals = code_values(spec, scale)[offset_grid(spec.bits, k)]  # [V, k]
+    return jnp.einsum("vk,kc->cv", vals, filters.astype(vals.dtype))
 
 
 def pcilt_depthwise_conv1d(
@@ -464,42 +569,51 @@ def pcilt_depthwise_conv1d(
     scale,
     tables: Optional[jax.Array] = None,
     path: str = "gather",
+    padding: str = "CAUSAL",
 ) -> jax.Array:
-    """Causal depthwise conv1d where *one fetch produces one output element*.
+    """Depthwise conv1d where *one fetch produces one output element*.
 
     x: ``[B, T, C]``; filters: ``[k, C]`` (k taps per channel).  The k taps of
     a channel form exactly one PCILT segment, so the packed offset of the k
     input codes addresses a ``[C, K**k]`` table directly — the cleanest TPU
     incarnation of the paper's claim that small filters over large data are
     the technique's sweet spot (Mamba/Zamba frontends: k=4).
+
+    ``padding``: ``"CAUSAL"`` (default — taps ``t-k+1..t``, the decode
+    frontend), ``"SAME"`` (centered), or ``"VALID"`` (``T - k + 1``
+    outputs).  ``path="fused"`` executes quantize + tap-stack + pack + fetch
+    in one Pallas call (``repro.kernels.pcilt_fused_dwconv1d``) so the
+    ``[B, T, C]`` offset tensor never exists in HBM; the host-packed paths
+    (``gather``/``onehot``/``kernel``) build it explicitly.
     """
     k, C = filters.shape
     B, T, _ = x.shape
+    if tables is None:
+        tables = build_dwconv_tables(filters, spec, scale)
+    if path == "fused":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        return ops.pcilt_fused_dwconv1d(x, tables, spec, scale, k,
+                                        padding=padding)
     codes = quantize(x, spec, scale)  # [B, T, C]
-    # Causal tap window: stack codes of t-k+1..t  ->  [B, T, C, k]
-    padded = jnp.pad(codes, ((0, 0), (k - 1, 0), (0, 0)))
-    taps = jnp.stack([padded[:, i : i + T] for i in range(k)], axis=-1)
+    lo, hi = _dwconv_pads(k, padding)
+    padded = jnp.pad(codes, ((0, 0), (lo, hi), (0, 0)))
+    To = padded.shape[1] - k + 1
+    # Tap window: stack codes feeding output t  ->  [B, To, C, k]
+    taps = jnp.stack([padded[:, i : i + To] for i in range(k)], axis=-1)
     shifts = jnp.arange(k, dtype=jnp.int32) * spec.bits
     offsets = jnp.sum(
         jnp.left_shift(taps.astype(jnp.int32), shifts[None, None, None]), axis=-1
-    )  # [B, T, C]
-    if tables is None:
-        # Table per channel: [C, V].  Segment j-th slot corresponds to tap j
-        # (slot j in the offset == codes at time t-k+1+j  ⇒ weight = filt[j]).
-        from .offsets import offset_grid
-        from .quantization import code_values
-
-        vals = code_values(spec, scale)[offset_grid(spec.bits, k)]  # [V, k]
-        tables = jnp.einsum("vk,kc->cv", vals, filters.astype(vals.dtype))
+    )  # [B, To, C]
     if path == "gather":
         return jnp.take_along_axis(
-            jnp.broadcast_to(tables, (B, T) + tables.shape),
+            jnp.broadcast_to(tables, (B, To) + tables.shape),
             offsets[..., None],
             axis=-1,
         )[..., 0]
     if path == "onehot":
         V = tables.shape[-1]
-        oh = jax.nn.one_hot(offsets, V, dtype=tables.dtype)  # [B,T,C,V]
+        oh = jax.nn.one_hot(offsets, V, dtype=tables.dtype)  # [B,To,C,V]
         return jnp.einsum("btcv,cv->btc", oh, tables)
     if path == "kernel":
         from repro.kernels import ops

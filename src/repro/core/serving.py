@@ -25,9 +25,28 @@ from .quantization import QuantSpec, calibrate, quantize, dequantize
 from .pcilt import (SharedGroupedTables, ShardedSharedPool,
                     build_grouped_tables, build_shared_grouped_tables,
                     shard_shared_grouped_tables)
-from .lut_layers import mesh_shard_count, pcilt_linear
+from .lut_layers import (build_dwconv_tables, mesh_shard_count, pcilt_conv2d,
+                         pcilt_depthwise_conv1d, pcilt_linear)
 
-__all__ = ["PCILTLinear", "convert_kernel", "pcilt_apply", "mlp_table_bytes"]
+__all__ = ["PCILTLinear", "PCILTConv2d", "PCILTDwConv1d", "convert_kernel",
+           "convert_conv_kernel", "convert_dwconv", "pcilt_apply",
+           "mlp_table_bytes"]
+
+
+def _place_sharded_pool(sp: ShardedSharedPool, mesh,
+                        mesh_axis: str) -> ShardedSharedPool:
+    """Park each local pool + pointer block on its device (the whole point
+    is that no device ever holds the global pool)."""
+    from repro.nn.module import pcilt_table_sharding
+
+    return ShardedSharedPool(
+        pools=jax.device_put(
+            sp.pools, pcilt_table_sharding(mesh, sp.n_shards, ndim=4,
+                                           mesh_axis=mesh_axis)),
+        seg_idx=jax.device_put(
+            sp.seg_idx, pcilt_table_sharding(mesh, sp.n_shards, ndim=2,
+                                             mesh_axis=mesh_axis)),
+        group=sp.group, shard_cards=sp.shard_cards)
 
 
 class PCILTLinear:
@@ -88,18 +107,8 @@ class PCILTLinear:
                                                  mesh_axis=mesh_axis))
 
     def _place_shard_pools(self) -> None:
-        from repro.nn.module import pcilt_table_sharding
-
-        sp = self.shard_pools
-        self.shard_pools = ShardedSharedPool(
-            pools=jax.device_put(
-                sp.pools, pcilt_table_sharding(self.mesh, sp.n_shards, ndim=4,
-                                               mesh_axis=self.mesh_axis)),
-            seg_idx=jax.device_put(
-                sp.seg_idx, pcilt_table_sharding(self.mesh, sp.n_shards,
-                                                 ndim=2,
-                                                 mesh_axis=self.mesh_axis)),
-            group=sp.group, shard_cards=sp.shard_cards)
+        self.shard_pools = _place_sharded_pool(self.shard_pools, self.mesh,
+                                               self.mesh_axis)
 
     @property
     def n_segments(self) -> int:
@@ -230,6 +239,233 @@ def convert_kernel(kernel: jax.Array, act_spec: QuantSpec, act_scale,
     tables = build_grouped_tables(k, act_spec, act_scale, group)
     return PCILTLinear(tables, act_spec, act_scale, group, mesh=mesh,
                        mesh_axis=mesh_axis)
+
+
+class PCILTConv2d:
+    """A converted convolution: pre-built grouped tables + a per-path jitted
+    executor cache.
+
+    Eager (non-jit) serving used to pay the whole host-side pre-processing on
+    *every* call — ``conv_same_pads`` arithmetic, the ``[kh*kw*Cin, Cout]``
+    filter flatten/pad, and (worst) a full table rebuild when no tables were
+    passed.  Conversion hoists all of it to the offline build (the paper's
+    once-per-lifetime step), and ``__call__`` dispatches through one jitted
+    closure per path — so repeated decode steps re-enter compiled code
+    instead of re-tracing the quantize/pack/fetch pipeline each time.
+
+    With ``mesh=``, calls execute the tensor-parallel conv route: the
+    fused/shared kernels keep their in-VMEM im2col per shard via the
+    kernels' ``seg_offset`` parameter (``core.lut_layers``), dense table
+    shards are placed at conversion like :class:`PCILTLinear`.
+    """
+
+    def __init__(self, filters: jax.Array, spec: QuantSpec, scale, group: int,
+                 stride: int = 1, padding: str = "SAME",
+                 tables=None, shared: Optional[SharedGroupedTables] = None,
+                 mesh=None, mesh_axis: str = "model"):
+        if tables is None and shared is None:
+            raise ValueError("PCILTConv2d needs dense tables, a shared pool, "
+                             "or both")
+        self.filters = filters
+        self.spec = spec
+        self.scale = scale
+        self.group = group
+        self.stride = stride
+        self.padding = padding
+        self.tables = tables
+        self.shared = shared
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.shard_pools: Optional[ShardedSharedPool] = None
+        if mesh is not None and self.shard_count > 1:
+            # Shard and place at conversion (the offline step), exactly like
+            # PCILTLinear: no device ever holds the global tables/pool, and
+            # the np.unique pool-shard build never re-runs inside a trace.
+            if shared is not None:
+                self.shard_pools = _place_sharded_pool(
+                    shard_shared_grouped_tables(shared, self.shard_count),
+                    mesh, mesh_axis)
+            if tables is not None:
+                from repro.nn.module import pcilt_table_sharding
+
+                self.tables = jax.device_put(
+                    tables, pcilt_table_sharding(mesh, tables.shape[0],
+                                                 mesh_axis=mesh_axis))
+        self._exec: Dict[str, object] = {}
+
+    @property
+    def n_segments(self) -> int:
+        if self.tables is not None:
+            return self.tables.shape[0]
+        return self.shared.n_segments
+
+    @property
+    def shard_count(self) -> int:
+        """Effective G-shards on the layer's mesh (1 = replicated fallback)."""
+        return mesh_shard_count(self.mesh, self.mesh_axis, self.n_segments)
+
+    def _tables_for(self, path: str):
+        if path == "shared" or (self.tables is None and path == "gather"):
+            if self.shared is None:
+                raise ValueError(
+                    "no shared pool on this layer; convert with shared=True")
+            return self.shard_pools if self.shard_pools is not None else self.shared
+        if self.tables is None:
+            raise ValueError(
+                f"shared-only PCILTConv2d executes path='shared' or "
+                f"'gather', not {path!r}")
+        return self.tables
+
+    def table_bytes(self) -> int:
+        if self.shared is not None:
+            return self.shared.pool_bytes()
+        return self.tables.size * self.tables.dtype.itemsize
+
+    def per_device_table_bytes(self) -> int:
+        """Table bytes each device holds under the layer's mesh (the padded
+        local pool for shared layers; linear ``G/D`` scaling for dense)."""
+        if self.shard_pools is not None:
+            return self.shard_pools.local_pool_bytes()
+        return -(-self.table_bytes() // self.shard_count)
+
+    def __call__(self, x: jax.Array, path: str = "fused") -> jax.Array:
+        fn = self._exec.get(path)
+        if fn is None:
+            tables = self._tables_for(path)
+
+            def run(xc):
+                return pcilt_conv2d(
+                    xc, self.filters, self.spec, self.scale, self.group,
+                    stride=self.stride, padding=self.padding, tables=tables,
+                    path=path, mesh=self.mesh, mesh_axis=self.mesh_axis)
+
+            fn = self._exec[path] = jax.jit(run)
+        return fn(x)
+
+    def tune(self, x: jax.Array) -> jax.Array:
+        """Eagerly autotune the conv kernel for this input shape and record
+        the winner; shared-only layers tune the shared-pool kernel.  The
+        jitted dispatch then hits the recorded entry at trace time.
+
+        Under a mesh, tuning runs on the **local shard shape** — one shard's
+        ``[G/D, V, O]`` tables (or local pool) with a concrete
+        ``seg_offset`` — because that is the problem each device's kernel
+        dispatches and the shape key the sharded ``shard_map`` trace looks
+        up (same contract as :meth:`PCILTLinear.tune`)."""
+        from repro.kernels import ops  # local import: kernels are optional
+
+        kh, kw, _, _ = self.filters.shape
+        conv_kw = dict(stride=self.stride, padding=self.padding,
+                       autotune=True)
+        D = self.shard_count
+        if D > 1:
+            G = self.n_segments
+            n_total = G * self.group
+            if self.tables is None:
+                sp = self.shard_pools
+                ops.pcilt_shared_conv2d(
+                    x, sp.pools[0], sp.seg_idx[0], self.spec, self.scale,
+                    self.group, kh, kw, seg_offset=0, n_total=n_total,
+                    **conv_kw)
+                return self(x, path="shared")
+            ops.pcilt_fused_conv2d(
+                x, self.tables[: G // D], self.spec, self.scale, self.group,
+                kh, kw, seg_offset=0, n_total=n_total, **conv_kw)
+            return self(x, path="fused")
+        if self.tables is None:
+            ops.pcilt_shared_conv2d(
+                x, self.shared.pool, self.shared.seg_idx, self.spec,
+                self.scale, self.group, kh, kw, **conv_kw)
+            return self(x, path="shared")
+        ops.pcilt_fused_conv2d(
+            x, self.tables, self.spec, self.scale, self.group, kh, kw,
+            **conv_kw)
+        return self(x, path="fused")
+
+
+def convert_conv_kernel(filters: jax.Array, act_spec: QuantSpec, act_scale,
+                        group: int, stride: int = 1, padding: str = "SAME",
+                        weight_bits: Optional[int] = None,
+                        shared: bool = False, mesh=None,
+                        mesh_axis: str = "model") -> PCILTConv2d:
+    """Offline build for one ``[kh, kw, Cin, Cout]`` conv filter — the conv
+    sibling of :func:`convert_kernel`.  Flattens/pads the receptive field to
+    the segment grid once, builds dense grouped tables (or the ext.-3
+    segment-deduped pool with ``shared=True``), and returns the serving
+    layer with every per-call host cost hoisted out."""
+    kh, kw, cin, cout = filters.shape
+    f = filters.astype(jnp.float32)
+    if weight_bits:
+        wspec = QuantSpec(bits=weight_bits, symmetric=True)
+        wscale = calibrate(f, wspec)
+        f = dequantize(quantize(f, wspec, wscale), wspec, wscale)
+    n = kh * kw * cin
+    wflat = f.reshape(n, cout)
+    pad = (-n) % group
+    if pad:
+        wflat = jnp.concatenate([wflat, jnp.zeros((pad, cout), wflat.dtype)], 0)
+    if shared:
+        pool = build_shared_grouped_tables(wflat, act_spec, act_scale, group)
+        return PCILTConv2d(f, act_spec, act_scale, group, stride=stride,
+                           padding=padding, shared=pool, mesh=mesh,
+                           mesh_axis=mesh_axis)
+    tables = build_grouped_tables(wflat, act_spec, act_scale, group)
+    return PCILTConv2d(f, act_spec, act_scale, group, stride=stride,
+                       padding=padding, tables=tables, mesh=mesh,
+                       mesh_axis=mesh_axis)
+
+
+class PCILTDwConv1d:
+    """A converted depthwise-conv1d frontend (Mamba/Zamba conv, k=4): the
+    ``[C, V]`` per-channel tables are built once at conversion and every call
+    executes one fetch per output element.
+
+    ``path="fused"`` runs quantize + causal tap-stack + pack + fetch in one
+    Pallas call (``repro.kernels.pcilt_fused_dwconv1d``) — the decode
+    frontend's offsets never exist in HBM; the host-packed paths remain for
+    reference/parity.  :meth:`tune` records the ``(Tb, Cb)`` tiling under
+    the ``fused_dwconv1d`` autotune key for this signal shape.
+    """
+
+    def __init__(self, filters: jax.Array, spec: QuantSpec, scale,
+                 tables: Optional[jax.Array] = None):
+        self.filters = filters
+        self.spec = spec
+        self.scale = scale
+        self.k = int(filters.shape[0])
+        self.tables = tables if tables is not None else build_dwconv_tables(
+            filters, spec, scale)
+        self._exec: Dict[tuple, object] = {}
+
+    def table_bytes(self) -> int:
+        return self.tables.size * self.tables.dtype.itemsize
+
+    def __call__(self, x: jax.Array, path: str = "fused",
+                 padding: str = "CAUSAL") -> jax.Array:
+        fn = self._exec.get((path, padding))
+        if fn is None:
+            def run(xc):
+                return pcilt_depthwise_conv1d(
+                    xc, self.filters, self.spec, self.scale,
+                    tables=self.tables, path=path, padding=padding)
+
+            fn = self._exec[(path, padding)] = jax.jit(run)
+        return fn(x)
+
+    def tune(self, x: jax.Array, padding: str = "CAUSAL") -> jax.Array:
+        from repro.kernels import ops  # local import: kernels are optional
+
+        out = ops.pcilt_fused_dwconv1d(x, self.tables, self.spec, self.scale,
+                                       self.k, padding=padding, autotune=True)
+        return out
+
+
+def convert_dwconv(filters: jax.Array, act_spec: QuantSpec,
+                   act_scale) -> PCILTDwConv1d:
+    """Offline build for one ``[k, C]`` depthwise-conv1d filter: per-channel
+    ``[C, 2**(bits*k)]`` tables, built once (the per-call rebuild the eager
+    path used to pay is exactly what this hoists)."""
+    return PCILTDwConv1d(filters, act_spec, act_scale)
 
 
 def pcilt_apply(lin: PCILTLinear, x: jax.Array, path: str = "gather"):

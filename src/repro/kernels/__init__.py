@@ -5,14 +5,19 @@ Two pipelines implement the paper's fetch-and-add inner loop:
 * **host-packed** (``pcilt_gemv.py``, ``pcilt_conv2d.py``,
   ``pcilt_dwconv1d.py``): quantization, im2col, and offset bit-packing run on
   the host and the kernel consumes a pre-built int32 offset tensor.  Kept for
-  callers that hold offsets already (generalized ``SegmentPlan`` packings,
-  the dwconv path) and as the measured baseline.
-* **fused** (``pcilt_fused.py``): raw float activations in; quantize →
-  offset-pack → table-fetch → adder-tree run entirely in VMEM, with the fetch
-  expressed as a single flattened ``[Bb, Gb*V] x [Gb*V, Ob]`` one-hot MXU
-  contraction per staged table tile.  The int32 offset tensor — for convs
+  callers that hold offsets already (generalized ``SegmentPlan`` packings)
+  and as the measured baseline.
+* **fused** (``pcilt_fused.py``, ``pcilt_dwconv1d.py``): raw float
+  activations in; quantize → offset-pack → table-fetch → adder-tree run
+  entirely in VMEM, with the fetch expressed as a single flattened
+  ``[Bb, Gb*V] x [Gb*V, Ob]`` one-hot MXU contraction per staged table tile
+  (the depthwise conv1d uses a factored two-level one-hot — ``Vl + Vh``
+  indicator lanes instead of ``V``).  The int32 offset tensor — for convs
   often larger than the activations — never touches HBM.  Tables may be
-  stored bf16 to double the groups staged per ~8 MB VMEM budget.
+  stored bf16 to double the groups staged per ~8 MB VMEM budget.  The conv
+  kernels take a ``seg_offset``/``n_total`` pair so tensor-parallel shards
+  im2col the replicated image in VMEM and slice their own patch columns
+  (``core.lut_layers`` ``mesh=``).
 * **shared-pool fused** (``pcilt_shared.py``): the fused pipeline over the
   extension-3 segment-deduped representation — a ``[X, V, O]`` pool of
   unique segment tables plus a ``[G]`` int32 pointer vector

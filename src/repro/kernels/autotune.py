@@ -23,9 +23,18 @@ Cache format (JSON, one object per shape key)::
 Shape-key dimensions are kernel-specific; the shared-pool kernels
 (``shared_gemv`` / ``shared_conv2d``) add ``X``, the pool cardinality (number
 of deduped segment tables), because the staged-pool VMEM footprint — and so
-the winning tiling — scales with ``X`` rather than ``G``.  ``us`` is strict
-JSON: ``null``, never a bare ``NaN`` token (which ``jq`` and strict parsers
-reject); ``TileCache`` both writes and tolerates it.
+the winning tiling — scales with ``X`` rather than ``G``.  The fused
+depthwise-conv1d kernel records under ``fused_dwconv1d`` keys shaped
+``fused_dwconv1d|B=...,C=...,T=...,V=...,bits=...,k=...,dtype=...|backend=...``
+(``T`` is the *output* length, ``k`` the tap count); its ``tiles`` entry
+reuses the ``TileConfig`` fields as ``Bb`` = time tile ``Tb`` and ``Ob`` =
+channel tile ``Cb`` (``Gb``/``row_tile`` unused, recorded as 1/8).  Conv2d
+keys tuned under a mesh use the **local** shard's ``G`` (see below); the
+``seg_offset`` operand of the fused/shared conv kernels does not enter the
+key — it only shifts which patch columns the in-VMEM im2col slices, never
+the tiling-relevant shapes.  ``us`` is strict JSON: ``null``, never a bare
+``NaN`` token (which ``jq`` and strict parsers reject); ``TileCache`` both
+writes and tolerates it.
 
 **Sharded keying policy.**  Mesh execution (``core.lut_layers`` ``mesh=``)
 dispatches the kernels from inside ``shard_map``, so the shapes reaching
@@ -80,8 +89,10 @@ __all__ = [
     "conv2d_candidates",
     "shared_gemv_candidates",
     "shared_conv2d_candidates",
+    "dwconv1d_candidates",
     "autotune_enabled",
     "TIMING_RUNS",
+    "SCRATCH_BUDGET",
 ]
 
 #: incremented once per timed candidate execution (reps included).  Tests use
@@ -295,23 +306,64 @@ def _fit_gb(G: int, V: int, Ob: int, itemsize: int,
     return Gb
 
 
-def gemv_candidates(B: int, G: int, V: int, O: int, itemsize: int = 4
+#: Per-grid-step scratch budget for the in-kernel one-hot (and, for the
+#: shared kernels, the pool-space counts).  Deliberately looser than the
+#: staged-table budget: scratch is transient VPU/VMEM working set, but a
+#: tiling whose one-hot alone oversubscribes the chip can never compile —
+#: generating it only to have ``tune`` compile-reject it is pure waste.
+SCRATCH_BUDGET = 12 * 2**20
+
+
+def _fit_scratch_gb(G: int, R: int, V: int, onehot_itemsize: int = 4,
+                    fixed_bytes: int = 0,
+                    budget: float = SCRATCH_BUDGET) -> int:
+    """Largest group-tile whose per-grid-step scratch fits ``budget``.
+
+    The analytic mirror of :func:`_fit_gb` for the *activation-side* scratch
+    the kernels materialize each grid step: the ``[R, Gb, V]`` one-hot
+    (``R`` = rows per step — ``Bb`` for GEMV, ``Hb*Wo`` for conv) in
+    ``onehot_itemsize`` bytes, plus ``fixed_bytes`` of Gb-independent scratch
+    (the shared kernels' ``[R, V, X]`` counts and staged ``[V, X, Ob]``
+    pool).  Replaces try-compile pruning: candidates above the bound used to
+    be generated anyway and relied on TPU compile-rejection inside ``tune``
+    — every rejection a wasted compile.  Returns the largest ``Gb | G``
+    admitted (>= 1, so degenerate budgets still yield a dispatchable tile).
+    """
+    avail = budget - fixed_bytes
+    per_gb = max(R * V * onehot_itemsize, 1)
+    if avail < per_gb:
+        cap = 1
+    elif math.isinf(avail):  # tests pass float('inf') to reproduce the
+        cap = G              # old unbounded try-compile sweep
+    else:
+        cap = max(1, int(avail // per_gb))
+    Gb = max(1, min(G, cap))
+    while G % Gb:
+        Gb -= 1
+    return Gb
+
+
+def gemv_candidates(B: int, G: int, V: int, O: int, itemsize: int = 4,
+                    scratch_budget: float = SCRATCH_BUDGET
                     ) -> List[TileConfig]:
     """Tilings for the (fused) GEMV: vary Ob (lane blocks) and Gb (staging).
 
     Candidate 0 is always the VMEM-budget heuristic (the no-tune fallback).
     Later candidates trade staging footprint for fewer grid steps, up to
-    "stage everything" — oversized tilings simply fail to compile on TPU and
-    are skipped by ``tune``, while on CPU (interpret mode, where per-grid-step
-    overhead dominates) they usually win.
+    "stage everything" — every ``Gb`` is pre-clamped by the analytic scratch
+    bound (:func:`_fit_scratch_gb`: the fused kernel's ``[Bb, Gb*V]``
+    one-hot), so no candidate relies on TPU compile-rejection to be pruned.
+    On CPU (interpret mode, where per-grid-step overhead dominates) the
+    largest admitted staging usually wins.
     """
     Bb = min(128, _round_up(max(B, 1), 8))
     O_full = _round_up(O, 128) if O >= 128 else O
+    g_cap = _fit_scratch_gb(G, Bb, V, itemsize, budget=scratch_budget)
     out: List[TileConfig] = []
     seen = set()
 
     def add(gb: int, ob: int) -> None:
-        gb = max(1, min(gb, G))
+        gb = max(1, min(gb, g_cap))
         while G % gb:
             gb -= 1
         if (gb, ob) not in seen:
@@ -319,7 +371,7 @@ def gemv_candidates(B: int, G: int, V: int, O: int, itemsize: int = 4
             out.append(TileConfig(Bb=Bb, Gb=gb, Ob=ob))
 
     add(_fit_gb(G, V, min(128, O_full), itemsize), min(128, O_full))  # heuristic
-    add(G, O_full)  # stage everything: one grid step when it fits
+    add(G, O_full)  # stage everything (scratch-clamped): fewest grid steps
     for Ob in (128, 256, 512, O_full):
         if Ob > O_full:
             continue
@@ -329,12 +381,16 @@ def gemv_candidates(B: int, G: int, V: int, O: int, itemsize: int = 4
     return out[:6]
 
 
-def conv2d_candidates(Ho: int, G: int, V: int, O: int, itemsize: int = 4
+def conv2d_candidates(Ho: int, G: int, V: int, O: int, itemsize: int = 4,
+                      Wo: int = 128,
+                      scratch_budget: float = SCRATCH_BUDGET
                       ) -> List[TileConfig]:
     """Tilings for the (fused) conv2d: vary the row strip, table staging, and
     output blocking.  Same ordering contract as ``gemv_candidates``: the
-    heuristic first, then progressively larger stagings ("stage everything"
-    last — compile-rejected on TPU when oversized, dominant on CPU)."""
+    heuristic first, then progressively larger stagings — each ``Gb``
+    pre-clamped by the analytic scratch bound at that candidate's row count
+    ``R = row_tile * Wo`` (``Wo`` defaults conservatively to 128 for callers
+    that don't know the output width)."""
     out: List[TileConfig] = []
     seen = set()
     O_full = _round_up(O, 128) if O >= 128 else O
@@ -345,7 +401,8 @@ def conv2d_candidates(Ho: int, G: int, V: int, O: int, itemsize: int = 4
         hb = max(1, min(hb, Ho))
         while Ho % hb:
             hb -= 1
-        gb = max(1, min(gb, G))
+        gb = max(1, min(gb, _fit_scratch_gb(G, hb * max(Wo, 1), V, itemsize,
+                                            budget=scratch_budget)))
         while G % gb:
             gb -= 1
         if (hb, gb, ob) not in seen:
@@ -368,38 +425,132 @@ def _div_down(x: int, cap: int) -> int:
     return d
 
 
+def _shared_fixed_bytes(R: int, V: int, X: int, Ob: int, itemsize: int) -> int:
+    """Gb-independent per-step scratch of the shared kernels: the f32
+    ``[R, V, X]`` counts plus the staged (pre-transposed) ``[V, X, Ob]``
+    pool tile."""
+    return R * V * X * 4 + V * X * Ob * itemsize
+
+
 def shared_gemv_candidates(B: int, G: int, V: int, O: int, X: int,
-                           itemsize: int = 4) -> List[TileConfig]:
+                           itemsize: int = 4,
+                           scratch_budget: float = SCRATCH_BUDGET
+                           ) -> List[TileConfig]:
     """Tilings for the shared-pool GEMV (``kernels/pcilt_shared.py``).
 
     The staged table operand is the deduped ``[X, V, Ob]`` pool — its VMEM
     footprint is *independent of Gb*, so unlike the dense kernels ``Gb`` only
     trades one-hot scratch / MXU contraction size against grid steps.  The
-    dense sweep stays valid (its budget is just conservative), and "stage
-    every group" is forced into the candidate set: the pool side always fits,
-    and when the ``[Bb, Gb, V]`` one-hot scratch oversubscribes VMEM the
-    candidate is compile-rejected on TPU and skipped by ``tune`` (on CPU
-    interpret, where grid-step overhead dominates, it usually wins).
+    dense sweep stays valid (its budget is just conservative), plus "stage
+    as many groups as the scratch admits": the analytic bound
+    (:func:`_fit_scratch_gb` over the f32 ``[Bb, Gb, V]`` one-hot with the
+    ``[Bb, V, X]`` counts + pool tile as fixed bytes) replaces the old
+    unconditional ``Gb=G`` candidates that relied on TPU compile-rejection —
+    strictly fewer candidates whenever the bound bites, zero wasted tune
+    compiles.  On CPU interpret (grid-step overhead dominates) the largest
+    admitted staging usually wins, and small recorded problems admit
+    ``Gb=G`` unchanged.
     """
-    out = list(gemv_candidates(B, G, V, O, itemsize))
     Bb = min(128, _round_up(max(B, 1), 8))
+
+    def clamp(c: TileConfig) -> Optional[TileConfig]:
+        # Re-clamp an inherited dense-sweep candidate against the *shared*
+        # kernel's per-step scratch: its one-hot is f32 and the counts +
+        # staged pool add Gb-independent fixed bytes the dense bound
+        # doesn't know about.  A candidate whose fixed footprint alone
+        # (counts + staged pool at this Ob) exceeds the budget is dropped —
+        # no Gb can save it, and it's exactly the tiling the old sweep
+        # wasted a compile-rejection on.
+        fixed = _shared_fixed_bytes(c.Bb, V, X, c.Ob, itemsize)
+        if fixed + c.Bb * V * 4 > scratch_budget:  # even Gb=1 won't fit
+            return None
+        gb = min(c.Gb, _fit_scratch_gb(G, c.Bb, V, 4, fixed,
+                                       budget=scratch_budget))
+        while G % gb:
+            gb -= 1
+        return dataclasses.replace(c, Gb=gb)
+
+    out: List[TileConfig] = []
+    for c in map(clamp, gemv_candidates(B, G, V, O, itemsize,
+                                        scratch_budget=scratch_budget)):
+        if c is not None and c not in out:
+            out.append(c)
     O_full = _round_up(O, 128) if O >= 128 else O
-    for cand in (TileConfig(Bb=Bb, Gb=G, Ob=min(128, O_full)),
-                 TileConfig(Bb=Bb, Gb=G, Ob=O_full)):
-        if cand not in out:
+    for ob in (min(128, O_full), O_full):
+        cand = clamp(TileConfig(Bb=Bb, Gb=G, Ob=ob))
+        if cand is not None and cand not in out:
             out.append(cand)
+    if not out:  # degenerate budget: still emit one dispatchable tile
+        out.append(TileConfig(Bb=Bb, Gb=1, Ob=min(128, O_full)))
     return out[:7]
 
 
 def shared_conv2d_candidates(Ho: int, G: int, V: int, O: int, X: int,
-                             itemsize: int = 4) -> List[TileConfig]:
-    """Shared-pool conv2d tilings: the dense sweep plus the always-feasible
-    "stage every group per row strip" configuration (see
-    :func:`shared_gemv_candidates` for why ``Gb`` is unconstrained by VMEM)."""
-    out = list(conv2d_candidates(Ho, G, V, O, itemsize))
+                             itemsize: int = 4, Wo: int = 128,
+                             scratch_budget: float = SCRATCH_BUDGET
+                             ) -> List[TileConfig]:
+    """Shared-pool conv2d tilings: the dense sweep plus the largest
+    scratch-admitted "stage every group per row strip" configuration (see
+    :func:`shared_gemv_candidates`; ``R = row_tile * Wo`` rows per step)."""
+    def clamp(c: TileConfig) -> Optional[TileConfig]:
+        R = c.row_tile * max(Wo, 1)
+        fixed = _shared_fixed_bytes(R, V, X, c.Ob, itemsize)
+        if fixed + R * V * 4 > scratch_budget:  # even Gb=1 won't fit
+            return None
+        gb = min(c.Gb, _fit_scratch_gb(G, R, V, 4, fixed,
+                                       budget=scratch_budget))
+        while G % gb:
+            gb -= 1
+        return dataclasses.replace(c, Gb=gb)
+
+    out: List[TileConfig] = []
+    for c in map(clamp, conv2d_candidates(Ho, G, V, O, itemsize, Wo=Wo,
+                                          scratch_budget=scratch_budget)):
+        if c is not None and c not in out:
+            out.append(c)
     O_full = _round_up(O, 128) if O >= 128 else O
+    Ob0 = min(128, O_full)
     for rt in (_div_down(Ho, 8), Ho):
-        cand = TileConfig(Bb=1, Gb=G, Ob=min(128, O_full), row_tile=rt)
-        if cand not in out:
+        cand = clamp(TileConfig(Bb=1, Gb=G, Ob=Ob0, row_tile=rt))
+        if cand is not None and cand not in out:
             out.append(cand)
+    if not out:  # degenerate budget: still emit one dispatchable tile
+        out.append(TileConfig(Bb=1, Gb=1, Ob=Ob0, row_tile=1))
     return out[:7]
+
+
+def dwconv1d_candidates(T: int, C: int, V: int, k: int, itemsize: int = 4,
+                        scratch_budget: float = SCRATCH_BUDGET
+                        ) -> List[TileConfig]:
+    """``(Tb, Cb)`` tilings for the fused depthwise conv1d
+    (``kernels/pcilt_dwconv1d.py``), encoded as ``TileConfig(Bb=Tb, Ob=Cb)``.
+
+    The kernel's per-step scratch is the *factored* two-level one-hot —
+    ``Vl + Vh`` indicator lanes plus the ``[Cb, Vh, Tb]`` partial fetch
+    (``V = Vl * Vh``, split at ``(bits*k)//2``) — so the analytic bound caps
+    the *time* tile per channel block on ``Vl + 2*Vh`` effective lanes, not
+    ``V`` (``T`` is the output length; the staged signal strip adds
+    ``(T + k - 1) * Cb`` floats of fixed bytes, and the ``[Cb, V]`` table
+    tile is Tb-independent)."""
+    Cb = _div_down(C, 128)
+    bw = max((V - 1).bit_length(), 1)
+    Vl = 1 << (bw // 2)
+    Vh = -(-V // Vl)
+    v_eff = Vl + 2 * Vh
+    out: List[TileConfig] = []
+    seen = set()
+
+    def add(tb: int, cb: int) -> None:
+        fixed = (T + k - 1) * cb * 4 + cb * V * itemsize
+        cap = _fit_scratch_gb(T, cb, v_eff, 4, fixed, budget=scratch_budget)
+        tb = _div_down(T, max(1, min(tb, cap)))
+        if (tb, cb) not in seen:
+            seen.add((tb, cb))
+            out.append(TileConfig(Bb=tb, Gb=1, Ob=cb))
+
+    add(128, Cb)   # heuristic: sublane-friendly time tile
+    add(T, Cb)     # stage the whole signal (scratch-clamped)
+    add(8, Cb)
+    if C > 128:
+        add(128, _div_down(C, 256))
+    return out[:5]

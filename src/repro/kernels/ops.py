@@ -18,9 +18,10 @@ Three pipelines are exposed per op:
 
 * **host-packed** (``pcilt_gemv`` / ``pcilt_conv2d`` / ``pcilt_dwconv1d``):
   caller quantizes + packs offsets on the host; kernels fetch-and-add.
-* **fused** (``pcilt_fused_gemv`` / ``pcilt_fused_conv2d``): raw float
-  activations in; quantize → pack → fetch → adder-tree run entirely in VMEM
-  (see ``pcilt_fused.py``), so the int32 offset tensor never touches HBM.
+* **fused** (``pcilt_fused_gemv`` / ``pcilt_fused_conv2d`` /
+  ``pcilt_fused_dwconv1d``): raw float activations in; quantize → pack →
+  fetch → adder-tree run entirely in VMEM (``pcilt_fused.py``,
+  ``pcilt_dwconv1d.py``), so the int32 offset tensor never touches HBM.
 * **shared-pool fused** (``pcilt_shared_gemv`` / ``pcilt_shared_conv2d``):
   the extension-3 weight-deduped configuration — a ``[X, V, O]`` pool of
   unique segment tables plus ``[G]`` int pointers — executed at fused speed;
@@ -36,6 +37,9 @@ segment axis shards) or its local ext.-3 pool (``ShardedSharedPool``:
 cardinality, so staged bytes follow local X, not global G or X), and the
 wrapper's output is that shard's partial adder-tree sum — the ``psum`` over
 the model axis lives one level up, in ``lut_layers``, never in a kernel.
+The conv wrappers additionally take ``seg_offset`` / ``n_total`` so a
+shard's kernel can im2col the full replicated image **in VMEM** and slice
+exactly its own patch columns — no host-side im2col even under a mesh.
 Consequently the autotune shape keys are built from the **local** shapes
 (``G/D``, local ``X``): tunings recorded at different device counts occupy
 different keys, and two deployments whose local problems coincide share one
@@ -50,14 +54,17 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
-# Single source of truth for the XLA-conformant stride-aware "SAME" split —
-# the host im2col and the fused/shared kernel wrappers must pad identically.
+# Single sources of truth for padding — the host-packed reference paths and
+# the fused kernel wrappers must pad identically: the XLA-conformant
+# stride-aware "SAME" split for conv2d, and the CAUSAL/SAME/VALID time pads
+# for the depthwise conv1d.
 from repro.core.lut_layers import conv_same_pads as _conv_same_pads
+from repro.core.lut_layers import _dwconv_pads
 
 from . import autotune as atn
 from .pcilt_gemv import pcilt_gemv_pallas, default_tiles
 from .pcilt_conv2d import pcilt_conv2d_pallas
-from .pcilt_dwconv1d import pcilt_dwconv1d_pallas
+from .pcilt_dwconv1d import pcilt_dwconv1d_pallas, pcilt_fused_dwconv1d_pallas
 from .pcilt_fused import pcilt_fused_gemv_pallas, pcilt_fused_conv2d_pallas
 from .pcilt_shared import (pcilt_shared_gemv_pallas,
                            pcilt_shared_conv2d_pallas)
@@ -68,6 +75,7 @@ __all__ = [
     "pcilt_dwconv1d",
     "pcilt_fused_gemv",
     "pcilt_fused_conv2d",
+    "pcilt_fused_dwconv1d",
     "pcilt_shared_gemv",
     "pcilt_shared_conv2d",
     "on_tpu",
@@ -232,6 +240,68 @@ def pcilt_dwconv1d(offsets: jax.Array, tables: jax.Array) -> jax.Array:
     return out[..., :C]
 
 
+def pcilt_fused_dwconv1d(
+    x: jax.Array,
+    tables: jax.Array,
+    spec,
+    scale,
+    k: int,
+    padding: str = "CAUSAL",
+    tiles=None,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """x [B, T, C] float, tables [C, V] (``V = 2**(bits*k)``) -> [B, To, C].
+
+    The fused depthwise pipeline: the only host-side work is the time
+    zero-pad of the raw signal; quantize, causal tap-stack, little-endian
+    pack, and the one-fetch-per-output table lookup all run in VMEM
+    (``pcilt_fused_dwconv1d_pallas``), so the ``[B, T, C]`` int32 offset
+    tensor of the host-packed path never exists in HBM.  ``padding``:
+    ``"CAUSAL"`` (``To = T``, taps ``t-k+1..t`` — the Mamba/SSM decode
+    frontend), ``"SAME"`` (centered), or ``"VALID"`` (``To = T - k + 1`` —
+    e.g. a pre-assembled ``[B, k, C]`` decode window yielding one output).
+    """
+    B, T, C = x.shape
+    C2, V = tables.shape
+    assert C == C2, (C, C2)
+    x = jnp.pad(x, ((0, 0), _dwconv_pads(k, padding), (0, 0)))
+    To = x.shape[1] - k + 1
+    key = atn.shape_key("fused_dwconv1d", dtype=tables.dtype,
+                        backend=jax.default_backend(),
+                        B=B, T=To, C=C, V=V, k=k, bits=spec.bits)
+    s2 = _scale_2d(scale, x.dtype)
+    kw = dict(bits=spec.bits, zero_point=spec.zero_point, k=k,
+              interpret=not on_tpu())
+    xp, _ = _pad_axis(x, 2, 128 if C >= 128 else 1)
+    tp, _ = _pad_axis(tables, 0, 128 if C >= 128 else 1)
+    Cp = xp.shape[-1]
+    if tiles is None:
+        cfg = atn.lookup(key)
+        if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
+                xp, s2, tp):
+            cfg = atn.tune(
+                key,
+                atn.dwconv1d_candidates(To, Cp, V, k, tables.dtype.itemsize),
+                lambda c: _fused_dwconv1d_bench(xp, s2, tp, c, kw, To),
+            )
+        if cfg is None:
+            cfg = atn.dwconv1d_candidates(To, Cp, V, k,
+                                          tables.dtype.itemsize)[0]
+        tiles = (cfg.Bb, cfg.Ob)
+    tiles = (atn._div_down(To, max(1, tiles[0])),
+             atn._div_down(Cp, max(1, tiles[1])))
+    out = pcilt_fused_dwconv1d_pallas(xp, s2, tp, tiles=tiles, **kw)
+    return out[..., :C]
+
+
+def _fused_dwconv1d_bench(xp, s2, tp, cfg, kw, To):
+    tiles = (atn._div_down(To, max(1, cfg.Bb)),
+             atn._div_down(xp.shape[-1], max(1, cfg.Ob)))
+    return lambda: pcilt_fused_dwconv1d_pallas(
+        xp, s2, tp, tiles=tiles, **kw
+    ).block_until_ready()
+
+
 # ----------------------------------------------------------------------------
 # Fused pipeline: raw floats in, quantize/pack/fetch in VMEM
 # ----------------------------------------------------------------------------
@@ -297,6 +367,14 @@ def _fused_gemv_bench(x, s2, tables, cfg, kw):
 
 
 
+def _seg_2d(seg_offset) -> jax.Array:
+    """Segment offset as the ``[1, 1]`` int32 operand the conv kernels stage
+    (0 when unsharded; the shard's first global segment under ``shard_map``)."""
+    if seg_offset is None:
+        return jnp.zeros((1, 1), jnp.int32)
+    return jnp.asarray(seg_offset, jnp.int32).reshape(1, 1)
+
+
 def pcilt_fused_conv2d(
     x: jax.Array,
     tables: jax.Array,
@@ -309,6 +387,8 @@ def pcilt_fused_conv2d(
     padding: str = "SAME",
     tiles=None,
     autotune: Optional[bool] = None,
+    seg_offset=None,
+    n_total: Optional[int] = None,
 ) -> jax.Array:
     """x [B, H, W, C] float NHWC, tables [G, V, O] -> [B, Ho, Wo, O].
 
@@ -316,45 +396,60 @@ def pcilt_fused_conv2d(
     im2col happens on quantized codes inside VMEM (``pcilt_fused.py``), so
     neither the ``[B, Ho, Wo, kh*kw*C]`` float patch tensor nor the
     ``[B, Ho, Wo, G]`` int32 offset tensor is ever materialized in HBM.
-    Tables must cover ``G * group >= kh*kw*C`` (alignment slots built from
-    zero weights, as ``core.lut_layers.pcilt_conv2d`` does).
+    Tables must cover ``n_total = G * group >= kh*kw*C`` (alignment slots
+    built from zero weights, as ``core.lut_layers.pcilt_conv2d`` does).
+
+    Under ``shard_map`` (``core.lut_layers`` ``mesh=`` conv route) ``tables``
+    is one device's ``[G/D, V, O]`` shard: pass ``seg_offset`` (the shard's
+    first segment in global segment space — typically
+    ``axis_index * G_local``) and ``n_total`` (the *global* padded reduction
+    length) so the in-VMEM im2col slices this shard's patch columns.  The
+    autotune shape key carries the local ``G`` as usual.
     """
     if padding == "SAME":
         x = jnp.pad(x, _conv_same_pads(x.shape[1], x.shape[2], kh, kw, stride))
     B, Hp, Wp, C = x.shape
     G, V, O = tables.shape
     Ho = (Hp - kh) // stride + 1
+    Wo = (Wp - kw) // stride + 1
     key = atn.shape_key("fused_conv2d", dtype=tables.dtype,
                         backend=jax.default_backend(),
                         B=B, Ho=Ho, W=Wp, C=C, k=kh * kw, s=stride,
                         G=G, V=V, O=O, g=group, bits=spec.bits)
     s2 = _scale_2d(scale, x.dtype)
+    seg2 = _seg_2d(seg_offset)
     kw_args = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
-                   kh=kh, kw=kw, stride=stride, interpret=not on_tpu())
+                   kh=kh, kw=kw, stride=stride,
+                   n_total=int(n_total) if n_total else G * group,
+                   interpret=not on_tpu())
     if tiles is None:
         cfg = atn.lookup(key)
         if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
-                x, s2, tables):
+                x, s2, seg2, tables):
             cfg = atn.tune(
                 key,
-                atn.conv2d_candidates(Ho, G, V, O, tables.dtype.itemsize),
-                lambda c: _fused_conv2d_bench(x, s2, tables, c, kw_args, Ho),
+                atn.conv2d_candidates(Ho, G, V, O, tables.dtype.itemsize,
+                                      Wo=Wo),
+                lambda c: _fused_conv2d_bench(x, s2, seg2, tables, c,
+                                              kw_args, Ho),
             )
         if cfg is None:
-            cfg = atn.conv2d_candidates(Ho, G, V, O, tables.dtype.itemsize)[0]
+            cfg = atn.conv2d_candidates(Ho, G, V, O, tables.dtype.itemsize,
+                                        Wo=Wo)[0]
         tiles = (cfg.row_tile, cfg.Gb, cfg.Ob)
     Hb, Gb, Ob = _fit_conv_tiles(tiles, Ho, G, O)
     tp, _ = _pad_axis(tables, 2, Ob if O >= 128 else 1)
-    out = pcilt_fused_conv2d_pallas(x, s2, tp, tiles=(Hb, Gb, Ob), **kw_args)
+    out = pcilt_fused_conv2d_pallas(x, s2, seg2, tp, tiles=(Hb, Gb, Ob),
+                                    **kw_args)
     return out[..., :O]
 
 
-def _fused_conv2d_bench(x, s2, tables, cfg, kw_args, Ho):
+def _fused_conv2d_bench(x, s2, seg2, tables, cfg, kw_args, Ho):
     G, O = tables.shape[0], tables.shape[-1]
     Hb, Gb, Ob = _fit_conv_tiles((cfg.row_tile, cfg.Gb, cfg.Ob), Ho, G, O)
     tp, _ = _pad_axis(tables, 2, Ob if O >= 128 else 1)
     return lambda: pcilt_fused_conv2d_pallas(
-        x, s2, tp, tiles=(Hb, Gb, Ob), **kw_args
+        x, s2, seg2, tp, tiles=(Hb, Gb, Ob), **kw_args
     ).block_until_ready()
 
 
@@ -446,14 +541,18 @@ def pcilt_shared_conv2d(
     padding: str = "SAME",
     tiles=None,
     autotune: Optional[bool] = None,
+    seg_offset=None,
+    n_total: Optional[int] = None,
 ) -> jax.Array:
     """x [B, H, W, C] float NHWC, pool [X, V, O], seg_idx [G] int32
     -> [B, Ho, Wo, O].
 
     The shared-pool sibling of :func:`pcilt_fused_conv2d`: same host-side
     spatial pad and in-VMEM im2col, with the dense table operand replaced by
-    (pointers, pool).  ``G * group >= kh*kw*C`` (alignment slots must have
-    been built from zero weights).
+    (pointers, pool).  ``n_total = G * group >= kh*kw*C`` (alignment slots
+    must have been built from zero weights).  ``seg_offset`` / ``n_total``
+    carry the shard's first global segment and the global padded reduction
+    length under ``shard_map`` — the pool and pointers stay local.
     """
     if padding == "SAME":
         x = jnp.pad(x, _conv_same_pads(x.shape[1], x.shape[2], kh, kw, stride))
@@ -461,40 +560,44 @@ def pcilt_shared_conv2d(
     X, V, O = pool.shape
     G = int(seg_idx.shape[-1])
     Ho = (Hp - kh) // stride + 1
+    Wo = (Wp - kw) // stride + 1
     key = atn.shape_key("shared_conv2d", dtype=pool.dtype,
                         backend=jax.default_backend(),
                         B=B, Ho=Ho, W=Wp, C=C, k=kh * kw, s=stride,
                         G=G, V=V, O=O, X=X, g=group, bits=spec.bits)
     s2 = _scale_2d(scale, x.dtype)
+    seg2 = _seg_2d(seg_offset)
     idx2 = seg_idx.astype(jnp.int32).reshape(1, G)
     kw_args = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
-                   kh=kh, kw=kw, stride=stride, interpret=not on_tpu())
+                   kh=kh, kw=kw, stride=stride,
+                   n_total=int(n_total) if n_total else G * group,
+                   interpret=not on_tpu())
     if tiles is None:
         cfg = atn.lookup(key)
         if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
-                x, s2, idx2, pool):
+                x, s2, seg2, idx2, pool):
             cfg = atn.tune(
                 key,
                 atn.shared_conv2d_candidates(Ho, G, V, O, X,
-                                             pool.dtype.itemsize),
-                lambda c: _shared_conv2d_bench(x, s2, idx2, pool, c,
+                                             pool.dtype.itemsize, Wo=Wo),
+                lambda c: _shared_conv2d_bench(x, s2, seg2, idx2, pool, c,
                                                kw_args, Ho),
             )
         if cfg is None:
             cfg = atn.shared_conv2d_candidates(Ho, G, V, O, X,
-                                               pool.dtype.itemsize)[0]
+                                               pool.dtype.itemsize, Wo=Wo)[0]
         tiles = (cfg.row_tile, cfg.Gb, cfg.Ob)
     Hb, Gb, Ob = _fit_conv_tiles(tiles, Ho, G, O)
     pp, _ = _pad_axis(pool, 2, Ob if O >= 128 else 1)
-    out = pcilt_shared_conv2d_pallas(x, s2, idx2, pp, tiles=(Hb, Gb, Ob),
-                                     **kw_args)
+    out = pcilt_shared_conv2d_pallas(x, s2, seg2, idx2, pp,
+                                     tiles=(Hb, Gb, Ob), **kw_args)
     return out[..., :O]
 
 
-def _shared_conv2d_bench(x, s2, idx2, pool, cfg, kw_args, Ho):
+def _shared_conv2d_bench(x, s2, seg2, idx2, pool, cfg, kw_args, Ho):
     G, O = idx2.shape[-1], pool.shape[-1]
     Hb, Gb, Ob = _fit_conv_tiles((cfg.row_tile, cfg.Gb, cfg.Ob), Ho, G, O)
     pp, _ = _pad_axis(pool, 2, Ob if O >= 128 else 1)
     return lambda: pcilt_shared_conv2d_pallas(
-        x, s2, idx2, pp, tiles=(Hb, Gb, Ob), **kw_args
+        x, s2, seg2, idx2, pp, tiles=(Hb, Gb, Ob), **kw_args
     ).block_until_ready()

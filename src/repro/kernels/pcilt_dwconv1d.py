@@ -1,14 +1,32 @@
-"""Pallas TPU kernel: PCILT depthwise conv1d — one fetch per output element.
+"""Pallas TPU kernels: PCILT depthwise conv1d — one fetch per output element.
 
 For a k-tap causal depthwise conv with activation cardinality K, the k input
 codes of a channel pack into one offset and the whole tap-dot is a single
 table cell:  ``out[b, t, c] = tables[c, offsets[b, t, c]]``.
 
 This is the purest PCILT case on TPU (Mamba2 / Zamba2 conv frontends, k=4):
-there is no reduction left — the kernel is a blocked masked-sum "gather"
-executed on the VPU, with the per-channel tables staged in VMEM and reused
-across the entire time axis (small filter × long signal, the paper's sweet
-spot).  Channels ride the 128-lane axis; time rides sublanes.
+there is no reduction left.  Channels ride the 128-lane axis; time rides
+sublanes.  Two kernels implement it:
+
+* **host-packed** (``pcilt_dwconv1d_pallas``): the caller quantizes, stacks
+  the causal tap window, and shift-or packs offsets on the host; the kernel
+  is a blocked masked-sum "gather" (a ``fori_loop`` over the ``V`` table
+  entries) with the per-channel tables staged in VMEM.
+* **fused** (``pcilt_fused_dwconv1d_pallas``): raw float activations in —
+  quantize, causal tap-stack (a static ``k``-slice loop over the staged
+  signal strip), and little-endian shift-or pack all run in VMEM, so the
+  ``[B, T, C]`` int32 offset tensor (as large as the activations themselves)
+  never touches HBM.  The fetch is one batched one-hot contraction
+  ``[Cb, Tb, V] x [Cb, V] -> [Cb, Tb]`` instead of the ``V``-step masked
+  sum: exactly one one-hot term is nonzero per output, so f32 accumulation
+  reproduces the table cell bit-exactly even for bf16 tables (same contract
+  as the host-packed kernel's f32 accumulation).
+
+The fused kernel stages the whole (padded) signal per channel block —
+``[Tp, Cb]`` floats — and revisits it across time tiles, mirroring how the
+fused conv2d kernel stages the image; the ``(Tb, Cb)`` tiling is dispatched
+through the persistent autotune table under ``fused_dwconv1d`` keys
+(``ops.py`` / ``autotune.dwconv1d_candidates``).
 """
 
 from __future__ import annotations
@@ -19,7 +37,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["pcilt_dwconv1d_pallas"]
+from .pcilt_fused import _quantize
+
+__all__ = ["pcilt_dwconv1d_pallas", "pcilt_fused_dwconv1d_pallas"]
 
 
 def _kernel(off_ref, tab_ref, out_ref, *, V: int):
@@ -66,3 +86,90 @@ def pcilt_dwconv1d_pallas(
         out_shape=jax.ShapeDtypeStruct((B, T, C), tables.dtype),
         interpret=interpret,
     )(offsets, tables)
+
+
+# ----------------------------------------------------------------------------
+# Fused pipeline: quantize + causal tap-stack + pack + fetch in VMEM
+# ----------------------------------------------------------------------------
+
+
+def _fused_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
+                  bits: int, zero_point: int, k: int, V: int, Tb: int):
+    _, _, Cb = x_ref.shape
+    # Quantize this time tile's strip (Tb outputs need Tb + k - 1 padded
+    # inputs — the caller left-pads the raw signal, so tap j of output t is
+    # padded row t + j) and tap-stack/pack via a static k-slice loop: the
+    # little-endian shift-or of core.offsets.pack_offsets, built without the
+    # [B, T, C, k] tap tensor ever existing.
+    t0 = pl.program_id(1) * Tb
+    strip = x_ref[0, pl.ds(t0, Tb + k - 1), :]  # [Tb+k-1, Cb] from VMEM
+    codes = _quantize(strip, scale_ref[0, 0], bits=bits, zero_point=zero_point)
+    off = codes[0:Tb]
+    for j in range(1, k):
+        off = off + (codes[j:j + Tb] << (j * bits))  # [Tb, Cb] int32
+
+    # Factored two-level one-hot fetch.  A flat [Tb, Cb, V] one-hot costs V
+    # compares per output and a V-wide intermediate; splitting the offset
+    # into hi/lo halves (V = Vh * Vl) exploits
+    # ``1[off==v] = 1[off_hi==vh] * 1[off_lo==vl]``: the one-hots shrink to
+    # Vl + Vh lanes and the fetch becomes two small per-channel
+    # contractions, with the largest intermediate only [Cb, Vh, Tb].  Every
+    # product chain still has exactly one nonzero term per output, so f32
+    # accumulation returns the table cell bit-exactly (bf16 tables
+    # included — same contract as the host-packed kernel's fori_loop).
+    h = (bits * k) // 2
+    Vl, Vh = 1 << h, V >> h
+    off_t = jnp.transpose(off)  # [Cb, Tb]
+    lanes_l = jax.lax.broadcasted_iota(jnp.int32, (Cb, Tb, Vl), 2)
+    lanes_h = jax.lax.broadcasted_iota(jnp.int32, (Cb, Tb, Vh), 2)
+    ohl = ((off_t & (Vl - 1))[:, :, None] == lanes_l).astype(jnp.float32)
+    ohh = ((off_t >> h)[:, :, None] == lanes_h).astype(jnp.float32)
+    tab3 = tab_ref[...].astype(jnp.float32).reshape(Cb, Vh, Vl)
+    # m[c, vh, t] = sum_vl tab3[c, vh, vl] * ohl[c, t, vl]
+    m = jax.lax.dot_general(
+        tab3, ohl, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)  # [Cb, Vh, Tb]
+    acc = jnp.sum(m * jnp.transpose(ohh, (0, 2, 1)), axis=1)  # [Cb, Tb]
+    out_ref[0] = jnp.transpose(acc).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "zero_point", "k",
+                                             "tiles", "interpret"))
+def pcilt_fused_dwconv1d_pallas(
+    x: jax.Array,
+    scale: jax.Array,
+    tables: jax.Array,
+    *,
+    bits: int,
+    zero_point: int,
+    k: int,
+    tiles,
+    interpret: bool = False,
+) -> jax.Array:
+    """x ``[B, Tp, C]`` float (already time-padded: ``Tp = To + k - 1``),
+    scale ``[1, 1]``, tables ``[C, V]`` (``V = 2**(bits*k)``) -> ``[B, To, C]``.
+
+    The whole padded signal is staged per channel block and revisited across
+    time tiles; each grid step quantizes its strip, packs the k causal taps,
+    and fetches — offsets never exist outside VMEM.  ``tiles`` is a
+    ``(Tb, Cb)`` tuple with ``Tb | To`` and ``Cb | C``.
+    """
+    B, Tp, C = x.shape
+    C2, V = tables.shape
+    assert C == C2, (C, C2)
+    To = Tp - k + 1
+    Tb, Cb = tiles
+    grid = (B, To // Tb, C // Cb)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, bits=bits, zero_point=zero_point,
+                          k=k, V=V, Tb=Tb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Tp, Cb), lambda b, i, j: (b, 0, j)),
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((Cb, V), lambda b, i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Tb, Cb), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, To, C), tables.dtype),
+        interpret=interpret,
+    )(x, scale, tables)

@@ -133,11 +133,18 @@ def pcilt_fused_gemv_pallas(
 # ----------------------------------------------------------------------------
 
 
-def _strip_offsets(x_ref, scale_ref, *, bits: int, zero_point: int,
+def _strip_offsets(x_ref, scale_ref, seg_ref, *, bits: int, zero_point: int,
                    group: int, kh: int, kw: int, stride: int,
                    Gb: int, Hb: int, n_pad: int):
     """Quantize this grid step's row strip, im2col it in VMEM, slice the
     current group range, and pack offsets -> ``[Hb*Wo, Gb]``.
+
+    ``seg_ref`` holds the segment offset of this device's table shard in the
+    *global* segment space (``[1, 1]`` int32, 0 when unsharded): under
+    ``shard_map`` every device stages the full (replicated) activation image,
+    rebuilds the full patch in VMEM, and slices out the column range its local
+    ``[G/D, V, O]`` table shard covers — the in-VMEM im2col never leaves the
+    device even when the tables are tensor-parallel.
 
     Shared between the dense-fused conv kernel and the shared-pool conv
     kernel (``pcilt_shared.py``) — the activation side of the pipeline is
@@ -166,13 +173,14 @@ def _strip_offsets(x_ref, scale_ref, *, bits: int, zero_point: int,
         # from zero weights, so any code value contributes exactly zero.
         patch = jnp.pad(patch, ((0, 0), (0, n_pad)))
 
-    # This grid step's group range: segments [k*Gb, (k+1)*Gb).
-    seg = jax.lax.dynamic_slice(
-        patch, (0, pl.program_id(3) * (Gb * group)), (Hb * Wo, Gb * group))
+    # This grid step's group range in global segment space:
+    # [seg0 + k*Gb, seg0 + (k+1)*Gb) — seg0 is the shard's segment offset.
+    col0 = (seg_ref[0, 0] + pl.program_id(3) * Gb) * group
+    seg = jax.lax.dynamic_slice(patch, (0, col0), (Hb * Wo, Gb * group))
     return _pack_flat(seg, bits=bits, group=group, Gseg=Gb)  # [Hb*Wo, Gb]
 
 
-def _conv_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
+def _conv_kernel(x_ref, scale_ref, seg_ref, tab_ref, out_ref, *,
                  bits: int, zero_point: int, group: int,
                  kh: int, kw: int, stride: int,
                  Gb: int, V: int, Hb: int, n_pad: int):
@@ -180,7 +188,8 @@ def _conv_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
     def _zero():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    off = _strip_offsets(x_ref, scale_ref, bits=bits, zero_point=zero_point,
+    off = _strip_offsets(x_ref, scale_ref, seg_ref,
+                         bits=bits, zero_point=zero_point,
                          group=group, kh=kh, kw=kw, stride=stride,
                          Gb=Gb, Hb=Hb, n_pad=n_pad)
     acc = _flat_onehot_dot(off, tab_ref[...], V=V)  # [Hb*Wo, Ob] f32
@@ -190,11 +199,12 @@ def _conv_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("bits", "zero_point", "group", "kh", "kw", "stride",
-                     "tiles", "interpret"),
+                     "n_total", "tiles", "interpret"),
 )
 def pcilt_fused_conv2d_pallas(
     x: jax.Array,
     scale: jax.Array,
+    seg_offset: jax.Array,
     tables: jax.Array,
     *,
     bits: int,
@@ -203,22 +213,33 @@ def pcilt_fused_conv2d_pallas(
     kh: int,
     kw: int,
     stride: int = 1,
+    n_total: int = 0,
     tiles=None,
     interpret: bool = False,
 ) -> jax.Array:
     """x ``[B, Hp, Wp, C]`` float (already spatially padded for the conv),
-    scale ``[1, 1]``, tables ``[G, V, O]`` -> ``[B, Ho, Wo, O]``.
+    scale ``[1, 1]``, seg_offset ``[1, 1]`` int32, tables ``[G, V, O]``
+    -> ``[B, Ho, Wo, O]``.
 
     The whole (small) image is staged in VMEM once per batch element and
     revisited across row/output/group tiles; each grid step quantizes a row
     strip, extracts patches, packs offsets, and fetches — the int32 offsets
     never exist outside VMEM.  ``tiles`` is ``(Hb, Gb, Ob)`` with ``Gb | G``
-    and ``Hb | Ho``; ``G * group >= kh*kw*C`` (zero-weight alignment slots).
+    and ``Hb | Ho``.
+
+    ``n_total`` is the *global* padded reduction length (``>= kh*kw*C``;
+    defaults to ``G * group``, the unsharded case).  Under ``shard_map`` the
+    tables operand is one device's ``[G/D, V, O]`` shard and ``seg_offset``
+    carries the shard's first segment in global segment space, so the
+    in-VMEM im2col slices exactly the patch columns the local shard covers
+    (``n_total`` stays the global length; ``G * group`` is only the local
+    slice width).
     """
     B, Hp, Wp, C = x.shape
     G, V, O = tables.shape
-    n, n_tot = kh * kw * C, G * group
-    assert n_tot >= n, (n_tot, n)
+    n = kh * kw * C
+    n_tot = n_total or G * group
+    assert n_tot >= max(n, G * group), (n_tot, n, G, group)
     Ho = (Hp - kh) // stride + 1
     Wo = (Wp - kw) // stride + 1
     Hb, Gb, Ob = tiles
@@ -231,9 +252,10 @@ def pcilt_fused_conv2d_pallas(
         in_specs=[
             pl.BlockSpec((1, Hp, Wp, C), lambda b, r, j, k: (b, 0, 0, 0)),
             pl.BlockSpec((1, 1), lambda b, r, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, r, j, k: (0, 0)),
             pl.BlockSpec((Gb, V, Ob), lambda b, r, j, k: (k, 0, j)),
         ],
         out_specs=pl.BlockSpec((1, Hb, Wo, Ob), lambda b, r, j, k: (b, r, 0, j)),
         out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, O), jnp.float32),
         interpret=interpret,
-    )(x, scale, tables).astype(tables.dtype)
+    )(x, scale, seg_offset, tables).astype(tables.dtype)

@@ -155,7 +155,7 @@ def pcilt_shared_gemv_pallas(
 # ----------------------------------------------------------------------------
 
 
-def _conv_kernel(x_ref, scale_ref, idx_ref, pool_ref, out_ref, *,
+def _conv_kernel(x_ref, scale_ref, seg_ref, idx_ref, pool_ref, out_ref, *,
                  bits: int, zero_point: int, group: int,
                  kh: int, kw: int, stride: int,
                  Gb: int, V: int, X: int, Hb: int, n_pad: int):
@@ -163,7 +163,8 @@ def _conv_kernel(x_ref, scale_ref, idx_ref, pool_ref, out_ref, *,
     def _zero():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    off = _strip_offsets(x_ref, scale_ref, bits=bits, zero_point=zero_point,
+    off = _strip_offsets(x_ref, scale_ref, seg_ref,
+                         bits=bits, zero_point=zero_point,
                          group=group, kh=kh, kw=kw, stride=stride,
                          Gb=Gb, Hb=Hb, n_pad=n_pad)  # [Hb*Wo, Gb]
     acc = _pool_counts_dot(off, idx_ref[0], pool_ref[...], V=V, X=X)
@@ -173,11 +174,12 @@ def _conv_kernel(x_ref, scale_ref, idx_ref, pool_ref, out_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("bits", "zero_point", "group", "kh", "kw", "stride",
-                     "tiles", "interpret"),
+                     "n_total", "tiles", "interpret"),
 )
 def pcilt_shared_conv2d_pallas(
     x: jax.Array,
     scale: jax.Array,
+    seg_offset: jax.Array,
     seg_idx: jax.Array,
     pool: jax.Array,
     *,
@@ -187,21 +189,27 @@ def pcilt_shared_conv2d_pallas(
     kh: int,
     kw: int,
     stride: int = 1,
+    n_total: int = 0,
     tiles=None,
     interpret: bool = False,
 ) -> jax.Array:
     """x ``[B, Hp, Wp, C]`` float (already spatially padded), scale ``[1, 1]``,
-    seg_idx ``[1, G]`` int32, pool ``[X, V, O]`` -> ``[B, Ho, Wo, O]``.
+    seg_offset ``[1, 1]`` int32, seg_idx ``[1, G]`` int32, pool ``[X, V, O]``
+    -> ``[B, Ho, Wo, O]``.
 
     Same contract as ``pcilt_fused_conv2d_pallas`` with the dense ``[G, V, O]``
     table operand replaced by (pointers, pool); ``tiles`` is ``(Hb, Gb, Ob)``
-    with ``Gb | G`` and ``Hb | Ho``; ``G * group >= kh*kw*C``.
+    with ``Gb | G`` and ``Hb | Ho``.  ``seg_offset`` / ``n_total`` carry the
+    shard's first global segment and the global padded reduction length under
+    ``shard_map`` (0 / ``G * group`` when unsharded): pointers stay *local*
+    to the staged pool, only the activation-side im2col slice is global.
     """
     B, Hp, Wp, C = x.shape
     G = seg_idx.shape[-1]
     X, V, O = pool.shape
-    n, n_tot = kh * kw * C, G * group
-    assert n_tot >= n, (n_tot, n)
+    n = kh * kw * C
+    n_tot = n_total or G * group
+    assert n_tot >= max(n, G * group), (n_tot, n, G, group)
     pool_t = jnp.transpose(pool, (1, 0, 2))  # [V, X, O], once per call
     Ho = (Hp - kh) // stride + 1
     Wo = (Wp - kw) // stride + 1
@@ -215,10 +223,11 @@ def pcilt_shared_conv2d_pallas(
         in_specs=[
             pl.BlockSpec((1, Hp, Wp, C), lambda b, r, j, k: (b, 0, 0, 0)),
             pl.BlockSpec((1, 1), lambda b, r, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, r, j, k: (0, 0)),
             pl.BlockSpec((1, Gb), lambda b, r, j, k: (0, k)),
             pl.BlockSpec((V, X, Ob), lambda b, r, j, k: (0, 0, j)),
         ],
         out_specs=pl.BlockSpec((1, Hb, Wo, Ob), lambda b, r, j, k: (b, r, 0, j)),
         out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, O), jnp.float32),
         interpret=interpret,
-    )(x, scale, seg_idx, pool_t).astype(pool.dtype)
+    )(x, scale, seg_offset, seg_idx, pool_t).astype(pool.dtype)

@@ -102,18 +102,45 @@ class MambaLM:
         logits = self._logits(params, x[:, -1:])[:, 0]
         return logits, {"layers": states, "pos": jnp.asarray(S, jnp.int32)}
 
-    def decode_step(self, params, cache, tokens, ctx: Ctx):
+    def build_pcilt(self, params, scale):
+        """Offline PCILT build for every layer's conv frontend (requires
+        ``cfg.pcilt``): per-layer ``[C, V]`` tables stacked to ``[L, C, V]``
+        so they ride the decode scan exactly like parameters.  ``scale`` is
+        the calibrated per-tensor activation scale of the conv input."""
+        from repro.core import QuantSpec
+        from repro.core.lut_layers import build_dwconv_tables
+
+        cfg = self.cfg
+        assert cfg.pcilt is not None, "cfg.pcilt must be set to build PCILTs"
+        # the conv input (xBC) is a pre-activation stream — signed, so the
+        # grid must straddle zero (symmetric), unlike post-ReLU CNN codes
+        spec = QuantSpec(bits=cfg.pcilt.act_bits, symmetric=True)
+        tables = jax.vmap(
+            lambda w: build_dwconv_tables(w, spec, scale)
+        )(params["blocks"]["mixer"]["conv_w"])  # [L, C, V]
+        return {"tables": tables, "scale": scale, "spec": spec}
+
+    def decode_step(self, params, cache, tokens, ctx: Ctx, pcilt=None):
+        """One decode step.  ``pcilt`` (from :meth:`build_pcilt`) routes every
+        layer's conv frontend through the fused PCILT fetch."""
         cfg = self.cfg
         pos = cache["pos"]
         x = self._embed(params, ctx, tokens)
 
         def body(h, inp):
-            p, st = inp
+            p, st = inp[0], inp[1]
+            pc = None if pcilt is None else {
+                "tables": inp[2], "scale": pcilt["scale"],
+                "spec": pcilt["spec"]}
             y, st2 = mamba_decode(p["mixer"], cfg, ctx,
-                                  rmsnorm(p["ln"], h, cfg.norm_eps), st)
+                                  rmsnorm(p["ln"], h, cfg.norm_eps), st,
+                                  pcilt=pc)
             return h + y, st2
 
-        x, new_states = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+        xs = (params["blocks"], cache["layers"])
+        if pcilt is not None:
+            xs = xs + (pcilt["tables"],)
+        x, new_states = jax.lax.scan(body, x, xs)
         x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
         logits = self._logits(params, x)[:, -1]
         return logits, dict(cache, layers=new_states, pos=pos + 1)

@@ -13,8 +13,14 @@ degree (zamba2: 112 heads ✓) and falls back to replicated SSD compute for
 tiny models (mamba2-130m: 24 heads — noted in the roofline analysis).
 
 PCILT integration (paper §6): the depthwise conv1d frontend is the paper's
-small-filter/large-signal sweet spot; with ``cfg.pcilt`` set, serving uses
-``pcilt_depthwise_conv1d`` — one table fetch per output element.
+small-filter/large-signal sweet spot; with ``cfg.pcilt`` set, serving builds
+per-layer ``[C, V]`` tables once (``build_pcilt_conv`` /
+``MambaLM.build_pcilt``) and both prefill and decode route the conv through
+the **fused** PCILT pipeline (``core.lut_layers.pcilt_depthwise_conv1d``
+``path="fused"``): quantize, causal tap-stack, offset-pack, and the
+one-fetch-per-output lookup all run in VMEM — the decode step's offsets
+never exist in HBM.  Tables are plain arrays, so they scan over the layer
+axis exactly like parameters.
 """
 
 from __future__ import annotations
@@ -27,7 +33,27 @@ import jax.numpy as jnp
 from .layers import Ctx, dense_spec, dense, rmsnorm_spec, rmsnorm
 from .module import ParamSpec
 
-__all__ = ["mamba_spec", "mamba_block", "mamba_decode", "ssm_cache_specs"]
+__all__ = ["mamba_spec", "mamba_block", "mamba_decode", "ssm_cache_specs",
+           "build_pcilt_conv"]
+
+
+def build_pcilt_conv(params, cfg, scale):
+    """Offline PCILT build for one layer's conv frontend: ``conv_w [k, C]``
+    -> per-channel tables ``[C, 2**(act_bits*k)]`` (requires ``cfg.pcilt``).
+
+    ``scale`` is the calibrated per-tensor activation scale of the conv
+    input (the pre-activation ``xBC`` stream).  The returned dict is what
+    ``mamba_block`` / ``mamba_decode`` accept as ``pcilt=``; stack the
+    tables over layers to scan them (``models.mamba.MambaLM.build_pcilt``).
+    """
+    from repro.core import QuantSpec, build_dwconv_tables
+
+    assert cfg.pcilt is not None, "cfg.pcilt must be set to build PCILTs"
+    # the conv input (xBC) is a pre-activation stream — signed, so the
+    # grid must straddle zero (symmetric), unlike post-ReLU CNN codes
+    spec = QuantSpec(bits=cfg.pcilt.act_bits, symmetric=True)
+    tables = build_dwconv_tables(params["conv_w"], spec, scale)
+    return {"tables": tables, "scale": scale, "spec": spec}
 
 
 def _dims(cfg):
@@ -59,15 +85,37 @@ def mamba_spec(cfg, dtype=jnp.float32):
     }
 
 
-def _conv1d(params, cfg, x, conv_state=None):
-    """Causal depthwise conv over [B, T, C]; returns (y, new_state)."""
+def _conv1d(params, cfg, x, conv_state=None, pcilt=None):
+    """Causal depthwise conv over [B, T, C]; returns (y, new_state).
+
+    With ``pcilt`` set (see :func:`build_pcilt_conv`) the tap-dot is a PCILT
+    fetch through the fused Pallas pipeline: decode evaluates the assembled
+    ``[B, k, C]`` window as a VALID conv (one fetch per channel), full
+    sequences run the CAUSAL fused kernel over the whole signal.
+    """
     k = cfg.ssm.conv_kernel
     w = params["conv_w"].astype(x.dtype)  # [k, C]
     if conv_state is not None:  # decode: state [B, k-1, C]
         window = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # [B,k,C]
-        y = jnp.einsum("bkc,kc->bc", window[:, -k:], w)[:, None]
+        if pcilt is not None:
+            from repro.core import pcilt_depthwise_conv1d
+
+            y = pcilt_depthwise_conv1d(
+                window[:, -k:], params["conv_w"], pcilt["spec"],
+                pcilt["scale"], tables=pcilt["tables"], path="fused",
+                padding="VALID").astype(x.dtype)  # [B, 1, C]
+        else:
+            y = jnp.einsum("bkc,kc->bc", window[:, -k:], w)[:, None]
         new_state = window[:, -(k - 1):]
         return y + params["conv_b"].astype(x.dtype), new_state
+    if pcilt is not None:
+        from repro.core import pcilt_depthwise_conv1d
+
+        y = pcilt_depthwise_conv1d(
+            x, params["conv_w"], pcilt["spec"], pcilt["scale"],
+            tables=pcilt["tables"], path="fused",
+            padding="CAUSAL").astype(x.dtype)
+        return y + params["conv_b"].astype(x.dtype), None
     pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
     y = sum(pad[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
     return y + params["conv_b"].astype(x.dtype), None
@@ -164,11 +212,13 @@ def _finish(params, cfg, ctx, y, xh, z):
 
 
 def mamba_block(params, cfg, ctx: Ctx, x: jax.Array,
-                return_state: bool = False):
+                return_state: bool = False, pcilt=None):
     """Full-sequence Mamba2 block (train / prefill).  x [B,T,d] -> [B,T,d].
 
     ``return_state=True`` additionally emits the decode-ready
-    ``{"conv", "ssd"}`` state at the final position (prefill)."""
+    ``{"conv", "ssd"}`` state at the final position (prefill).  ``pcilt``
+    (from :func:`build_pcilt_conv`) routes the conv frontend through the
+    fused PCILT pipeline."""
     s = cfg.ssm
     d_inner, H, _ = _dims(cfg)
     z = dense(params["wz"], x, cfg.dtype)
@@ -182,7 +232,7 @@ def mamba_block(params, cfg, ctx: Ctx, x: jax.Array,
 
     xBC = jnp.concatenate([xi, Bi, Ci], axis=-1)
     conv_tail = xBC[:, -(s.conv_kernel - 1):]  # pre-activation window
-    xBC, _ = _conv1d(params, cfg, xBC)
+    xBC, _ = _conv1d(params, cfg, xBC, pcilt=pcilt)
     xBC = jax.nn.silu(xBC)
     xi, Bi, Ci = jnp.split(
         xBC, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1
@@ -200,9 +250,12 @@ def mamba_block(params, cfg, ctx: Ctx, x: jax.Array,
 
 
 def mamba_decode(
-    params, cfg, ctx: Ctx, x: jax.Array, state: Dict
+    params, cfg, ctx: Ctx, x: jax.Array, state: Dict, pcilt=None
 ) -> Tuple[jax.Array, Dict]:
-    """One-token step.  x [B,1,d]; state {conv [B,k-1,C], ssd [B,H,N,P]}."""
+    """One-token step.  x [B,1,d]; state {conv [B,k-1,C], ssd [B,H,N,P]}.
+
+    ``pcilt`` (from :func:`build_pcilt_conv`) replaces the conv frontend's
+    tap-dot with one fused PCILT fetch per channel."""
     s = cfg.ssm
     d_inner, H, _ = _dims(cfg)
     z = dense(params["wz"], x, cfg.dtype)
@@ -212,7 +265,7 @@ def mamba_decode(
     dt = dense(params["wdt"], x, cfg.dtype).astype(jnp.float32)
 
     xBC = jnp.concatenate([xi, Bi, Ci], axis=-1)
-    xBC, conv_state = _conv1d(params, cfg, xBC, state["conv"])
+    xBC, conv_state = _conv1d(params, cfg, xBC, state["conv"], pcilt=pcilt)
     xBC = jax.nn.silu(xBC)
     xi, Bi, Ci = jnp.split(
         xBC, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1

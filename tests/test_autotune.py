@@ -182,3 +182,105 @@ def test_candidate_generators_valid():
         cands = atn.conv2d_candidates(Ho, G, V, O)
         assert cands and all(G % c.Gb == 0 and Ho % c.row_tile == 0
                              for c in cands)
+    for T, C, V, k in [(16, 6, 256, 4), (1, 192, 256, 4), (130, 129, 16, 2)]:
+        cands = atn.dwconv1d_candidates(T, C, V, k)
+        assert cands and all(T % c.Bb == 0 and C % c.Ob == 0 for c in cands)
+
+
+# ----------------------------------------------------------------------------
+# Analytic VMEM scratch bound (_fit_scratch_gb): replaces try-compile pruning.
+# ----------------------------------------------------------------------------
+
+
+def _shared_onehot_bytes(cfg, B, V, X, itemsize):
+    """Per-grid-step scratch of the shared GEMV at tiling ``cfg``: f32
+    one-hot [Bb, Gb, V] + f32 counts [Bb, V, X] + staged [V, X, Ob] pool."""
+    return (cfg.Bb * cfg.Gb * V * 4 + cfg.Bb * V * X * 4
+            + V * X * cfg.Ob * itemsize)
+
+
+def test_fit_scratch_gb_basic_properties():
+    # divides G, respects the budget, never below 1
+    for G, R, V in [(512, 128, 16), (100, 800, 16), (7, 8, 256)]:
+        gb = atn._fit_scratch_gb(G, R, V)
+        assert G % gb == 0 and gb >= 1
+        assert R * gb * V * 4 <= atn.SCRATCH_BUDGET or gb == 1
+    # a degenerate budget still yields a dispatchable tile
+    assert atn._fit_scratch_gb(64, 10**6, 10**6, budget=1) == 1
+    # fixed bytes eat into the budget monotonically
+    a = atn._fit_scratch_gb(1 << 16, 128, 16, fixed_bytes=0)
+    b = atn._fit_scratch_gb(1 << 16, 128, 16, fixed_bytes=atn.SCRATCH_BUDGET // 2)
+    assert b <= a
+
+
+def test_shared_candidates_all_fit_budget():
+    """Every candidate the analytic bound admits must fit the configured
+    scratch budget — the acceptance contract that makes try-compile pruning
+    unnecessary."""
+    B, G, V, O, X = 8, 1 << 14, 256, 1024, 16  # one-hot at Gb=G would be ~16 GB
+    itemsize = 4
+    cands = atn.shared_gemv_candidates(B, G, V, O, X, itemsize)
+    assert cands
+    for c in cands:
+        assert _shared_onehot_bytes(c, B, V, X, itemsize) <= atn.SCRATCH_BUDGET, c
+        assert G % c.Gb == 0
+
+
+def test_bounded_sweep_strictly_smaller_when_bound_bites():
+    """On an oversized problem the bounded generator emits strictly fewer
+    candidates than the unbounded (old try-compile) sweep; an infinite
+    budget reproduces the old sweep exactly."""
+    B, G, V, O, X = 8, 1 << 14, 256, 1024, 16
+    old = atn.shared_gemv_candidates(B, G, V, O, X, 4,
+                                     scratch_budget=float("inf"))
+    new = atn.shared_gemv_candidates(B, G, V, O, X, 4)
+    assert len(new) < len(old), (len(new), len(old))
+    # same on the conv flavor
+    old_c = atn.shared_conv2d_candidates(28, 1 << 14, 256, 1024, X, 4,
+                                         scratch_budget=float("inf"))
+    new_c = atn.shared_conv2d_candidates(28, 1 << 14, 256, 1024, X, 4)
+    assert len(new_c) < len(old_c)
+
+
+def test_bound_never_prunes_recorded_case_winners():
+    """On the recorded CPU-interpret problems (the BENCH shapes — small
+    enough that everything fits) the bounded candidate list must contain
+    every candidate of the unbounded sweep, so the tile the exhaustive
+    sweep would have picked is never pruned."""
+    recorded = [
+        # (B, G, V, O, X): BENCH_pr2 decode-GEMV and conv5x5 shared shapes
+        (8, 512, 16, 1024, 16),
+        (8, 100, 16, 1024, 8),
+        (1, 8, 16, 48, 5),
+    ]
+    for B, G, V, O, X in recorded:
+        unbounded = atn.shared_gemv_candidates(B, G, V, O, X, 4,
+                                               scratch_budget=float("inf"))
+        bounded = atn.shared_gemv_candidates(B, G, V, O, X, 4)
+        assert bounded == unbounded, (B, G, V, O, X)
+    for Ho, G, V, O, X in [(14, 100, 16, 64, 8), (6, 18, 16, 16, 4)]:
+        unbounded = atn.shared_conv2d_candidates(Ho, G, V, O, X, 4, Wo=16,
+                                                 scratch_budget=float("inf"))
+        bounded = atn.shared_conv2d_candidates(Ho, G, V, O, X, 4, Wo=16)
+        assert bounded == unbounded, (Ho, G, V, O, X)
+    # dense fused generators: same retention contract on recorded shapes
+    for B, G, V, O in [(8, 512, 16, 1024), (16, 16, 16, 24)]:
+        assert atn.gemv_candidates(B, G, V, O) == atn.gemv_candidates(
+            B, G, V, O, scratch_budget=float("inf"))
+
+
+def test_bounded_tunes_select_no_slower_tiles_on_recorded_cases(tune_cache):
+    """End-to-end: tuning with the bounded sweep on a recorded-size problem
+    picks a tile that times no slower than the unbounded sweep's winner
+    (identical candidate lists => identical winner modulo timing noise; we
+    assert the recorded tile is a member of the unbounded sweep)."""
+    x, T, spec, s, group = _problem(B=8, n=64, O=256)
+    ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
+    key = atn.shape_key("fused_gemv", dtype=T.dtype, backend="cpu",
+                        B=8, G=T.shape[0], V=T.shape[1], O=256, g=group,
+                        bits=spec.bits)
+    winner = atn.lookup(key)
+    assert winner is not None
+    unbounded = atn.gemv_candidates(8, T.shape[0], T.shape[1], 256, 4,
+                                    scratch_budget=float("inf"))
+    assert winner in unbounded

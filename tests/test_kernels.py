@@ -173,6 +173,122 @@ def test_fused_conv2d_parity(B, H, W, C, kh, kw, stride, O, bits, group,
                                    np.asarray(want, np.float32), **tol)
 
 
+# ----------------------------------------------------------------------------
+# Fused depthwise-conv1d parity: quantize + tap-stack + pack + factored
+# two-level one-hot fetch in VMEM must match the host-packed reference on
+# every padding mode, ragged lengths, and both table dtypes.
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,C,k,bits", [
+    (2, 16, 6, 4, 2),      # the Mamba frontend shape class (k=4)
+    (1, 33, 129, 3, 2),    # ragged T, non-128-multiple C (lane padding)
+    (2, 7, 5, 2, 4),       # tiny ragged T, 4-bit codes
+    (3, 130, 64, 4, 1),    # BoolHash bits=1, T not a tile multiple
+])
+@pytest.mark.parametrize("padding", ["CAUSAL", "SAME", "VALID"])
+def test_fused_dwconv1d_parity(B, T, C, k, bits, padding):
+    from repro.core import QuantSpec, calibrate
+    from repro.core.lut_layers import pcilt_depthwise_conv1d
+
+    spec = QuantSpec(bits)
+    x = jnp.asarray(RNG.uniform(0, 3, (B, T, C)), jnp.float32)
+    f = _mk((k, C))
+    s = calibrate(x, spec)
+    want = pcilt_depthwise_conv1d(x, f, spec, s, path="gather",
+                                  padding=padding)
+    for path in ("fused", "kernel", "onehot"):
+        got = pcilt_depthwise_conv1d(x, f, spec, s, path=path,
+                                     padding=padding)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5,
+            err_msg=f"path={path} padding={padding}")
+
+
+@pytest.mark.parametrize("padding", ["CAUSAL", "VALID"])
+def test_fused_dwconv1d_bf16_tables_exact(padding):
+    """One fetch per output: the factored one-hot chain has exactly one
+    nonzero term, so f32 accumulation must return the bf16 table cell
+    bit-exactly (the host-packed kernel's contract)."""
+    from repro.core import QuantSpec, calibrate
+    from repro.core.lut_layers import (build_dwconv_tables,
+                                       pcilt_depthwise_conv1d)
+
+    spec = QuantSpec(2)
+    x = jnp.asarray(RNG.uniform(0, 3, (2, 32, 6)), jnp.float32)
+    f = _mk((4, 6))
+    s = calibrate(x, spec)
+    tab = build_dwconv_tables(f, spec, s).astype(jnp.bfloat16)
+    want = pcilt_depthwise_conv1d(x, f, spec, s, tables=tab, path="gather",
+                                  padding=padding)
+    got = pcilt_depthwise_conv1d(x, f, spec, s, tables=tab, path="fused",
+                                 padding=padding)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_fused_dwconv1d_decode_window():
+    """The Mamba decode regime: a pre-assembled [B, k, C] window through
+    padding='VALID' yields exactly one output per channel — the fetch the
+    serving decode step dispatches."""
+    from repro.core import QuantSpec, calibrate
+    from repro.core.lut_layers import pcilt_depthwise_conv1d
+
+    spec = QuantSpec(2)
+    k, C = 4, 160
+    x = jnp.asarray(RNG.uniform(0, 2, (3, k, C)), jnp.float32)
+    f = _mk((k, C))
+    s = calibrate(x, spec)
+    want = pcilt_depthwise_conv1d(x, f, spec, s, path="gather",
+                                  padding="VALID")
+    got = pcilt_depthwise_conv1d(x, f, spec, s, path="fused",
+                                 padding="VALID")
+    assert got.shape == (3, 1, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_dwconv1d_rejects_unknown_padding():
+    from repro.core import QuantSpec, calibrate
+    from repro.core.lut_layers import pcilt_depthwise_conv1d
+
+    spec = QuantSpec(2)
+    x = jnp.asarray(RNG.uniform(0, 2, (1, 8, 4)), jnp.float32)
+    with pytest.raises(ValueError, match="CAUSAL"):
+        pcilt_depthwise_conv1d(x, _mk((3, 4)), spec, calibrate(x, spec),
+                               path="fused", padding="FULL")
+
+
+def test_fused_conv2d_seg_offset_shard_slice():
+    """The seg_offset kernel contract, without a mesh: fetching each table
+    shard at its global segment offset and summing the partials must equal
+    the full fused conv — the property the sharded in-VMEM-im2col route is
+    built on."""
+    from repro.core import QuantSpec, calibrate, build_grouped_tables
+    from repro.core.lut_layers import pcilt_conv2d
+
+    spec = QuantSpec(2)
+    B, H, W, C, kh, kw, O, group = 1, 6, 6, 4, 3, 3, 8, 2
+    x = jnp.asarray(RNG.uniform(0, 2, (B, H, W, C)), jnp.float32)
+    f = _mk((kh, kw, C, O))
+    s = calibrate(x, spec)
+    n = kh * kw * C  # 36 -> G = 18
+    T = build_grouped_tables(f.reshape(n, O), spec, s, group)
+    G = T.shape[0]
+    want = pcilt_conv2d(x, f, spec, s, group, path="fused", tables=T)
+    D = 2
+    Gl = G // D
+    parts = [
+        ops.pcilt_fused_conv2d(x, T[d * Gl:(d + 1) * Gl], spec, s, group,
+                               kh, kw, seg_offset=d * Gl, n_total=G * group)
+        for d in range(D)
+    ]
+    np.testing.assert_allclose(np.asarray(sum(parts)), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_pcilt_dwconv1d_bf16_tables_f32_accumulation():
     """bf16 tables must not round through bf16 on every fori_loop step: the
     kernel accumulates f32 and casts once, so each output equals its bf16

@@ -241,6 +241,173 @@ def test_table_pspec_divisibility_fallback():
 
 
 # ----------------------------------------------------------------------------
+# Sharded conv with in-VMEM im2col (PR 4): the fused/shared conv kernels run
+# under shard_map with a seg_offset per shard — no host im2col detour.
+# ----------------------------------------------------------------------------
+
+
+@multi_device
+@pytest.mark.parametrize("model", [1, 2, 4, 8])
+@pytest.mark.parametrize("path", ["fused", "shared"])
+def test_conv2d_in_vmem_im2col_bitwise(model, path):
+    """Integer weights + scale=1: the sharded conv route (in-VMEM im2col per
+    shard, one psum) is *bitwise* identical to the single-device gather
+    reference at every device count — each shard's partial sum is exact, so
+    summation order cannot matter."""
+    import jax.numpy as jnp
+    from repro.core import build_shared_grouped_tables, pcilt_conv2d
+
+    B, H, W, C, kh, kw, Co = 2, 8, 8, 4, 3, 3, 16
+    x = jnp.asarray(np.abs(RNG.normal(size=(B, H, W, C))), jnp.float32)
+    n = kh * kw * C  # G = 18: shards at 1/2, falls back at 4/8 (18 % 4 != 0)
+    spec, _ = _spec_scale(x)
+    s = jnp.float32(1.0)  # integer grid: exact arithmetic (see _int_weights)
+    tables = None
+    if path == "shared":
+        w = _codebook_weights(n, Co, X=4)
+        tables = build_shared_grouped_tables(jnp.asarray(w), spec, s, GROUP)
+        f = jnp.asarray(np.asarray(w).reshape(kh, kw, C, Co))
+    else:
+        f = jnp.asarray(_int_weights(n, Co).reshape(kh, kw, C, Co))
+    ref = pcilt_conv2d(x, f, spec, s, GROUP, tables=tables, path="gather")
+    got = pcilt_conv2d(x, f, spec, s, GROUP, tables=tables, path=path,
+                       mesh=_mesh(model))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@multi_device
+@pytest.mark.parametrize("model", [2, 4])
+def test_conv2d_in_vmem_im2col_strided_allclose(model):
+    """Gaussian weights, stride-2 SAME (non-congruent extent): the in-VMEM
+    sharded route stays allclose to the reference — G = 100 divides both
+    tested model-axis sizes, so this genuinely shards."""
+    import jax.numpy as jnp
+    from repro.core import mesh_shard_count, pcilt_conv2d
+
+    B, H, W, C, kh, kw, Co = 2, 9, 9, 8, 5, 5, 24
+    x = jnp.asarray(np.abs(RNG.normal(size=(B, H, W, C))), jnp.float32)
+    f = jnp.asarray(RNG.normal(size=(kh, kw, C, Co)), jnp.float32)
+    spec, s = _spec_scale(x)
+    mesh = _mesh(model)
+    assert mesh_shard_count(mesh, "model", kh * kw * C // GROUP) == model
+    ref = pcilt_conv2d(x, f, spec, s, GROUP, stride=2, path="gather")
+    got = pcilt_conv2d(x, f, spec, s, GROUP, stride=2, path="fused",
+                       mesh=mesh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@multi_device
+def test_sharded_conv_keys_local_shard_shape(tune_cache):
+    """The conv kernels dispatched under shard_map consult the autotune
+    cache with the *local* G — pre-tuning on the local shard shape with a
+    concrete seg_offset populates exactly the key the sharded trace hits."""
+    import jax.numpy as jnp
+    from repro.core import build_grouped_tables, pcilt_conv2d
+    from repro.kernels import ops
+    from repro.kernels import autotune as atn
+
+    B, H, W, C, kh, kw, Co, model = 1, 6, 6, 4, 3, 3, 16, 2
+    x = jnp.asarray(np.abs(RNG.normal(size=(B, H, W, C))), jnp.float32)
+    f = jnp.asarray(_int_weights(kh * kw * C, Co).reshape(kh, kw, C, Co))
+    spec, _ = _spec_scale(x)
+    s = jnp.float32(1.0)
+    T = build_grouped_tables(f.reshape(-1, Co), spec, s, GROUP)
+    G = T.shape[0]  # 18
+    Gl = G // model
+    ops.pcilt_fused_conv2d(x, T[:Gl], spec, s, GROUP, kh, kw,
+                           seg_offset=0, n_total=G * GROUP, autotune=True)
+    entries = json.load(open(tune_cache))
+    keys = [k for k in entries if k.startswith("fused_conv2d|")]
+    assert len(keys) == 1 and f"G={Gl}," in keys[0], keys
+    # the sharded execution is a pure cache hit on that local key
+    atn.TIMING_RUNS = 0
+    got = pcilt_conv2d(x, f, spec, s, GROUP, path="fused", mesh=_mesh(model))
+    ref = pcilt_conv2d(x, f, spec, s, GROUP, path="gather")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert atn.TIMING_RUNS == 0
+
+
+@multi_device
+def test_conv_layer_tune_keys_local_shard_shape(tune_cache):
+    """Regression: PCILTConv2d.tune under a mesh must record the *local*
+    shard's shape key (like PCILTLinear.tune) — the key the sharded
+    shard_map dispatch actually looks up — and the later sharded call must
+    be a pure cache hit."""
+    import jax.numpy as jnp
+    from repro.core import pcilt_conv2d
+    from repro.core.serving import convert_conv_kernel
+    from repro.kernels import autotune as atn
+
+    model = 2
+    x = jnp.asarray(np.abs(RNG.normal(size=(2, 8, 8, 4))), jnp.float32)
+    f = jnp.asarray(_int_weights(3 * 3 * 4, 8).reshape(3, 3, 4, 8))
+    spec, _ = _spec_scale(x)
+    s = jnp.float32(1.0)  # exact arithmetic -> bitwise parity
+    conv = convert_conv_kernel(f, spec, s, group=GROUP, mesh=_mesh(model))
+    conv.tune(x)  # G = 18 -> local G 9
+    entries = json.load(open(tune_cache))
+    keys = [k for k in entries if k.startswith("fused_conv2d|")]
+    assert len(keys) == 1 and "G=9," in keys[0], keys
+    atn.reset_cache(tune_cache)
+    atn.TIMING_RUNS = 0
+    ref = pcilt_conv2d(x, f, spec, s, GROUP, path="gather")
+    np.testing.assert_array_equal(np.asarray(conv(x, path="fused")),
+                                  np.asarray(ref))
+    assert atn.TIMING_RUNS == 0, "sharded dispatch missed the tuned entry"
+
+
+@multi_device
+def test_conv_layer_shared_mesh_preshards_pool(tune_cache):
+    """A shared PCILTConv2d converted with mesh= shards and places the pool
+    at conversion (offline), keeps per-device memory at local-pool scale,
+    and tunes the local-shard shared_conv2d key."""
+    import jax.numpy as jnp
+    from repro.core import pcilt_conv2d
+    from repro.core.serving import convert_conv_kernel
+
+    model, n, Co = 2, 36, 8
+    w = _codebook_weights(n, Co, X=4)
+    f = jnp.asarray(np.asarray(w).reshape(3, 3, 4, Co))
+    x = jnp.asarray(np.abs(RNG.normal(size=(2, 8, 8, 4))), jnp.float32)
+    spec, _ = _spec_scale(x)
+    s = jnp.float32(1.0)
+    conv = convert_conv_kernel(f, spec, s, group=GROUP, shared=True,
+                               mesh=_mesh(model))
+    assert conv.shard_pools is not None
+    assert conv.shard_pools.n_shards == model
+    assert conv.per_device_table_bytes() <= conv.table_bytes()
+    conv.tune(x)
+    keys = [k for k in json.load(open(tune_cache))
+            if k.startswith("shared_conv2d|")]
+    assert len(keys) == 1 and "G=9," in keys[0], keys
+    ref = pcilt_conv2d(x, f, spec, s, GROUP, path="gather")
+    np.testing.assert_array_equal(np.asarray(conv(x, path="shared")),
+                                  np.asarray(ref))
+
+
+# ----------------------------------------------------------------------------
+# Fused dwconv1d under the multi-device tier: plain parity (the kernel is
+# unsharded — depthwise has no segment axis — but must coexist with forced
+# multi-device platforms).
+# ----------------------------------------------------------------------------
+
+
+@multi_device
+def test_fused_dwconv1d_parity_under_forced_devices():
+    import jax.numpy as jnp
+    from repro.core import pcilt_depthwise_conv1d
+
+    x = jnp.asarray(np.abs(RNG.normal(size=(2, 24, 8))), jnp.float32)
+    f = jnp.asarray(RNG.normal(size=(4, 8)), jnp.float32)
+    spec, s = _spec_scale(x)
+    ref = pcilt_depthwise_conv1d(x, f, spec, s, path="gather")
+    got = pcilt_depthwise_conv1d(x, f, spec, s, path="fused")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------------
 # Sharded shared pools: local-X memory scaling and structure.
 # ----------------------------------------------------------------------------
 

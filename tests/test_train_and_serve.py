@@ -70,7 +70,8 @@ def test_pcilt_decode_matches_dense_on_quantized_grid():
 
 
 def test_pcilt_mamba_conv_frontend():
-    """DESIGN §6: the SSM depthwise conv frontend through the PCILT path."""
+    """DESIGN §6: the SSM depthwise conv frontend through the PCILT paths —
+    host-packed and fused both match the quantized-grid oracle."""
     from repro.core import QuantSpec, calibrate, pcilt_depthwise_conv1d, quantize, dequantize
 
     rng = np.random.default_rng(1)
@@ -78,8 +79,150 @@ def test_pcilt_mamba_conv_frontend():
     filt = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
     spec = QuantSpec(bits=2)
     s = calibrate(x, spec)
-    y = pcilt_depthwise_conv1d(x, filt, spec, s, path="kernel")
     xq = dequantize(quantize(x, spec, s), spec, s)
     pad = jnp.pad(xq, ((0, 0), (3, 0), (0, 0)))
     want = sum(pad[:, i:i + 32] * filt[i][None, None] for i in range(4))
-    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4)
+    for path in ("kernel", "fused"):
+        y = pcilt_depthwise_conv1d(x, filt, spec, s, path=path)
+        np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"path={path}")
+
+
+def test_serving_conv_layers_cache_conversion(tmp_path, monkeypatch):
+    """PCILTConv2d / PCILTDwConv1d hoist every per-call host cost into the
+    offline conversion: tables are built exactly once, repeated calls hit
+    the cached jitted executor, and outputs stay on the quantized grid."""
+    from repro.core import QuantSpec, calibrate, quantize, dequantize
+    from repro.core import lut_layers
+    from repro.core.serving import convert_conv_kernel, convert_dwconv
+
+    monkeypatch.setenv("REPRO_PCILT_TUNE_CACHE", str(tmp_path / "t.json"))
+    rng = np.random.default_rng(2)
+    spec = QuantSpec(bits=2)
+
+    # conv2d: parity vs the quantized-grid dense conv on every path
+    x = jnp.asarray(np.abs(rng.normal(size=(2, 8, 8, 3))), jnp.float32)
+    f = jnp.asarray(rng.normal(size=(3, 3, 3, 5)) * 0.3, jnp.float32)
+    s = calibrate(x, spec)
+    conv = convert_conv_kernel(f, spec, s, group=2)
+    xq = dequantize(quantize(x, spec, s), spec, s)
+    want = jax.lax.conv_general_dilated(
+        xq, f, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    for path in ("gather", "fused", "kernel"):
+        np.testing.assert_allclose(np.asarray(conv(x, path=path)),
+                                   np.asarray(want), rtol=1e-4, atol=1e-4)
+    assert set(conv._exec) == {"gather", "fused", "kernel"}  # jit cached
+
+    # table build is offline-only: __call__ must not rebuild
+    calls = []
+    orig = lut_layers.build_grouped_tables
+    monkeypatch.setattr(lut_layers, "build_grouped_tables",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    conv(x, path="fused")
+    assert not calls, "serving call rebuilt tables per step"
+
+    # dwconv: conversion builds [C, V] tables once; fused/kernel parity
+    xt = jnp.asarray(np.abs(rng.normal(size=(2, 16, 6))), jnp.float32)
+    ft = jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)
+    st = calibrate(xt, spec)
+    dw = convert_dwconv(ft, spec, st)
+    assert dw.tables.shape == (6, 2 ** (spec.bits * 4))
+    ref = dw(xt, path="gather")
+    for path in ("fused", "kernel"):
+        np.testing.assert_allclose(np.asarray(dw(xt, path=path)),
+                                   np.asarray(ref), rtol=1e-5, atol=1e-5)
+    out = dw.tune(xt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_conv_same_pads_memoized():
+    from repro.core.lut_layers import conv_same_pads
+
+    conv_same_pads.cache_clear()
+    a = conv_same_pads(14, 14, 5, 5, 2)
+    b = conv_same_pads(14, 14, 5, 5, 2)
+    assert a == b
+    assert conv_same_pads.cache_info().hits >= 1
+
+
+def test_ssm_conv1d_pcilt_matches_quantized_oracle(tmp_path, monkeypatch):
+    """``nn.ssm._conv1d`` with PCILT tables — the exact integration point the
+    decode scan dispatches — equals the tap-dot on fake-quantized inputs, in
+    both the decode-window and full-sequence branches (the fetch is exact on
+    the quantized grid, so quantization is the *only* difference)."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.configs.base import PCILTConfig
+    from repro.core import quantize, dequantize
+    from repro.nn.ssm import _conv1d, build_pcilt_conv, mamba_spec
+    from repro.nn import materialize
+
+    monkeypatch.setenv("REPRO_PCILT_TUNE_CACHE", str(tmp_path / "t.json"))
+    cfg = get_smoke_config("mamba2-130m")
+    cfg = dataclasses.replace(cfg, pcilt=PCILTConfig(act_bits=4, group=2))
+    params = materialize(mamba_spec(cfg), jax.random.PRNGKey(3))
+    k = cfg.ssm.conv_kernel
+    C = params["conv_w"].shape[1]
+    rng = np.random.default_rng(4)
+    scale = jnp.float32(0.1)
+    pc = build_pcilt_conv(params, cfg, scale)
+    spec = pc["spec"]
+
+    def fq(v):
+        return dequantize(quantize(v, spec, scale), spec, scale)
+
+    # decode branch: assembled [B, k, C] window -> one output
+    x1 = jnp.asarray(rng.normal(size=(2, 1, C)) * 0.3, jnp.float32)
+    state = jnp.asarray(rng.normal(size=(2, k - 1, C)) * 0.3, jnp.float32)
+    got, new_state = _conv1d(params, cfg, x1, conv_state=state, pcilt=pc)
+    window = jnp.concatenate([state, x1], axis=1)
+    want = jnp.einsum("bkc,kc->bc", fq(window), params["conv_w"])[:, None] \
+        + params["conv_b"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(new_state),
+                                  np.asarray(window[:, 1:]))
+
+    # full-sequence branch (prefill): causal over [B, T, C]
+    xs = jnp.asarray(rng.normal(size=(2, 8, C)) * 0.3, jnp.float32)
+    got_seq, _ = _conv1d(params, cfg, xs, pcilt=pc)
+    pad = jnp.pad(fq(xs), ((0, 0), (k - 1, 0), (0, 0)))
+    want_seq = sum(pad[:, i:i + 8] * params["conv_w"][i][None, None]
+                   for i in range(k)) + params["conv_b"]
+    np.testing.assert_allclose(np.asarray(got_seq), np.asarray(want_seq),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_decode_step_with_pcilt(tmp_path, monkeypatch):
+    """End-to-end wiring: MambaLM.decode_step(pcilt=...) scans the stacked
+    [L, C, V] tables alongside the parameters, advances the cache, and
+    produces finite logits on the decode path."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.configs.base import PCILTConfig
+    from repro.models import build_model
+    from repro.nn import materialize
+    from repro.nn.layers import Ctx
+
+    monkeypatch.setenv("REPRO_PCILT_TUNE_CACHE", str(tmp_path / "t.json"))
+    cfg = get_smoke_config("mamba2-130m")
+    cfg = dataclasses.replace(cfg, pcilt=PCILTConfig(act_bits=4, group=2))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 16
+    params = materialize(model.param_specs(), key)
+    ctx = Ctx()
+    _, cache = model.prefill(params, {"tokens": jax.random.randint(
+        key, (B, S), 0, cfg.vocab)}, ctx)
+    pcilt = model.build_pcilt(params, jnp.float32(0.1))
+    assert pcilt["tables"].shape[0] == cfg.n_layers
+    tok = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+    logits, new_cache = jax.jit(
+        lambda p, c, t: model.decode_step(p, c, t, ctx, pcilt=pcilt)
+    )(params, cache, tok)
+    assert logits.shape[0] == B
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(new_cache["pos"]) == S + 1
