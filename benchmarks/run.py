@@ -33,6 +33,13 @@ Sections:
                seg_offset kernels) vs the PR 3 host-im2col + sharded-GEMV
                route at model=4 (subprocess, forced host devices).
                dwconv.* and shard_conv.* write BENCH_pr4.json.
+  decode_e2e.* — the end-to-end Mamba decode step at batch 1 (the paper's
+               fetch-instead-of-compute claim over the *whole* hot loop):
+               dense decode_step vs conv-only PCILT vs full-PCILT (every
+               projection a layer-stacked fused table fetch,
+               core.serving.convert_mamba_decode) vs the host-packed
+               projection baseline; us/step, median-of-reps, CPU
+               interpret.  Results are written to BENCH_pr5.json.
   roofline.* — summary terms per hillclimbed cell (full table:
                ``python -m benchmarks.roofline``).
 
@@ -505,6 +512,130 @@ def pr4_rows(bench_json: str = "BENCH_pr4.json"):
     return rows
 
 
+def decode_e2e_rows(bench_json: str = "BENCH_pr5.json"):
+    """decode_e2e.* -> BENCH_pr5.json: the batch-1 Mamba decode step.
+
+    Four variants of the same ``MambaLM.decode_step``:
+
+    * **dense** — every projection a matmul, conv a tap-dot;
+    * **conv_only_pcilt** — PR 4 state: conv frontend fetches, projections
+      still dense;
+    * **full_pcilt_hostpacked_proj** — every projection a PCILT fetch via
+      the host-packed pipeline (quantize + pack offsets in HBM, per-layer
+      table slice copied out of the stack each scan step) — the baseline
+      the stacked kernel exists to beat;
+    * **full_pcilt_fused** — the PR 5 path: layer-stacked ``[L, G, V, O]``
+      tables resident, scalar-prefetch staging, quantize→pack→fetch in VMEM
+      (``convert_mamba_decode``).
+
+    All variants share one calibration and one jit each; us/step is the
+    median over reps of the full step (embed → L scanned blocks → logits).
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    rows = []
+    speedups = {}
+    skipped = {}
+
+    def block():
+        from repro.configs import get_smoke_config
+        from repro.configs.base import PCILTConfig
+        from repro.core.serving import convert_mamba_decode
+        from repro.models import build_model
+        from repro.nn import materialize
+        from repro.nn.layers import Ctx
+
+        cfg = get_smoke_config("mamba2-130m")
+        if not _SMOKE:
+            # Batch-starved decode at a width where the projections dominate
+            # per-step FLOPs (the regime the stacked path targets); smoke
+            # keeps the CI-sized smoke dims.
+            cfg = dataclasses.replace(
+                cfg, d_model=256,
+                ssm=dataclasses.replace(cfg.ssm, d_state=64, head_dim=64))
+        cfg = dataclasses.replace(cfg, pcilt=PCILTConfig(act_bits=2, group=2),
+                                  dtype=jnp.float32)
+        model = build_model(cfg)
+        key = jax.random.PRNGKey(0)
+        params = materialize(model.param_specs(), key)
+        ctx = Ctx()
+        B, S = 1, 16
+        calib = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        _, cache = model.prefill(params, {"tokens": calib}, ctx)
+        tok = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+
+        eng = convert_mamba_decode(model, params, calib)
+        eng.tune(batch=B)  # record fused_gemv_stacked winners before jitting
+        # Tune the host-packed baseline's kernels too (same eager
+        # tune-once-and-record, per projection shape) so the comparison is
+        # stacked-vs-host-packed architecture, not tuned-vs-heuristic tiles.
+        from repro.kernels import ops
+
+        for t in eng.pcilt["proj"]["tables"].values():
+            off = jnp.zeros((B, t.shape[1]), jnp.int32)
+            ops.pcilt_gemv(off, t[0], autotune=True)
+        conv_only = {k: v for k, v in eng.pcilt.items() if k != "proj"}
+        hostpacked = dict(eng.pcilt,
+                          proj=dict(eng.pcilt["proj"], path="kernel"))
+        variants = [
+            ("dense", None),
+            ("conv_only_pcilt", conv_only),
+            ("full_pcilt_hostpacked_proj", hostpacked),
+            ("full_pcilt_fused", eng.pcilt),
+        ]
+        times = {}
+        for name, pc in variants:
+            fn = jax.jit(lambda p, c, t, pc=pc: model.decode_step(
+                p, c, t, ctx, pcilt=pc))
+            fn(params, cache, tok)[0].block_until_ready()
+            times[name] = _timeit(
+                lambda: fn(params, cache, tok)[0].block_until_ready())
+        speedups["full_pcilt_vs_hostpacked_proj"] = (
+            times["full_pcilt_hostpacked_proj"] / times["full_pcilt_fused"])
+        speedups["full_pcilt_vs_dense"] = (
+            times["dense"] / times["full_pcilt_fused"])
+        speedups["conv_only_vs_dense"] = (
+            times["dense"] / times["conv_only_pcilt"])
+        tag = (f"b1_d{cfg.d_model}_L{cfg.n_layers}"
+               f"_bits{cfg.pcilt.act_bits}g{cfg.pcilt.group}")
+        rows.append((f"decode_e2e.{tag}_dense", times["dense"],
+                     f"{1e6 / times['dense']:.1f} tokens/s"))
+        rows.append((f"decode_e2e.{tag}_conv_only_pcilt",
+                     times["conv_only_pcilt"],
+                     f"{speedups['conv_only_vs_dense']:.2f}x vs dense"))
+        rows.append((f"decode_e2e.{tag}_full_pcilt_hostpacked_proj",
+                     times["full_pcilt_hostpacked_proj"],
+                     "host quantize+pack, per-step table-slice copy"))
+        rows.append((f"decode_e2e.{tag}_full_pcilt_fused",
+                     times["full_pcilt_fused"],
+                     f"{speedups['full_pcilt_vs_hostpacked_proj']:.2f}x vs "
+                     f"host-packed proj, "
+                     f"{speedups['full_pcilt_vs_dense']:.2f}x vs dense"))
+        rows.append((f"decode_e2e.{tag}_table_mib",
+                     eng.table_bytes() / 2**20,
+                     "conv [L,C,V] + stacked proj [L,G,V,O] tables"))
+
+    _guard(rows, skipped, "decode_e2e.batch1", block)
+
+    if bench_json:
+        payload = {
+            "pr": 5,
+            "backend": jax.default_backend(),
+            "timing": "interpret-mode CPU" if jax.default_backend() != "tpu"
+                      else "compiled TPU",
+            "target_min_speedup": {"full_pcilt_vs_hostpacked_proj": 1.5},
+            "speedup": {k: round(v, 3) for k, v in speedups.items()},
+            "skipped": skipped,
+            "rows": _json_rows(rows),
+        }
+        with open(_bench_path(bench_json), "w") as fp:
+            json.dump(payload, fp, indent=1)
+    return rows
+
+
 def roofline_rows():
     import glob
     import json
@@ -540,11 +671,28 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="minimal reps, JSON to a tempdir (CI harness guard "
                          "— checked-in BENCH files are not touched)")
+    ap.add_argument("--only", default=None, metavar="SECTION",
+                    help="run a single section by prefix (e.g. decode_e2e) — "
+                         "the CI decode-smoke step uses this to guard the "
+                         "end-to-end decode benchmark in isolation")
+    ap.add_argument("--skip", default=None, metavar="SECTION",
+                    help="drop one section by prefix — the CI benchmarks-"
+                         "smoke step skips decode_e2e there because the "
+                         "dedicated decode-smoke step already runs it "
+                         "(every section still runs exactly once per CI job)")
     args = ap.parse_args(argv)
     global _SMOKE
     _SMOKE = args.smoke
     sections = [paper_rows, micro_rows, lm_rows, fused_rows, shared_rows,
-                shard_rows, pr4_rows, roofline_rows]
+                shard_rows, pr4_rows, decode_e2e_rows, roofline_rows]
+    if args.only:
+        sections = [s for s in sections
+                    if s.__name__.startswith(args.only)]
+        if not sections:
+            ap.error(f"--only {args.only!r} matches no section")
+    if args.skip:
+        sections = [s for s in sections
+                    if not s.__name__.startswith(args.skip)]
     if args.smoke:
         outdir = tempfile.mkdtemp(prefix="bench-smoke-")
         os.environ.setdefault("REPRO_PCILT_TUNE_CACHE",

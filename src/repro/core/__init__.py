@@ -12,6 +12,7 @@ layers with gather / one-hot-MXU / Pallas paths), learnable (ext. 4).
 from .quantization import (
     QuantSpec,
     calibrate,
+    scale_from_amax,
     quantize,
     dequantize,
     fake_quant,

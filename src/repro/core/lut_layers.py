@@ -227,6 +227,36 @@ def _pcilt_linear_sharded(x, tables, spec, scale, group, path, mesh,
     return out.reshape(*lead, out.shape[-1])
 
 
+def _pcilt_linear_stacked_sharded(x, tables, layer, spec, scale, group,
+                                  mesh, mesh_axis) -> jax.Array:
+    """Layer-stacked fused GEMV under ``shard_map``: the ``[L, G, V, O]``
+    stack shards on its *segment* axis (the same ``"table_seg"`` rule dense
+    tables use, one position to the right), each device runs the stacked
+    kernel over its resident ``[L, G/D, V, O]`` shard at the scan-carried
+    layer index, and one ``psum`` per step combines the partial adder-tree
+    sums — the stacked kernel's scalar-prefetch table staging survives the
+    mesh unchanged because every shard's stack stays put in its own HBM.
+    """
+    from repro import compat
+    from repro.kernels import ops  # local import: kernels are optional
+
+    lead = x.shape[:-1]
+    flat = x.reshape(-1, x.shape[-1])
+    l1 = jnp.asarray(layer, jnp.int32).reshape(1)
+
+    def shard_fn(xl, tab_l, lyr):
+        part = ops.pcilt_fused_gemv_stacked(xl, tab_l, lyr[0], spec, scale,
+                                            group)
+        return jax.lax.psum(part, mesh_axis)
+
+    out = compat.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(None, mesh_axis), P(None, mesh_axis, None, None), P()),
+        out_specs=P(), check_vma=False,
+    )(flat, tables, l1)
+    return out.reshape(*lead, out.shape[-1])
+
+
 def pcilt_linear(
     x: jax.Array,
     tables,
@@ -237,6 +267,7 @@ def pcilt_linear(
     path: str = "gather",
     mesh=None,
     mesh_axis: str = "model",
+    stacked=None,
 ) -> jax.Array:
     """Quantize -> pack offsets -> fetch -> sum.   ``x: [..., n] -> [..., out]``.
 
@@ -245,6 +276,17 @@ def pcilt_linear(
     accepted on ``path="gather"`` for the pointer-gather reference), or a
     pre-sharded ``ShardedSharedPool`` (mesh execution only).
 
+    With ``stacked=`` (a possibly-traced integer layer index), ``tables``
+    is a layer-stacked dense ``[L, G, V, out]`` array holding every layer's
+    tables of a scanned network, and the call executes layer ``stacked``:
+    ``path="fused"`` runs the scalar-prefetch stacked kernel
+    (``repro.kernels.pcilt_fused_gemv_stacked``) so the resident stack is
+    tiled directly — the ``lax.scan`` carrying the index never copies a
+    ``[G, V, out]`` slice through HBM — while the host-packed reference
+    paths (``gather``/``onehot``/``kernel``) slice the layer explicitly
+    (paying exactly that copy; they exist for parity and as the baseline
+    the stacked kernel is benchmarked against).
+
     With ``mesh=``, the segment axis is sharded over ``mesh_axis`` and the
     partial sums are ``psum``-combined (see the module docstring); without a
     mesh — or when the axis does not divide ``G`` — execution is the
@@ -252,6 +294,38 @@ def pcilt_linear(
     (its positions are arbitrary): combining ``plan=`` with a mesh that
     would shard raises rather than silently replicating.
     """
+    if stacked is not None:
+        if isinstance(tables, (SharedGroupedTables, ShardedSharedPool)):
+            raise ValueError(
+                "stacked= executes layer-stacked dense [L, G, V, O] tables; "
+                "shared pools have no stacked path — materialize() per layer "
+                "or use the unstacked shared layer")
+        if tables.ndim != 4:
+            raise ValueError(
+                f"stacked= expects [L, G, V, O] tables, got shape "
+                f"{tables.shape}")
+        if plan is not None:
+            raise ValueError(
+                "stacked= packs contiguous segments (the tables of every "
+                "layer share one segment grid); generalized SegmentPlans "
+                "cannot ride the layer stack — drop plan= or slice the "
+                "layer's tables and use the unstacked paths")
+        L, G, V, O = tables.shape
+        if path == "fused":
+            _check_contiguous_segments(path, None, x.shape[-1], G, group)
+            if mesh_shard_count(mesh, mesh_axis, G) > 1:
+                return _pcilt_linear_stacked_sharded(
+                    x, tables, stacked, spec, scale, group, mesh, mesh_axis)
+            from repro.kernels import ops  # local import: kernels optional
+
+            flat = x.reshape(-1, x.shape[-1])
+            out = ops.pcilt_fused_gemv_stacked(flat, tables, stacked, spec,
+                                               scale, group)
+            return out.reshape(*x.shape[:-1], O)
+        # Reference / host-packed baseline: slice the layer (the HBM copy
+        # the stacked fused kernel exists to avoid) and fall through.
+        tables = jax.lax.dynamic_index_in_dim(
+            tables, jnp.asarray(stacked, jnp.int32), 0, keepdims=False)
     shared = tables if isinstance(tables, SharedGroupedTables) else None
     if isinstance(tables, ShardedSharedPool):
         if path not in ("shared", "gather"):

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 __all__ = [
     "QuantSpec",
     "calibrate",
+    "scale_from_amax",
     "quantize",
     "dequantize",
     "fake_quant",
@@ -77,6 +78,25 @@ class QuantSpec:
         return jnp.uint8  # all supported cardinalities fit a byte
 
 
+def scale_from_amax(amax, spec: QuantSpec) -> jax.Array:
+    """Observed absmax -> quantization scale on ``spec``'s grid.
+
+    The single source of the amax-to-scale convention (span and epsilon
+    clamp): :func:`calibrate` applies it to a tensor's observed range, and
+    calibration passes that collect absmax statistics themselves — e.g. the
+    per-layer decode-projection calibration in
+    ``core.serving.convert_mamba_decode`` — apply it to their accumulators,
+    so the scales they derive are exactly the scales ``quantize`` /
+    ``fake_quant`` consume.
+    """
+    if spec.symmetric:
+        # codes cover [-zp, K-1-zp]; bound by the smaller side magnitude.
+        span = max(spec.cardinality - 1 - spec.zero_point, 1)
+    else:
+        span = spec.cardinality - 1
+    return jnp.maximum(jnp.asarray(amax), 1e-8) / span
+
+
 def calibrate(x: jax.Array, spec: QuantSpec, axis=None) -> jax.Array:
     """Absmax scale so that the observed range maps onto the code grid.
 
@@ -84,13 +104,10 @@ def calibrate(x: jax.Array, spec: QuantSpec, axis=None) -> jax.Array:
     integer range.  ``axis`` permits per-channel calibration.
     """
     if spec.symmetric:
-        # codes cover [-zp, K-1-zp]; bound by the smaller side magnitude.
         amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
-        span = max(spec.cardinality - 1 - spec.zero_point, 1)
     else:
         amax = jnp.max(jnp.maximum(x, 0.0), axis=axis, keepdims=axis is not None)
-        span = spec.cardinality - 1
-    return jnp.maximum(amax, 1e-8) / span
+    return scale_from_amax(amax, spec)
 
 
 def quantize(x: jax.Array, spec: QuantSpec, scale) -> jax.Array:

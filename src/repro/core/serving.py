@@ -21,7 +21,8 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from .quantization import QuantSpec, calibrate, quantize, dequantize
+from .quantization import (QuantSpec, calibrate, quantize, dequantize,
+                           scale_from_amax)
 from .pcilt import (SharedGroupedTables, ShardedSharedPool,
                     build_grouped_tables, build_shared_grouped_tables,
                     shard_shared_grouped_tables)
@@ -29,8 +30,8 @@ from .lut_layers import (build_dwconv_tables, mesh_shard_count, pcilt_conv2d,
                          pcilt_depthwise_conv1d, pcilt_linear)
 
 __all__ = ["PCILTLinear", "PCILTConv2d", "PCILTDwConv1d", "convert_kernel",
-           "convert_conv_kernel", "convert_dwconv", "pcilt_apply",
-           "mlp_table_bytes"]
+           "convert_conv_kernel", "convert_dwconv", "convert_mamba_decode",
+           "PCILTMambaDecode", "pcilt_apply", "mlp_table_bytes"]
 
 
 def _place_sharded_pool(sp: ShardedSharedPool, mesh,
@@ -466,6 +467,125 @@ def convert_dwconv(filters: jax.Array, act_spec: QuantSpec,
     ``[C, 2**(bits*k)]`` tables, built once (the per-call rebuild the eager
     path used to pay is exactly what this hoists)."""
     return PCILTDwConv1d(filters, act_spec, act_scale)
+
+
+class PCILTMambaDecode:
+    """A fully-converted Mamba decode path: the calibrated PCILT bundle
+    (conv ``[L, C, V]`` tables + layer-stacked ``[L, G, V, O]`` projection
+    tables) plus the **hoisted jitted step executor** — eager serving loops
+    call one compiled function per token instead of re-tracing
+    ``decode_step`` (and re-closing over the table stack) every step.
+
+    Built by :func:`convert_mamba_decode`; ``step``/``__call__`` mirror
+    ``MambaLM.decode_step(params, cache, tokens)``.  :meth:`tune` eagerly
+    autotunes the stacked projection kernels for a decode batch shape and
+    records the winners under ``fused_gemv_stacked`` keys (local-shard
+    shapes under a mesh), so the jitted dispatch hits the lookup table at
+    trace time.
+    """
+
+    def __init__(self, model, pcilt: Dict, ctx=None):
+        from repro.nn.layers import Ctx
+
+        self.model = model
+        self.pcilt = pcilt
+        self.ctx = ctx if ctx is not None else Ctx()
+        self._step = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t, self.ctx,
+                                              pcilt=self.pcilt))
+
+    def step(self, params, cache, tokens):
+        """One converted decode step: ``(logits, new_cache)``."""
+        return self._step(params, cache, tokens)
+
+    __call__ = step
+
+    def table_bytes(self) -> int:
+        """Total bytes of every table the converted decode deploys."""
+        t = self.pcilt["tables"]
+        total = t.size * t.dtype.itemsize
+        proj = self.pcilt.get("proj")
+        if proj is not None:
+            total += sum(a.size * a.dtype.itemsize
+                         for a in proj["tables"].values())
+        return total
+
+    def tune(self, batch: int = 1) -> None:
+        """Eagerly autotune each projection's stacked kernel at this decode
+        batch size (layer 0 is representative: the per-layer staged slice is
+        what the kernel tiles, and the shape key is layer-independent).
+        Under a mesh, tuning runs on the local ``[L, G/D, V, O]`` shard —
+        the problem each device's kernel dispatches."""
+        from repro.core.lut_layers import mesh_shard_count
+        from repro.kernels import ops  # local import: kernels are optional
+
+        proj = self.pcilt.get("proj")
+        if proj is None or proj.get("path") != "fused":
+            return
+        group = proj["group"]
+        for name, t in proj["tables"].items():
+            G = t.shape[1]
+            D = mesh_shard_count(proj.get("mesh"),
+                                 proj.get("mesh_axis", "model"), G)
+            Gl = G // D
+            x = jnp.zeros((batch, Gl * group), jnp.float32)
+            ops.pcilt_fused_gemv_stacked(
+                x, t[:, :Gl], 0, proj["spec"], proj["scales"][name][0],
+                group, autotune=True)
+
+
+def convert_mamba_decode(model, params, calib_tokens, ctx=None, *,
+                         proj_path: str = "fused", projections=None,
+                         mesh=None, mesh_axis: str = "model",
+                         table_dtype=jnp.float32) -> PCILTMambaDecode:
+    """Offline full-PCILT conversion of a ``MambaLM`` decode step.
+
+    The once-per-lifetime build for the paper's end-to-end decode story:
+
+    1. **calibrate** — one prefill pass over ``calib_tokens`` ``[B, S]``
+       (``MambaLM.calibrate_pcilt``) captures per-layer absmax of every
+       activation the converted step quantizes, turned into per-projection
+       per-layer scales on the symmetric ``cfg.pcilt.act_bits`` grid;
+    2. **build** — per-layer conv ``[C, V]`` tables stacked to ``[L, C, V]``
+       and, when ``cfg.pcilt.apply_to_gemv``, one layer-stacked
+       ``[L, G, V, O]`` grouped-table array per projection
+       (``MambaLM.build_pcilt``), segment-sharded over ``mesh_axis`` when a
+       mesh is given;
+    3. **hoist** — the jitted decode executor is built once and reused
+       every step (:class:`PCILTMambaDecode`).
+
+    ``projections`` restricts the converted set (default: all six —
+    ``nn.ssm.PROJ_NAMES``); ``proj_path`` selects the execution route
+    (``"fused"`` is the deployment path; ``"kernel"`` is the host-packed
+    baseline the benchmark measures against; ``"dense_fq"`` the parity
+    oracle).  ``table_dtype=jnp.bfloat16`` halves table memory (the stacked
+    kernel contracts and accumulates f32 either way).
+    """
+    from repro.nn.layers import Ctx
+
+    cfg = model.cfg
+    if cfg.pcilt is None:
+        raise ValueError(
+            "convert_mamba_decode requires model.cfg.pcilt (a configs.base."
+            "PCILTConfig supplying act_bits/group for the table build); got "
+            "None — set cfg = dataclasses.replace(cfg, "
+            "pcilt=PCILTConfig(...)) before converting")
+    ctx = ctx if ctx is not None else Ctx()
+    spec = QuantSpec(bits=cfg.pcilt.act_bits, symmetric=True)
+    amax = jax.jit(lambda p, b: model.calibrate_pcilt(p, b, ctx))(
+        params, {"tokens": calib_tokens})
+
+    def to_scale(a):
+        return scale_from_amax(jnp.asarray(a, jnp.float32), spec)
+
+    proj_scales = None
+    if cfg.pcilt.apply_to_gemv:
+        proj_scales = {"in": to_scale(amax["in"]), "out": to_scale(amax["out"])}
+    pcilt = model.build_pcilt(
+        params, to_scale(amax["conv_in"]), proj_scales=proj_scales,
+        proj_path=proj_path, projections=projections, mesh=mesh,
+        mesh_axis=mesh_axis, table_dtype=table_dtype)
+    return PCILTMambaDecode(model, pcilt, ctx)
 
 
 def pcilt_apply(lin: PCILTLinear, x: jax.Array, path: str = "gather"):

@@ -17,7 +17,11 @@ Two pipelines implement the paper's fetch-and-add inner loop:
   stored bf16 to double the groups staged per ~8 MB VMEM budget.  The conv
   kernels take a ``seg_offset``/``n_total`` pair so tensor-parallel shards
   im2col the replicated image in VMEM and slice their own patch columns
-  (``core.lut_layers`` ``mesh=``).
+  (``core.lut_layers`` ``mesh=``).  The **layer-stacked** GEMV variant
+  (``pcilt_fused_gemv_stacked_pallas``) serves scanned LM decode: the
+  ``[L, G, V, O]`` tables of a whole network stay resident and a
+  scalar-prefetched layer index selects the staged per-layer tiles, so the
+  decode ``lax.scan`` never copies a layer's tables through HBM.
 * **shared-pool fused** (``pcilt_shared.py``): the fused pipeline over the
   extension-3 segment-deduped representation — a ``[X, V, O]`` pool of
   unique segment tables plus a ``[G]`` int32 pointer vector

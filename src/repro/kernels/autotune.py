@@ -23,7 +23,19 @@ Cache format (JSON, one object per shape key)::
 Shape-key dimensions are kernel-specific; the shared-pool kernels
 (``shared_gemv`` / ``shared_conv2d``) add ``X``, the pool cardinality (number
 of deduped segment tables), because the staged-pool VMEM footprint — and so
-the winning tiling — scales with ``X`` rather than ``G``.  The fused
+the winning tiling — scales with ``X`` rather than ``G``.  The layer-stacked
+decode GEMV (``pcilt_fused.pcilt_fused_gemv_stacked_pallas``) records under
+``fused_gemv_stacked`` keys shaped
+``fused_gemv_stacked|B=...,G=...,L=...,O=...,V=...,bits=...,g=...,dtype=...|backend=...``:
+``L`` is the stacked layer count (a ``[L, G, V, O]`` operand with a
+different ``L`` is a different HBM-resident problem even though the staged
+per-layer ``[1, Gb, V, Ob]`` tile is L-independent), and ``G`` is — as for
+every mesh-dispatched kernel — the **local** shard's segment count
+(``G/D`` under a model-axis mesh), so stacked tunings recorded at different
+device counts occupy different keys; the ``tiles`` entry reuses the plain
+``TileConfig`` fields (``Bb``/``Gb``/``Ob``; ``row_tile`` unused, recorded
+as 8), and a failed stacked tune records ``us: null`` exactly like every
+other kernel.  The fused
 depthwise-conv1d kernel records under ``fused_dwconv1d`` keys shaped
 ``fused_dwconv1d|B=...,C=...,T=...,V=...,bits=...,k=...,dtype=...|backend=...``
 (``T`` is the *output* length, ``k`` the tap count); its ``tiles`` entry
@@ -86,6 +98,7 @@ __all__ = [
     "lookup",
     "tune",
     "gemv_candidates",
+    "stacked_gemv_candidates",
     "conv2d_candidates",
     "shared_gemv_candidates",
     "shared_conv2d_candidates",
@@ -379,6 +392,26 @@ def gemv_candidates(B: int, G: int, V: int, O: int, itemsize: int = 4,
         add(Gb, Ob)
         add(max(1, Gb // 4), Ob)
     return out[:6]
+
+
+def stacked_gemv_candidates(B: int, L: int, G: int, V: int, O: int,
+                            itemsize: int = 4,
+                            scratch_budget: float = SCRATCH_BUDGET
+                            ) -> List[TileConfig]:
+    """Tilings for the layer-stacked fused GEMV (``fused_gemv_stacked`` keys).
+
+    The kernel stages the *per-layer slice*: its table tile is the scalar-
+    prefetch-selected ``[1, Gb, V, Ob]`` block of the ``[L, G, V, O]``
+    operand — byte-identical to the unstacked kernel's ``[Gb, V, Ob]`` tile
+    at the same ``(Gb, Ob)``, and the in-kernel ``[Bb, Gb*V]`` one-hot
+    scratch is unchanged, so both the staged-table budget (:func:`_fit_gb`)
+    and the analytic scratch bound (:func:`_fit_scratch_gb`) carry over to
+    the per-layer slice verbatim and the dense sweep is reused.  ``L``
+    affects the shape key (a different stack is a different HBM-resident
+    problem), never the candidate tiling space.
+    """
+    del L  # enters the shape key, not the tiling space (per-layer staging)
+    return gemv_candidates(B, G, V, O, itemsize, scratch_budget=scratch_budget)
 
 
 def conv2d_candidates(Ho: int, G: int, V: int, O: int, itemsize: int = 4,

@@ -65,7 +65,9 @@ from . import autotune as atn
 from .pcilt_gemv import pcilt_gemv_pallas, default_tiles
 from .pcilt_conv2d import pcilt_conv2d_pallas
 from .pcilt_dwconv1d import pcilt_dwconv1d_pallas, pcilt_fused_dwconv1d_pallas
-from .pcilt_fused import pcilt_fused_gemv_pallas, pcilt_fused_conv2d_pallas
+from .pcilt_fused import (pcilt_fused_gemv_pallas,
+                          pcilt_fused_gemv_stacked_pallas,
+                          pcilt_fused_conv2d_pallas)
 from .pcilt_shared import (pcilt_shared_gemv_pallas,
                            pcilt_shared_conv2d_pallas)
 
@@ -74,6 +76,7 @@ __all__ = [
     "pcilt_conv2d",
     "pcilt_dwconv1d",
     "pcilt_fused_gemv",
+    "pcilt_fused_gemv_stacked",
     "pcilt_fused_conv2d",
     "pcilt_fused_dwconv1d",
     "pcilt_shared_gemv",
@@ -365,6 +368,75 @@ def _fused_gemv_bench(x, s2, tables, cfg, kw):
     ).block_until_ready()
 
 
+
+
+def pcilt_fused_gemv_stacked(
+    x: jax.Array,
+    tables: jax.Array,
+    layer,
+    spec,
+    scale,
+    group: int,
+    tiles=None,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """x [B, n] float, tables [L, G, V, O] (``n == G * group``), layer a
+    (possibly traced) int scalar -> [B, O].
+
+    The layer-scanned decode dispatch: one ``[L, G, V, O]`` stack holds the
+    tables of every layer of a network, the ``lax.scan`` over layers carries
+    only the integer layer index, and the kernel's scalar-prefetched index
+    map stages that layer's tiles straight out of the resident stack — no
+    per-step ``dynamic_slice`` copy of a whole ``[G, V, O]`` table through
+    HBM.  ``scale`` is this layer's per-tensor activation scale (callers
+    slice it from their ``[L]`` calibration vector; a traced scalar is
+    fine).  Tiles dispatch through ``fused_gemv_stacked`` shape keys, which
+    carry ``L`` and — under a mesh, where this wrapper sees one device's
+    ``[L, G/D, V, O]`` shard — the *local* ``G``.
+    """
+    B, n = x.shape
+    L, G, V, O = tables.shape
+    if n != G * group:
+        raise ValueError(
+            f"x trailing dim {n} != G*group = {G}*{group} (the stacked fused "
+            f"kernel packs contiguous segments; generalized SegmentPlans are "
+            f"rejected upstream at the core.lut_layers dispatch boundary)")
+    key = atn.shape_key("fused_gemv_stacked", dtype=tables.dtype,
+                        backend=jax.default_backend(),
+                        B=B, L=L, G=G, V=V, O=O, g=group, bits=spec.bits)
+    s2 = _scale_2d(scale, x.dtype)
+    l1 = jnp.asarray(layer, jnp.int32).reshape(1)
+    kw = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
+              interpret=not on_tpu())
+    if tiles is None:
+        cfg = atn.lookup(key)
+        if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
+                x, s2, l1, tables):
+            cfg = atn.tune(
+                key,
+                atn.stacked_gemv_candidates(B, L, G, V, O,
+                                            tables.dtype.itemsize),
+                lambda c: _fused_gemv_stacked_bench(l1, x, s2, tables, c, kw),
+            )
+        if cfg is not None:
+            tiles = (cfg.Bb, cfg.Gb, cfg.Ob)
+        else:
+            tiles = default_tiles(B, G, V, O, itemsize=tables.dtype.itemsize)
+    tiles = _fit_tiles(tiles, B, G, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])  # zero rows quantize harmlessly
+    tp, _ = _pad_axis(tables, 3, tiles[2] if O >= 128 else 1)
+    out = pcilt_fused_gemv_stacked_pallas(l1, xp, s2, tp, tiles=tiles, **kw)
+    return out[:B, :O]
+
+
+def _fused_gemv_stacked_bench(l1, x, s2, tables, cfg, kw):
+    B, G, O = x.shape[0], tables.shape[1], tables.shape[-1]
+    tiles = _fit_tiles((cfg.Bb, cfg.Gb, cfg.Ob), B, G, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])
+    tp, _ = _pad_axis(tables, 3, tiles[2] if O >= 128 else 1)
+    return lambda: pcilt_fused_gemv_stacked_pallas(
+        l1, xp, s2, tp, tiles=tiles, **kw
+    ).block_until_ready()
 
 
 def _seg_2d(seg_offset) -> jax.Array:

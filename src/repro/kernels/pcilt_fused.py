@@ -38,8 +38,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["pcilt_fused_gemv_pallas", "pcilt_fused_conv2d_pallas"]
+__all__ = ["pcilt_fused_gemv_pallas", "pcilt_fused_gemv_stacked_pallas",
+           "pcilt_fused_conv2d_pallas"]
 
 
 def _quantize(x, scale, *, bits: int, zero_point: int):
@@ -126,6 +128,81 @@ def pcilt_fused_gemv_pallas(
         out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
         interpret=interpret,
     )(x, scale, tables).astype(tables.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Layer-stacked fused GEMV (LM decode: one kernel per projection per layer,
+# tables for every layer resident in one [L, G, V, O] array)
+# ----------------------------------------------------------------------------
+
+
+def _gemv_stacked_kernel(layer_ref, x_ref, scale_ref, tab_ref, out_ref, *,
+                         bits: int, zero_point: int, group: int,
+                         Gb: int, V: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = _quantize(x_ref[...], scale_ref[0, 0],
+                      bits=bits, zero_point=zero_point)  # [Bb, Gb*group]
+    off = _pack_flat(codes, bits=bits, group=group, Gseg=Gb)  # [Bb, Gb]
+    # tab_ref's block is the current layer's [1, Gb, V, Ob] slice — the
+    # scalar-prefetched layer index already selected it in the index map,
+    # so the kernel body is the plain fused fetch.
+    out_ref[...] += _flat_onehot_dot(off, tab_ref[0], V=V)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "zero_point", "group", "tiles", "interpret"),
+)
+def pcilt_fused_gemv_stacked_pallas(
+    layer: jax.Array,
+    x: jax.Array,
+    scale: jax.Array,
+    tables: jax.Array,
+    *,
+    bits: int,
+    zero_point: int,
+    group: int,
+    tiles,
+    interpret: bool = False,
+) -> jax.Array:
+    """layer ``[1]`` int32, x ``[B, n]`` float, scale ``[1, 1]``,
+    tables ``[L, G, V, O]`` -> ``[B, O]``.
+
+    The layer-scanned decode variant of :func:`pcilt_fused_gemv_pallas`:
+    the per-layer tables of a whole network stack live in one ``[L, G, V, O]``
+    array that never moves, and the (traced) ``layer`` operand is
+    **scalar-prefetched** so the BlockSpec index map stages exactly that
+    layer's ``[1, Gb, V, Ob]`` tiles — per grid step the staged bytes equal
+    the unstacked kernel's, and the ``lax.scan`` over layers never pays the
+    HBM copy a per-iteration ``dynamic_slice`` of the stacked tables would
+    materialize.  ``n == G * group``; ``tiles`` is ``(Bb, Gb, Ob)`` with
+    ``Gb | G``.
+    """
+    B, n = x.shape
+    L, G, V, O = tables.shape
+    assert n == G * group, (n, G, group)
+    Bb, Gb, Ob = tiles
+    grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G // Gb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bb, Gb * group), lambda i, j, k, l: (i, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k, l: (0, 0)),
+            pl.BlockSpec((1, Gb, V, Ob), lambda i, j, k, l: (l[0], k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((Bb, Ob), lambda i, j, k, l: (i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gemv_stacked_kernel, bits=bits,
+                          zero_point=zero_point, group=group, Gb=Gb, V=V),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
+        interpret=interpret,
+    )(layer, x, scale, tables).astype(tables.dtype)
 
 
 # ----------------------------------------------------------------------------

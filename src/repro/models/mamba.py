@@ -102,36 +102,142 @@ class MambaLM:
         logits = self._logits(params, x[:, -1:])[:, 0]
         return logits, {"layers": states, "pos": jnp.asarray(S, jnp.int32)}
 
-    def build_pcilt(self, params, scale):
-        """Offline PCILT build for every layer's conv frontend (requires
-        ``cfg.pcilt``): per-layer ``[C, V]`` tables stacked to ``[L, C, V]``
-        so they ride the decode scan exactly like parameters.  ``scale`` is
-        the calibrated per-tensor activation scale of the conv input."""
+    def build_pcilt(self, params, scale, proj_scales=None, proj_path="fused",
+                    projections=None, mesh=None, mesh_axis="model",
+                    table_dtype=jnp.float32):
+        """Offline PCILT build for the decode hot loop (requires
+        ``cfg.pcilt``).
+
+        Conv frontend: per-layer ``[C, V]`` tables stacked to ``[L, C, V]``
+        so they ride the decode scan exactly like parameters; ``scale`` is
+        the calibrated per-tensor activation scale of the conv input.
+
+        Projections (full-PCILT decode): pass ``proj_scales`` — per-layer
+        calibrated absmax-derived scales ``{"in": [L], "out": [L]}`` (see
+        :meth:`calibrate_pcilt` / ``core.serving.convert_mamba_decode``) —
+        and every projection in ``projections`` (default: all six,
+        ``nn.ssm.PROJ_NAMES``) gains a layer-stacked ``[L, G, V, O]``
+        grouped-table array.  The stack is **closure-resident** in
+        :meth:`decode_step` (never sliced by the scan — the stacked kernel's
+        scalar-prefetch staging reads it in place); with ``mesh=`` it is
+        placed with the segment axis sharded over ``mesh_axis`` (the
+        ``"table_seg"`` rule, ``seg_axis=1``) so each device holds
+        ``[L, G/D, V, O]`` and every projection costs one psum per step.
+        ``proj_path`` selects the execution route (``"fused"`` stacked
+        kernel; ``"kernel"``/``"gather"``/``"onehot"`` host-packed
+        references; ``"dense_fq"`` fake-quant dense oracle).
+        """
         from repro.core import QuantSpec
         from repro.core.lut_layers import build_dwconv_tables
 
         cfg = self.cfg
-        assert cfg.pcilt is not None, "cfg.pcilt must be set to build PCILTs"
+        if cfg.pcilt is None:
+            raise ValueError(
+                "MambaLM.build_pcilt requires cfg.pcilt (a configs.base."
+                "PCILTConfig supplying act_bits/group for the table build); "
+                "got None — set cfg = dataclasses.replace(cfg, "
+                "pcilt=PCILTConfig(...)) before converting, or decode dense "
+                "with pcilt=None")
         # the conv input (xBC) is a pre-activation stream — signed, so the
         # grid must straddle zero (symmetric), unlike post-ReLU CNN codes
         spec = QuantSpec(bits=cfg.pcilt.act_bits, symmetric=True)
         tables = jax.vmap(
             lambda w: build_dwconv_tables(w, spec, scale)
         )(params["blocks"]["mixer"]["conv_w"])  # [L, C, V]
-        return {"tables": tables, "scale": scale, "spec": spec}
+        out = {"tables": tables, "scale": scale, "spec": spec}
+        if proj_scales is not None:
+            out["proj"] = self._build_proj_pcilt(
+                params, spec, proj_scales, proj_path, projections, mesh,
+                mesh_axis, table_dtype)
+        return out
+
+    def _build_proj_pcilt(self, params, spec, proj_scales, proj_path,
+                          projections, mesh, mesh_axis, table_dtype):
+        """Stacked ``[L, G, V, O]`` grouped tables per decode projection."""
+        from repro.core import build_grouped_tables
+        from repro.core.lut_layers import mesh_shard_count
+        from repro.nn.ssm import PROJ_NAMES
+
+        cfg = self.cfg
+        group = cfg.pcilt.group
+        tabs, scales = {}, {}
+        for name in (projections or PROJ_NAMES):
+            ks = params["blocks"]["mixer"][name]["kernel"]  # [L, n, O]
+            s_l = jnp.asarray(
+                proj_scales["out" if name == "wo" else "in"], jnp.float32)
+            _, n, O = ks.shape
+            pad_n = (-n) % group
+
+            def build(w, s):
+                wf = w.astype(jnp.float32)
+                if pad_n:  # group-alignment slots built from zero weights
+                    wf = jnp.concatenate(
+                        [wf, jnp.zeros((pad_n, wf.shape[-1]), wf.dtype)], 0)
+                return build_grouped_tables(wf, spec, s, group)
+
+            t = jax.vmap(build)(ks, s_l).astype(table_dtype)  # [L, G, V, O]
+            if mesh is not None and mesh_shard_count(
+                    mesh, mesh_axis, t.shape[1]) > 1:
+                from repro.nn.module import pcilt_table_sharding
+
+                t = jax.device_put(t, pcilt_table_sharding(
+                    mesh, t.shape[1], ndim=4, mesh_axis=mesh_axis,
+                    seg_axis=1))
+            tabs[name] = t
+            scales[name] = s_l
+        return {"tables": tabs, "scales": scales, "spec": spec,
+                "group": group, "path": proj_path, "mesh": mesh,
+                "mesh_axis": mesh_axis}
+
+    def calibrate_pcilt(self, params, batch, ctx: Ctx):
+        """Calibration prefill: one full-sequence pass over a calibration
+        batch capturing the per-layer absmax of every activation the PCILT
+        decode quantizes — the in-projection input (the post-``ln`` block
+        input feeding ``wz``/``wx``/``wB``/``wC``/``wdt``), the ``wo``
+        input (post-norm gated ``y``), and the conv input (pre-activation
+        ``xBC``).  Returns ``{"in": [L], "out": [L], "conv_in": []}``
+        absmax arrays; ``core.serving.convert_mamba_decode`` turns them
+        into quantization scales."""
+        cfg = self.cfg
+        x = self._embed(params, ctx, batch["tokens"])
+
+        def body(h, p):
+            xn = rmsnorm(p["ln"], h, cfg.norm_eps)
+            y, calib = mamba_block(p["mixer"], cfg, ctx, xn,
+                                   return_calib=True)
+            stats = {"in": jnp.max(jnp.abs(xn)).astype(jnp.float32),
+                     "out": calib["wo_in"], "conv_in": calib["conv_in"]}
+            return h + y, stats
+
+        _, stats = jax.lax.scan(body, x, params["blocks"])
+        return {"in": stats["in"], "out": stats["out"],
+                "conv_in": jnp.max(stats["conv_in"])}
 
     def decode_step(self, params, cache, tokens, ctx: Ctx, pcilt=None):
         """One decode step.  ``pcilt`` (from :meth:`build_pcilt`) routes every
-        layer's conv frontend through the fused PCILT fetch."""
+        layer's conv frontend through the fused PCILT fetch; with a
+        ``pcilt["proj"]`` bundle the projections execute as layer-stacked
+        table fetches too — the stacked ``[L, G, V, O]`` tables stay
+        closure-resident while only the integer layer index and that layer's
+        calibration scales ride the scan."""
         cfg = self.cfg
         pos = cache["pos"]
         x = self._embed(params, ctx, tokens)
+        proj = None if pcilt is None else pcilt.get("proj")
 
         def body(h, inp):
             p, st = inp[0], inp[1]
-            pc = None if pcilt is None else {
-                "tables": inp[2], "scale": pcilt["scale"],
-                "spec": pcilt["spec"]}
+            pc = None
+            if pcilt is not None:
+                pc = {"tables": inp[2], "scale": pcilt["scale"],
+                      "spec": pcilt["spec"]}
+                if proj is not None:
+                    pc["proj"] = {
+                        "tables": proj["tables"],  # full stack, not scanned
+                        "spec": proj["spec"], "group": proj["group"],
+                        "path": proj["path"], "mesh": proj["mesh"],
+                        "mesh_axis": proj["mesh_axis"],
+                        "layer": inp[3]["layer"], "scale": inp[3]["scale"]}
             y, st2 = mamba_decode(p["mixer"], cfg, ctx,
                                   rmsnorm(p["ln"], h, cfg.norm_eps), st,
                                   pcilt=pc)
@@ -140,6 +246,9 @@ class MambaLM:
         xs = (params["blocks"], cache["layers"])
         if pcilt is not None:
             xs = xs + (pcilt["tables"],)
+            if proj is not None:
+                xs = xs + ({"layer": jnp.arange(cfg.n_layers, dtype=jnp.int32),
+                            "scale": proj["scales"]},)
         x, new_states = jax.lax.scan(body, x, xs)
         x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
         logits = self._logits(params, x)[:, -1]

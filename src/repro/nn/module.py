@@ -123,28 +123,36 @@ PCILT_TABLE_AXES: Tuple[Optional[str], ...] = ("table_seg", None, None)
 
 def pcilt_table_pspec(G: int, ndim: int = 3,
                       rules: Optional[ShardingRules] = None,
-                      mesh_axis: Optional[str] = None) -> P:
-    """PartitionSpec for a ``[G, ...]``-leading PCILT operand.
+                      mesh_axis: Optional[str] = None,
+                      seg_axis: int = 0) -> P:
+    """PartitionSpec for a PCILT table operand whose segment axis is
+    position ``seg_axis``.
 
-    The leading axis (``G`` for dense ``[G, V, O]`` tables, the shard stack
-    for ``ShardedSharedPool.pools``/``.seg_idx``) shards over the
-    ``"table_seg"`` rule with the usual divisibility fallback; trailing axes
-    replicate.  ``mesh_axis`` overrides the rule table (still applying the
-    fallback) for callers that shard over a non-default axis.
+    The segment axis (``G`` for dense ``[G, V, O]`` tables, the shard stack
+    for ``ShardedSharedPool.pools``/``.seg_idx``; ``seg_axis=1`` for the
+    layer-stacked ``[L, G, V, O]`` decode tables, whose leading layer axis
+    rides the decode scan and must replicate) shards over the
+    ``"table_seg"`` rule with the usual divisibility fallback; every other
+    axis replicates.  ``mesh_axis`` overrides the rule table (still applying
+    the fallback) for callers that shard over a non-default axis.
     """
     if mesh_axis is not None and rules is not None:
         rules = ShardingRules(rules={"table_seg": mesh_axis},
                               mesh_axis_sizes=rules.mesh_axis_sizes)
     resolved = rules.mesh_axes_for("table_seg", G) if rules is not None else None
-    return P(resolved, *([None] * (ndim - 1)))
+    parts = [None] * ndim
+    parts[seg_axis] = resolved
+    return P(*parts)
 
 
 def pcilt_table_sharding(mesh: Mesh, G: int, ndim: int = 3,
                          rules: Optional[ShardingRules] = None,
-                         mesh_axis: Optional[str] = None) -> NamedSharding:
+                         mesh_axis: Optional[str] = None,
+                         seg_axis: int = 0) -> NamedSharding:
     """NamedSharding placing a PCILT table operand on ``mesh`` (G sharded)."""
     rules = rules or ShardingRules.for_mesh(mesh)
-    return NamedSharding(mesh, pcilt_table_pspec(G, ndim, rules, mesh_axis))
+    return NamedSharding(mesh, pcilt_table_pspec(G, ndim, rules, mesh_axis,
+                                                 seg_axis))
 
 
 def logical_to_partition_spec(

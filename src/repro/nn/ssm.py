@@ -21,6 +21,17 @@ the **fused** PCILT pipeline (``core.lut_layers.pcilt_depthwise_conv1d``
 one-fetch-per-output lookup all run in VMEM — the decode step's offsets
 never exist in HBM.  Tables are plain arrays, so they scan over the layer
 axis exactly like parameters.
+
+Full-PCILT decode (PR 5): the decode *projections* — ``wz``/``wx``/``wB``/
+``wC``/``wdt`` on the block input and ``wo`` on the gated output — also
+execute as table fetches.  The per-layer ``[G, V, O]`` grouped tables of
+each projection stack into one layer-resident ``[L, G, V, O]`` array
+(``MambaLM.build_pcilt(proj_scales=...)`` /
+``core.serving.convert_mamba_decode``); the decode scan carries only the
+integer layer index and that layer's calibrated activation scale, and
+:func:`_proj` dispatches ``core.lut_layers.pcilt_linear(stacked=layer)`` —
+the scalar-prefetch stacked kernel stages the layer's tiles straight out of
+the resident stack, so a decode step's matmuls become fetches end to end.
 """
 
 from __future__ import annotations
@@ -34,7 +45,11 @@ from .layers import Ctx, dense_spec, dense, rmsnorm_spec, rmsnorm
 from .module import ParamSpec
 
 __all__ = ["mamba_spec", "mamba_block", "mamba_decode", "ssm_cache_specs",
-           "build_pcilt_conv"]
+           "build_pcilt_conv", "PROJ_NAMES"]
+
+#: The decode projections a full-PCILT conversion replaces with table
+#: fetches: the five block-input projections plus the output projection.
+PROJ_NAMES = ("wz", "wx", "wB", "wC", "wdt", "wo")
 
 
 def build_pcilt_conv(params, cfg, scale):
@@ -48,12 +63,54 @@ def build_pcilt_conv(params, cfg, scale):
     """
     from repro.core import QuantSpec, build_dwconv_tables
 
-    assert cfg.pcilt is not None, "cfg.pcilt must be set to build PCILTs"
+    if cfg.pcilt is None:
+        raise ValueError(
+            "build_pcilt_conv requires cfg.pcilt (a configs.base.PCILTConfig "
+            "supplying act_bits/group for the table build); got None — set "
+            "cfg = dataclasses.replace(cfg, pcilt=PCILTConfig(...)) before "
+            "converting, or run the conv dense with pcilt=None")
     # the conv input (xBC) is a pre-activation stream — signed, so the
     # grid must straddle zero (symmetric), unlike post-ReLU CNN codes
     spec = QuantSpec(bits=cfg.pcilt.act_bits, symmetric=True)
     tables = build_dwconv_tables(params["conv_w"], spec, scale)
     return {"tables": tables, "scale": scale, "spec": spec}
+
+
+def _proj(params, name, x, cfg, proj):
+    """One decode projection: PCILT stacked fetch, host-packed baseline, the
+    fake-quant dense reference, or the plain dense matmul.
+
+    ``proj`` is the per-layer slice of the full-PCILT bundle (see
+    ``models.mamba.MambaLM.decode_step``): the stacked ``[L, G, V, O]``
+    tables per projection (closure-resident, *not* scanned), this layer's
+    index and calibrated per-tensor scales (both scan-carried), the shared
+    ``QuantSpec``/``group``, and the dispatch ``path`` — ``"fused"`` (the
+    scalar-prefetch stacked kernel), a host-packed reference path
+    (``"kernel"``/``"gather"``/``"onehot"``: slices the layer's table, the
+    copy the stacked kernel avoids — the benchmark baseline), or
+    ``"dense_fq"`` (dense matmul on fake-quantized input: the parity oracle
+    the table fetch must equal, since the fetch is exact on the quantized
+    grid).
+    """
+    if proj is None or name not in proj["tables"]:
+        return dense(params[name], x, cfg.dtype)
+    from repro.core import fake_quant, pcilt_linear
+
+    scale = proj["scale"][name]
+    path = proj.get("path", "fused")
+    if path == "dense_fq":
+        xq = fake_quant(x.astype(jnp.float32), proj["spec"], scale)
+        return dense(params[name], xq, jnp.float32).astype(cfg.dtype)
+    tables = proj["tables"][name]
+    pad = tables.shape[1] * proj["group"] - x.shape[-1]
+    if pad:  # group-alignment slots: table rows built from zero weights
+        x = jnp.concatenate(
+            [x, jnp.zeros((*x.shape[:-1], pad), x.dtype)], axis=-1)
+    out = pcilt_linear(x, tables, proj["spec"], scale, proj["group"],
+                       path=path, stacked=proj["layer"],
+                       mesh=proj.get("mesh"),
+                       mesh_axis=proj.get("mesh_axis", "model"))
+    return out.astype(cfg.dtype)
 
 
 def _dims(cfg):
@@ -200,25 +257,33 @@ def _split_heads(cfg, ctx, x_in, B_in, C_in, dt_in):
     return xh, Bm, Cm
 
 
-def _finish(params, cfg, ctx, y, xh, z):
+def _finish(params, cfg, ctx, y, xh, z, proj=None, return_inner=False):
     d_inner, H, _ = _dims(cfg)
     Bsz, T = y.shape[:2]
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(Bsz, T, d_inner)
     y = y * jax.nn.silu(z.astype(y.dtype))
     y = rmsnorm(params["norm"], y, cfg.norm_eps)
-    out = dense(params["wo"], y, cfg.dtype)
-    return ctx.constrain(out, "batch", "seq_sp", None)
+    out = _proj(params, "wo", y, cfg, proj)
+    out = ctx.constrain(out, "batch", "seq_sp", None)
+    if return_inner:  # the wo input — what projection calibration observes
+        return out, y
+    return out
 
 
 def mamba_block(params, cfg, ctx: Ctx, x: jax.Array,
-                return_state: bool = False, pcilt=None):
+                return_state: bool = False, pcilt=None,
+                return_calib: bool = False):
     """Full-sequence Mamba2 block (train / prefill).  x [B,T,d] -> [B,T,d].
 
     ``return_state=True`` additionally emits the decode-ready
     ``{"conv", "ssd"}`` state at the final position (prefill).  ``pcilt``
     (from :func:`build_pcilt_conv`) routes the conv frontend through the
-    fused PCILT pipeline."""
+    fused PCILT pipeline.  ``return_calib=True`` additionally emits the
+    absmax of the internally-produced PCILT'd activations — the conv input
+    (pre-activation ``xBC``) and the ``wo`` input (post-norm gated ``y``) —
+    for projection/conv scale calibration
+    (``models.mamba.MambaLM.calibrate_pcilt``)."""
     s = cfg.ssm
     d_inner, H, _ = _dims(cfg)
     z = dense(params["wz"], x, cfg.dtype)
@@ -232,6 +297,8 @@ def mamba_block(params, cfg, ctx: Ctx, x: jax.Array,
 
     xBC = jnp.concatenate([xi, Bi, Ci], axis=-1)
     conv_tail = xBC[:, -(s.conv_kernel - 1):]  # pre-activation window
+    conv_in_amax = jnp.max(jnp.abs(xBC)).astype(jnp.float32) \
+        if return_calib else None
     xBC, _ = _conv1d(params, cfg, xBC, pcilt=pcilt)
     xBC = jax.nn.silu(xBC)
     xi, Bi, Ci = jnp.split(
@@ -242,10 +309,18 @@ def mamba_block(params, cfg, ctx: Ctx, x: jax.Array,
     A = -jnp.exp(params["A_log"].astype(jnp.float32))
     xh, Bm, Cm = _split_heads(cfg, ctx, xi, Bi, Ci, dt)
     y, h_final = _ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)
-    out = _finish(params, cfg, ctx, y.astype(cfg.dtype), xh, z)
+    out = _finish(params, cfg, ctx, y.astype(cfg.dtype), xh, z,
+                  return_inner=return_calib)
+    results = []
+    if return_calib:
+        out, wo_in = out
+        results.append({"conv_in": conv_in_amax,
+                        "wo_in": jnp.max(jnp.abs(wo_in)).astype(jnp.float32)})
     if return_state:
-        return out, {"conv": conv_tail.astype(jnp.float32),
-                     "ssd": h_final.astype(jnp.float32)}
+        results.insert(0, {"conv": conv_tail.astype(jnp.float32),
+                           "ssd": h_final.astype(jnp.float32)})
+    if results:
+        return (out, *results)
     return out
 
 
@@ -255,14 +330,18 @@ def mamba_decode(
     """One-token step.  x [B,1,d]; state {conv [B,k-1,C], ssd [B,H,N,P]}.
 
     ``pcilt`` (from :func:`build_pcilt_conv`) replaces the conv frontend's
-    tap-dot with one fused PCILT fetch per channel."""
+    tap-dot with one fused PCILT fetch per channel; a ``pcilt["proj"]``
+    bundle (``MambaLM.build_pcilt(proj_scales=...)``) additionally routes
+    every projection through the layer-stacked fused PCILT GEMV via
+    :func:`_proj` — the decode step is then fetch-bound end to end."""
     s = cfg.ssm
     d_inner, H, _ = _dims(cfg)
-    z = dense(params["wz"], x, cfg.dtype)
-    xi = dense(params["wx"], x, cfg.dtype)
-    Bi = dense(params["wB"], x, cfg.dtype)
-    Ci = dense(params["wC"], x, cfg.dtype)
-    dt = dense(params["wdt"], x, cfg.dtype).astype(jnp.float32)
+    proj = None if pcilt is None else pcilt.get("proj")
+    z = _proj(params, "wz", x, cfg, proj)
+    xi = _proj(params, "wx", x, cfg, proj)
+    Bi = _proj(params, "wB", x, cfg, proj)
+    Ci = _proj(params, "wC", x, cfg, proj)
+    dt = _proj(params, "wdt", x, cfg, proj).astype(jnp.float32)
 
     xBC = jnp.concatenate([xi, Bi, Ci], axis=-1)
     xBC, conv_state = _conv1d(params, cfg, xBC, state["conv"], pcilt=pcilt)
@@ -282,7 +361,7 @@ def mamba_decode(
         "bhn,bhp->bhnp", Bm1 * dt[..., None], xh1
     )
     y = jnp.einsum("bhn,bhnp->bhp", Cm1, h)[:, None]  # [B,1,H,P]
-    out = _finish(params, cfg, ctx, y.astype(cfg.dtype), xh, z)
+    out = _finish(params, cfg, ctx, y.astype(cfg.dtype), xh, z, proj=proj)
     return out, {"conv": conv_state.astype(state["conv"].dtype),
                  "ssd": h.astype(state["ssd"].dtype)}
 
