@@ -636,6 +636,88 @@ def decode_e2e_rows(bench_json: str = "BENCH_pr5.json"):
     return rows
 
 
+def resilience_rows(bench_json: str = "BENCH_pr6.json"):
+    """resilience.* -> BENCH_pr6.json: what the serving health layer costs.
+
+    The monitor's design claim is that health checking is *amortized*: one
+    layer's CRC per tick (plus a dense-oracle probe every few clean checks),
+    so the steady-state overhead stays flat in depth.  Measured here:
+
+    * **step_us** — the converted decode step alone (all-healthy masks);
+    * **step_monitored_us** — the same step plus ``HealthMonitor.on_tick``
+      (the per-tick serving cost), and the implied overhead %;
+    * **verify_full_us** — a full-bundle ``verify_integrity`` sweep (every
+      layer of every stacked table + the head), the *worst-case* on-demand
+      check a load or an incident response pays.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    rows = []
+    skipped = {}
+
+    def block():
+        from repro.configs import get_smoke_config
+        from repro.configs.base import PCILTConfig
+        from repro.core.serving import HealthMonitor, convert_mamba_decode
+        from repro.models import build_model
+        from repro.nn import materialize
+        from repro.nn.layers import Ctx
+
+        cfg = get_smoke_config("mamba2-130m")
+        cfg = dataclasses.replace(cfg, pcilt=PCILTConfig(act_bits=2, group=2),
+                                  dtype=jnp.float32)
+        model = build_model(cfg)
+        key = jax.random.PRNGKey(0)
+        params = materialize(model.param_specs(), key)
+        calib = jax.random.randint(key, (1, 16), 0, cfg.vocab)
+        _, cache = model.prefill(params, {"tokens": calib}, Ctx())
+        tok = jax.random.randint(key, (1, 1), 0, cfg.vocab)
+
+        eng = convert_mamba_decode(model, params, calib, head="shared")
+        mon = HealthMonitor(eng, params)
+        lmask, hmask = mon.ok_masks()
+        eng.step(params, cache, tok, lmask, hmask)[0].block_until_ready()
+
+        step_us = _timeit(lambda: eng.step(
+            params, cache, tok, lmask, hmask)[0].block_until_ready())
+        tick = [0]
+
+        def monitored():
+            eng.step(params, cache, tok, *mon.ok_masks())[0]\
+                .block_until_ready()
+            mon.on_tick(tick[0])
+            tick[0] += 1
+
+        monitored_us = _timeit(monitored)
+        verify_us = _timeit(lambda: eng.verify_integrity())
+        over = 100.0 * (monitored_us - step_us) / step_us
+        tag = f"L{cfg.n_layers}_d{cfg.d_model}"
+        rows.append((f"resilience.{tag}_step_us", step_us,
+                     "converted decode step, all-healthy masks"))
+        rows.append((f"resilience.{tag}_step_monitored_us", monitored_us,
+                     f"+HealthMonitor.on_tick: {over:.1f}% overhead"))
+        rows.append((f"resilience.{tag}_verify_full_us", verify_us,
+                     "CRC every layer of every table + head (on-demand)"))
+
+    _guard(rows, skipped, "resilience.monitor", block)
+
+    if bench_json:
+        payload = {
+            "pr": 6,
+            "backend": jax.default_backend(),
+            "timing": "interpret-mode CPU" if jax.default_backend() != "tpu"
+                      else "compiled TPU",
+            "skipped": skipped,
+            "rows": _json_rows(rows),
+        }
+        with open(_bench_path(bench_json), "w") as fp:
+            json.dump(payload, fp, indent=1)
+    return rows
+
+
 def roofline_rows():
     import glob
     import json
@@ -684,7 +766,8 @@ def main(argv=None) -> None:
     global _SMOKE
     _SMOKE = args.smoke
     sections = [paper_rows, micro_rows, lm_rows, fused_rows, shared_rows,
-                shard_rows, pr4_rows, decode_e2e_rows, roofline_rows]
+                shard_rows, pr4_rows, decode_e2e_rows, resilience_rows,
+                roofline_rows]
     if args.only:
         sections = [s for s in sections
                     if s.__name__.startswith(args.only)]

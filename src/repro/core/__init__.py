@@ -35,6 +35,8 @@ from .pcilt import (
     shared_table_bytes,
     shared_pool_bytes,
     build_cost_multiplies,
+    table_checksum,
+    stacked_checksums,
 )
 from .lut_layers import (
     lut_lookup,

@@ -61,7 +61,8 @@ If the mesh axis does not divide ``G``, execution falls back to replication
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence, Tuple
+import zlib
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -86,6 +87,8 @@ __all__ = [
     "shared_table_bytes",
     "shared_pool_bytes",
     "build_cost_multiplies",
+    "table_checksum",
+    "stacked_checksums",
 ]
 
 # ----------------------------------------------------------------------------
@@ -508,3 +511,27 @@ def shared_pool_bytes(pool_cardinality: int, act_bits: int, group: int,
 def build_cost_multiplies(n_weights: int, act_bits: int) -> int:
     """Multiplications to build basic tables (paper: 5x5 INT8 -> 6,400)."""
     return n_weights * (1 << act_bits)
+
+
+# ----------------------------------------------------------------------------
+# Table integrity (serving resilience).  Tables are immutable deployment
+# artifacts — any in-memory difference from the conversion-time bytes is
+# corruption.  CRC-32 detects *every* error burst of <= 32 bits, so a single
+# flipped table entry (float32/bfloat16 value, int32 seg_idx pointer) can
+# never be missed — the zero-false-negative property the chaos suite
+# unit-tests.
+# ----------------------------------------------------------------------------
+
+
+def table_checksum(arr) -> int:
+    """CRC-32 over the raw bytes of a table array (gathers sharded arrays)."""
+    a = np.ascontiguousarray(np.asarray(arr))
+    return zlib.crc32(a.tobytes())
+
+
+def stacked_checksums(arr) -> List[int]:
+    """Per-leading-axis-slice CRC-32s for a stacked table (``[L, ...]``) —
+    one checksum per layer, so verification localizes a breach to the layer
+    that must be demoted."""
+    a = np.asarray(arr)
+    return [table_checksum(a[i]) for i in range(a.shape[0])]

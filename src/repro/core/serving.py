@@ -16,22 +16,46 @@ value; shared-PCILT keeps memory feasible).
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+import logging
+from typing import Any, Dict, List, Optional, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .quantization import (QuantSpec, calibrate, quantize, dequantize,
-                           scale_from_amax)
+from .quantization import (QuantSpec, calibrate, fake_quant, quantize,
+                           dequantize, scale_from_amax)
 from .pcilt import (SharedGroupedTables, ShardedSharedPool,
                     build_grouped_tables, build_shared_grouped_tables,
-                    shard_shared_grouped_tables)
+                    shard_shared_grouped_tables, stacked_checksums,
+                    table_checksum)
 from .lut_layers import (build_dwconv_tables, mesh_shard_count, pcilt_conv2d,
                          pcilt_depthwise_conv1d, pcilt_linear)
 
+log = logging.getLogger("repro.serving")
+
 __all__ = ["PCILTLinear", "PCILTConv2d", "PCILTDwConv1d", "convert_kernel",
            "convert_conv_kernel", "convert_dwconv", "convert_mamba_decode",
-           "PCILTMambaDecode", "pcilt_apply", "mlp_table_bytes"]
+           "PCILTMambaDecode", "HealthMonitor", "pcilt_integrity",
+           "pcilt_apply", "mlp_table_bytes"]
+
+
+def pcilt_integrity(pcilt: Dict) -> Dict:
+    """Conversion-time CRC-32 record of every table array in a Mamba PCILT
+    bundle — per layer for the stacked arrays, so verification localizes a
+    breach to the layer the health monitor must demote.  CRC-32 detects all
+    error bursts of <= 32 bits: a single flipped table entry (f32/bf16
+    value, int32 pointer) can never slip through."""
+    integ: Dict[str, Any] = {"conv": stacked_checksums(pcilt["tables"])}
+    proj = pcilt.get("proj")
+    if proj is not None:
+        integ["proj"] = {name: stacked_checksums(t)
+                        for name, t in proj["tables"].items()}
+    head = pcilt.get("head")
+    if head is not None:
+        integ["head"] = {"pool": table_checksum(head["pool"]),
+                         "seg_idx": table_checksum(head["seg_idx"])}
+    return integ
 
 
 def _place_sharded_pool(sp: ShardedSharedPool, mesh,
@@ -92,6 +116,14 @@ class PCILTLinear:
         self.shared = shared
         self.mesh = mesh
         self.mesh_axis = mesh_axis
+        # conversion-time integrity record (pre-placement bytes; device_put
+        # moves, never rewrites) — verified on demand by verify_integrity
+        self.integrity: Dict[str, int] = {}
+        if tables is not None:
+            self.integrity["tables"] = table_checksum(tables)
+        if shared is not None:
+            self.integrity["pool"] = table_checksum(shared.pool)
+            self.integrity["seg_idx"] = table_checksum(shared.seg_idx)
         self.shard_pools: Optional[ShardedSharedPool] = None
         if mesh is not None and self.shard_count > 1:
             if shared is not None:
@@ -139,6 +171,17 @@ class PCILTLinear:
         if self.shard_pools is not None:
             return self.shard_pools.local_pool_bytes()
         return -(-self.table_bytes() // self.shard_count)
+
+    def verify_integrity(self) -> Dict[str, bool]:
+        """Recompute each held table's checksum against the conversion-time
+        record; ``False`` marks a corrupted representation."""
+        cur = {}
+        if self.tables is not None:
+            cur["tables"] = table_checksum(self.tables)
+        if self.shared is not None:
+            cur["pool"] = table_checksum(self.shared.pool)
+            cur["seg_idx"] = table_checksum(self.shared.seg_idx)
+        return {k: cur[k] == v for k, v in self.integrity.items()}
 
     def _pad_x(self, x: jax.Array) -> jax.Array:
         n = self.n_segments * self.group
@@ -482,23 +525,104 @@ class PCILTMambaDecode:
     records the winners under ``fused_gemv_stacked`` keys (local-shard
     shapes under a mesh), so the jitted dispatch hits the lookup table at
     trace time.
+
+    Integrity: the bundle carries a conversion-time CRC-32 record per table
+    (per layer for the stacked arrays); it is verified at load
+    (``verify=True``) and on demand (:meth:`verify_layer` /
+    :meth:`verify_head` / :meth:`verify_integrity` — what the serving
+    :class:`HealthMonitor` amortizes one layer per tick).  The step executor
+    takes per-layer/head health masks as runtime *arguments* (defaulting to
+    all-healthy), so demoting a layer to its dense oracle never retraces.
     """
 
-    def __init__(self, model, pcilt: Dict, ctx=None):
+    def __init__(self, model, pcilt: Dict, ctx=None, verify: bool = True):
         from repro.nn.layers import Ctx
 
         self.model = model
         self.pcilt = pcilt
         self.ctx = ctx if ctx is not None else Ctx()
-        self._step = jax.jit(
-            lambda p, c, t: model.decode_step(p, c, t, self.ctx,
-                                              pcilt=self.pcilt))
+        if "integrity" not in pcilt:
+            pcilt["integrity"] = pcilt_integrity(pcilt)
+        if verify:
+            bad = self.verify_integrity()
+            if bad:
+                raise RuntimeError(
+                    f"PCILT bundle failed integrity verification at load "
+                    f"(corrupted tables): {bad}")
+        self._hoist()
 
-    def step(self, params, cache, tokens):
-        """One converted decode step: ``(logits, new_cache)``."""
-        return self._step(params, cache, tokens)
+    def _hoist(self) -> None:
+        self._step = jax.jit(
+            lambda p, c, t, ok, hok: self.model.decode_step(
+                p, c, t, self.ctx, pcilt=self.pcilt, layer_ok=ok,
+                head_ok=hok))
+
+    def rehoist(self) -> None:
+        """Rebuild the jitted executor after the bundle's table arrays were
+        *replaced* (jit closes over the array values — swapping a dict entry
+        has no effect on the compiled step until re-hoisted).  Deliberately
+        does NOT re-verify integrity: detecting bad bytes at serving time is
+        the health monitor's job, and the chaos suite exercises exactly that
+        path."""
+        self._hoist()
+
+    def step(self, params, cache, tokens, layer_ok=None, head_ok=None):
+        """One converted decode step: ``(logits, new_cache)``.
+
+        ``layer_ok`` (``[L]`` bool) / ``head_ok`` (bool) demote unhealthy
+        layers' fetches (and the PCILT logits head) to their exact dense
+        fake-quant oracles; both default to all-healthy."""
+        if layer_ok is None:
+            layer_ok = jnp.ones((self.model.cfg.n_layers,), bool)
+        if head_ok is None:
+            head_ok = jnp.asarray(True)
+        return self._step(params, cache, tokens, jnp.asarray(layer_ok, bool),
+                          jnp.asarray(head_ok, bool))
 
     __call__ = step
+
+    # -- integrity verification ----------------------------------------------
+
+    def verify_layer(self, layer: int) -> List[Tuple]:
+        """Checksum one layer's conv + projection table slices against the
+        conversion-time record; returns the breached ``(name, layer)``
+        sites (empty = clean)."""
+        integ = self.pcilt["integrity"]
+        bad: List[Tuple] = []
+        if table_checksum(
+                np.asarray(self.pcilt["tables"])[layer]) != integ["conv"][layer]:
+            bad.append(("conv", int(layer)))
+        proj = self.pcilt.get("proj")
+        if proj is not None:
+            for name, t in proj["tables"].items():
+                if table_checksum(np.asarray(t)[layer]) != \
+                        integ["proj"][name][layer]:
+                    bad.append((name, int(layer)))
+        return bad
+
+    def verify_head(self) -> List[Tuple]:
+        """Checksum the shared-pool logits head (pool values + ``seg_idx``
+        pointers); returns breached sites (empty = clean / no head)."""
+        head = self.pcilt.get("head")
+        if head is None:
+            return []
+        integ = self.pcilt["integrity"]["head"]
+        bad: List[Tuple] = []
+        if table_checksum(head["pool"]) != integ["pool"]:
+            bad.append(("head.pool",))
+        if table_checksum(head["seg_idx"]) != integ["seg_idx"]:
+            bad.append(("head.seg_idx",))
+        return bad
+
+    def verify_integrity(self) -> List[Tuple]:
+        """Full verification: every layer of every stacked table plus the
+        head; returns all breached sites (what the monitor amortizes)."""
+        L = self.pcilt["tables"].shape[0]
+        bad: List[Tuple] = []
+        for l in range(L):
+            bad.extend(self.verify_layer(l))
+        bad.extend(self.verify_head())
+        return bad
 
     def table_bytes(self) -> int:
         """Total bytes of every table the converted decode deploys."""
@@ -534,10 +658,144 @@ class PCILTMambaDecode:
                 group, autotune=True)
 
 
+class HealthMonitor:
+    """Amortized health checking + graceful degradation for a converted
+    Mamba decode path.
+
+    The paper's exactness guarantee — a PCILT fetch is *bit-exact* against
+    the dense matmul on the quantized activation grid — makes health
+    checking uniquely cheap: any deviation at all is corruption, not noise.
+    The monitor holds per-layer (and head) boolean health masks and, once
+    per tick, spot-checks **one** still-healthy layer (round-robin), so the
+    steady-state overhead is one layer's CRC per tick regardless of depth:
+
+    * **checksum check** — :meth:`PCILTMambaDecode.verify_layer` CRCs the
+      layer's conv + projection table slices against the conversion-time
+      record (zero false negatives on single-entry flips);
+    * **dense-oracle spot-check** (every ``oracle_every``-th clean check) —
+      a fixed probe activation through the layer's table fetch vs the
+      fake-quant dense matmul, catching corruption of anything the CRC
+      record does not cover;
+    * **output check** — :meth:`check_outputs` flags NaN/Inf in the decode
+      logits (activation poisoning / numerical blowup), which the engine
+      answers with checkpoint rollback rather than demotion.
+
+    On breach the failing layer alone is demoted (its mask bit cleared), so
+    subsequent steps run that layer's projections + conv on the exact dense
+    oracle while every healthy layer keeps fetching — serving continues,
+    degraded and logged, never wrong.  ``last_verified`` records the newest
+    tick each layer passed at, bounding how far a rollback must rewind.
+    """
+
+    def __init__(self, decode: PCILTMambaDecode, params, *,
+                 oracle_every: int = 4, oracle_batch: int = 1,
+                 oracle_tol: float = 5e-3, seed: int = 0):
+        cfg = decode.model.cfg
+        self.decode = decode
+        self.params = params
+        self.oracle_every = oracle_every
+        self.oracle_tol = oracle_tol
+        self.n_layers = int(cfg.n_layers)
+        self.layer_ok = np.ones(self.n_layers, bool)
+        self.head_ok = True
+        #: newest tick each layer passed verification at (-1 = never)
+        self.last_verified = np.full(self.n_layers, -1, np.int64)
+        self.head_last_verified = -1
+        self.checks = 0
+        self.events: List[Dict] = []
+        rng = np.random.default_rng(seed)
+        self._probe = (0.3 * rng.normal(
+            size=(oracle_batch, cfg.d_model))).astype(np.float32)
+
+    # -- masks / state -------------------------------------------------------
+
+    def ok_masks(self) -> Tuple[jax.Array, jax.Array]:
+        """The ``(layer_ok, head_ok)`` arguments for the next decode step."""
+        return jnp.asarray(self.layer_ok), jnp.asarray(self.head_ok)
+
+    @property
+    def degraded(self) -> bool:
+        return (not bool(self.layer_ok.all())) or not self.head_ok
+
+    def demote(self, kind: str, layer: Optional[int], tick: int,
+               reason: str) -> Dict:
+        """Clear one health bit; the next step's cond takes the dense-oracle
+        branch for that layer (or the head) — no retrace, no restart."""
+        if kind == "head":
+            self.head_ok = False
+        else:
+            self.layer_ok[int(layer)] = False
+        ev = {"kind": kind, "layer": None if layer is None else int(layer),
+              "tick": int(tick), "reason": reason}
+        self.events.append(ev)
+        log.warning("health breach at tick %d: %s layer=%s (%s) — demoted "
+                    "to dense oracle", tick, kind, layer, reason)
+        return ev
+
+    # -- checks --------------------------------------------------------------
+
+    def check_outputs(self, logits) -> bool:
+        """NaN/Inf gate on the step's logits (True = healthy)."""
+        return bool(jnp.all(jnp.isfinite(logits)))
+
+    def _oracle_check(self, layer: int) -> bool:
+        """Probe one layer's ``wx`` table fetch against the fake-quant dense
+        matmul — exact on the grid, so any mismatch beyond float-sum
+        reassociation noise is corruption."""
+        proj = self.decode.pcilt.get("proj")
+        if proj is None or "wx" not in proj["tables"]:
+            return True
+        t = proj["tables"]["wx"]  # [L, G, V, O]
+        spec, group = proj["spec"], proj["group"]
+        scale = proj["scales"]["wx"][layer]
+        x = self._probe
+        pad = t.shape[1] * group - x.shape[-1]
+        xx = np.concatenate(
+            [x, np.zeros((x.shape[0], pad), x.dtype)], -1) if pad else x
+        got = pcilt_linear(jnp.asarray(xx), t, spec, scale, group,
+                           path="gather", stacked=int(layer))
+        k = self.params["blocks"]["mixer"]["wx"]["kernel"][layer]
+        want = fake_quant(jnp.asarray(x), spec, scale) @ k.astype(jnp.float32)
+        return bool(np.allclose(np.asarray(got), np.asarray(want),
+                                rtol=self.oracle_tol, atol=self.oracle_tol))
+
+    def on_tick(self, tick: int) -> List[Dict]:
+        """Amortized health pass for one decode tick; returns the breach
+        events raised (empty = all checked slices clean)."""
+        tick = int(tick)
+        breaches: List[Dict] = []
+        candidates = [l for l in range(self.n_layers) if self.layer_ok[l]]
+        if candidates:
+            l = candidates[tick % len(candidates)]
+            bad = self.decode.verify_layer(l)
+            if bad:
+                breaches.append(self.demote(
+                    "layer", l, tick, f"checksum breach: {bad}"))
+            else:
+                self.checks += 1
+                if self.oracle_every and \
+                        self.checks % self.oracle_every == 0 and \
+                        not self._oracle_check(l):
+                    breaches.append(self.demote(
+                        "layer", l, tick, "dense-oracle divergence"))
+            if self.layer_ok[l]:
+                self.last_verified[l] = tick
+        if self.head_ok and self.decode.pcilt.get("head") is not None and \
+                tick % max(self.n_layers, 1) == 0:
+            bad = self.decode.verify_head()
+            if bad:
+                breaches.append(self.demote(
+                    "head", None, tick, f"checksum breach: {bad}"))
+            else:
+                self.head_last_verified = tick
+        return breaches
+
+
 def convert_mamba_decode(model, params, calib_tokens, ctx=None, *,
                          proj_path: str = "fused", projections=None,
                          mesh=None, mesh_axis: str = "model",
-                         table_dtype=jnp.float32) -> PCILTMambaDecode:
+                         table_dtype=jnp.float32,
+                         head: Optional[str] = None) -> PCILTMambaDecode:
     """Offline full-PCILT conversion of a ``MambaLM`` decode step.
 
     The once-per-lifetime build for the paper's end-to-end decode story:
@@ -559,7 +817,10 @@ def convert_mamba_decode(model, params, calib_tokens, ctx=None, *,
     (``"fused"`` is the deployment path; ``"kernel"`` is the host-packed
     baseline the benchmark measures against; ``"dense_fq"`` the parity
     oracle).  ``table_dtype=jnp.bfloat16`` halves table memory (the stacked
-    kernel contracts and accumulates f32 either way).
+    kernel contracts and accumulates f32 either way).  ``head="shared"``
+    additionally converts the logits head to a shared-pool (ext.-3) PCILT
+    calibrated on the ``ln_f`` output absmax.  The returned executor carries
+    the bundle's conversion-time integrity record, verified at load.
     """
     from repro.nn.layers import Ctx
 
@@ -581,10 +842,13 @@ def convert_mamba_decode(model, params, calib_tokens, ctx=None, *,
     proj_scales = None
     if cfg.pcilt.apply_to_gemv:
         proj_scales = {"in": to_scale(amax["in"]), "out": to_scale(amax["out"])}
+    if head is not None and head != "shared":
+        raise ValueError(f"head= accepts None or 'shared', got {head!r}")
     pcilt = model.build_pcilt(
         params, to_scale(amax["conv_in"]), proj_scales=proj_scales,
         proj_path=proj_path, projections=projections, mesh=mesh,
-        mesh_axis=mesh_axis, table_dtype=table_dtype)
+        mesh_axis=mesh_axis, table_dtype=table_dtype,
+        head_scale=to_scale(amax["head_in"]) if head == "shared" else None)
     return PCILTMambaDecode(model, pcilt, ctx)
 
 

@@ -84,10 +84,13 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import math
 import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence
+
+log = logging.getLogger("repro.autotune")
 
 __all__ = [
     "TileConfig",
@@ -115,6 +118,29 @@ TIMING_RUNS = 0
 _DEFAULT_CACHE = os.path.join(
     os.path.expanduser("~"), ".cache", "repro-pcilt", "tiles.json"
 )
+
+
+def _read_json(path: str, quarantine: bool = True) -> Dict[str, dict]:
+    """Read a cache file, tolerating absence silently but never *silently*
+    resetting on corruption: an unreadable/unparseable file is loudly
+    warned about and (when ``quarantine``) renamed to ``<path>.corrupt`` so
+    the bytes survive for post-mortem while tuning restarts empty."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return {}
+    except (OSError, ValueError) as e:
+        log.warning(
+            "autotune cache %s is unreadable (%s: %s); starting empty — "
+            "corrupt file preserved at %s.corrupt",
+            path, type(e).__name__, e, path)
+        if quarantine:
+            try:
+                os.replace(path, path + ".corrupt")
+            except OSError:
+                pass  # read-only fs etc.: keep serving, just without quarantine
+        return {}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,11 +192,7 @@ class TileCache:
         self._load()
 
     def _load(self) -> None:
-        try:
-            with open(self.path) as f:
-                self._entries = json.load(f)
-        except (OSError, ValueError):
-            self._entries = {}
+        self._entries = _read_json(self.path)
 
     def _save(self) -> None:
         d = os.path.dirname(self.path)
@@ -179,12 +201,9 @@ class TileCache:
         # Start from the freshest on-disk state and overlay only the keys this
         # process actually recorded.  Overlaying the whole in-memory dict would
         # clobber entries a concurrent tuner wrote after our startup load with
-        # our stale copies of them.
-        try:
-            with open(self.path) as f:
-                on_disk = json.load(f)
-        except (OSError, ValueError):
-            on_disk = {}
+        # our stale copies of them.  A file that went corrupt since load is
+        # quarantined (warned + renamed *.corrupt) and the merge starts empty.
+        on_disk = _read_json(self.path)
         merged = dict(on_disk)
         merged.update({k: self._entries[k] for k in self._dirty
                        if k in self._entries})

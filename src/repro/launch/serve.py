@@ -1,22 +1,53 @@
-"""Serving launcher: batched prefill + decode with continuous batching.
+"""Serving launcher: batched prefill + decode with continuous batching,
+hardened for faults.
 
 ``python -m repro.launch.serve --arch qwen3-0.6b --requests 8`` runs a small
 request stream through the engine on CPU (smoke config); on a pod the same
 engine serves the full config with the production mesh.
 
 Engine: fixed decode batch of slots; requests queue in, prefill fills a
-slot's KV pages, decode steps the whole batch every tick, finished slots are
-recycled (continuous batching).  With ``--pcilt`` the decode projections run
-the paper's quantized-LUT path and the engine verifies the LUT outputs
-against the dense oracle on the first step (PCILT is exact on the quantized
-grid — paper §Basic Version).
+slot's state, decode steps the whole batch every tick, finished slots are
+recycled (continuous batching).  With ``--pcilt`` the decode runs the
+paper's converted table path (``core.serving.convert_mamba_decode``) under a
+:class:`repro.core.serving.HealthMonitor`: table integrity is spot-checked
+one layer per tick, and a breached layer is demoted to its exact dense
+fake-quant oracle — serving continues, degraded and logged, never wrong.
+
+Resilience contract (``docs/resilience.md`` has the full matrix):
+
+* **tick-level try/restore** — every committed tick checkpoints the full
+  engine state (cache, tokens, slots, queue, request fields) into a bounded
+  ring; any step fault restores the latest checkpoint and replays, up to
+  ``max_restarts`` (``Supervisor`` semantics, applied to serving);
+* **never wrong** — a table-corruption breach detected at tick ``k`` may
+  have poisoned commits back to the breached layer's ``last_verified``
+  tick, so the engine rolls back *to that tick* and replays with the layer
+  demoted: every token a request ends up with was produced by verified
+  tables or the dense oracle;
+* **deadlines** — a request exceeding ``deadline_s`` is evicted, its slot
+  state zeroed, and requeued with exponential backoff for up to
+  ``max_retries`` attempts before it is failed (bounded, never lost
+  silently);
+* **watchdog** — decode tick wall times feed a
+  :class:`repro.runtime.StepWatchdog`; straggler ticks land in the stats;
+* **accounting** — every request ends in exactly one outcome
+  (``served`` / ``degraded`` / ``failed``), derived from request state at
+  the end so checkpoint replays can never double-count.
+
+``--chaos`` drives the engine through every injected fault class
+(scheduled tick fault, NaN-poisoned state, corrupted projection stack,
+flipped head ``seg_idx`` pointers, garbled autotune cache) and exits
+non-zero if any request is lost or the served tokens diverge from a
+fault-free reference run — the CI smoke for the resilience layer.
 """
 
 from __future__ import annotations
 
 import argparse
+import logging
 import time
-from typing import List, Optional
+from collections import deque
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,26 +57,52 @@ from repro.configs import get_config, get_smoke_config
 from repro.models import build_model
 from repro.nn.module import materialize, shape_structs
 from repro.launch.steps import make_decode_step, make_prefill_step, make_ctx
+from repro.runtime import StepWatchdog
+
+log = logging.getLogger("repro.serve")
+
+
+class _Degraded(Exception):
+    """Health breach: roll back to ``target_tick`` and replay demoted."""
+
+    def __init__(self, target_tick: int, events):
+        super().__init__(f"health breach; replay from tick {target_tick}")
+        self.target_tick = target_tick
+        self.events = events
 
 
 class Request:
-    def __init__(self, rid: int, prompt: np.ndarray, max_new: int):
+    def __init__(self, rid: int, prompt: np.ndarray, max_new: int,
+                 deadline_s: Optional[float] = None, max_retries: int = 2):
         self.rid = rid
-        self.prompt = prompt
+        self.prompt = np.asarray(prompt)
         self.max_new = max_new
+        self.deadline_s = deadline_s
+        self.max_retries = max_retries
         self.out: List[int] = []
         self.done = False
+        #: queued | active | served | degraded | failed
+        self.outcome = "queued"
+        self.retries = 0
+        #: True when any committed token was produced under demotion
+        self.degraded = False
+        self.t_admit = 0.0
+        self.not_before = 0.0  # backoff gate for requeued requests
 
 
 class Engine:
-    """Slot-based continuous batching over a single decode step function."""
+    """Slot-based continuous batching with checkpointed fault recovery."""
 
-    def __init__(self, cfg, max_len: int = 256, slots: int = 4, mesh=None):
+    def __init__(self, cfg, max_len: int = 256, slots: int = 4, mesh=None, *,
+                 pcilt: bool = False, pcilt_bundle: Optional[Dict] = None,
+                 oracle_every: int = 4, max_restarts: int = 8,
+                 ckpt_keep: Optional[int] = None, chaos: Optional[Dict] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.max_len = max_len
         self.slots = slots
         self.mesh = mesh
+        self.max_restarts = max_restarts
         self.params = materialize(self.model.param_specs(), jax.random.PRNGKey(0))
         cspecs = self.model.cache_specs(slots, max_len)
         self.cache = materialize(cspecs, jax.random.PRNGKey(1))
@@ -53,44 +110,341 @@ class Engine:
         self.decode = jax.jit(make_decode_step(cfg, mesh))
         self.active: List[Optional[Request]] = [None] * slots
         self.tokens = np.zeros((slots, 1), np.int32)
+        #: chaos schedule {step_count: [fn(engine)]} keyed on the monotone
+        #: ``self.steps`` counter (prefill + decode steps; never rewound by a
+        #: restore); entries pop one-shot, so a checkpoint replay of a
+        #: faulted step runs clean
+        self.chaos = dict(chaos or {})
+        self.ckpts: deque = deque(
+            maxlen=ckpt_keep or (int(cfg.n_layers) + 4))
+        self.queue: List[Request] = []
+        self._requests: List[Request] = []
+        self.tick = 0
+        self.steps = 0  # monotone prefill+decode step count (chaos clock)
+        self.prefill_ticks = 0
+        self.restarts = 0
+        self.rollbacks = 0
+
+        self.pdecode = None
+        self.monitor = None
+        if pcilt:
+            from repro.core.serving import (HealthMonitor, PCILTMambaDecode,
+                                            convert_mamba_decode)
+
+            if cfg.pcilt is None:
+                raise ValueError(
+                    "Engine(pcilt=True) requires cfg.pcilt (a configs.base."
+                    "PCILTConfig) — set cfg = dataclasses.replace(cfg, "
+                    "pcilt=PCILTConfig(...)) before constructing")
+            ctx = make_ctx(mesh, None, decode=True)
+            if pcilt_bundle is not None:
+                self.pdecode = PCILTMambaDecode(self.model, pcilt_bundle, ctx)
+            else:
+                calib = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                           cfg.vocab)
+                self.pdecode = convert_mamba_decode(
+                    self.model, self.params, calib, ctx, head="shared")
+            self.monitor = HealthMonitor(self.pdecode, self.params,
+                                         oracle_every=oracle_every)
+
+    # -- stepping ------------------------------------------------------------
+
+    def _raw_step(self):
+        toks = jnp.asarray(self.tokens)
+        if self.pdecode is not None:
+            lmask, hmask = self.monitor.ok_masks()
+            logits, new_cache = self.pdecode.step(self.params, self.cache,
+                                                  toks, lmask, hmask)
+            if self.cfg.padded_vocab > self.cfg.vocab:  # never sample padding
+                neg = jnp.full((self.cfg.padded_vocab - self.cfg.vocab,),
+                               -1e30, logits.dtype)
+                logits = logits.at[..., self.cfg.vocab:].set(neg)
+        else:
+            logits, new_cache = self.decode(self.params, self.cache, toks)
+        return logits, new_cache
+
+    def _step(self):
+        # chaos clock: fire every due injection exactly once, before the
+        # forward — a raise here surfaces as a step fault (restore + replay)
+        for k in sorted(k for k in self.chaos if k <= self.steps):
+            for act in self.chaos.pop(k):
+                act(self)
+        self.steps += 1
+        logits, new_cache = self._raw_step()
+        # finite gate BEFORE committing: NaN/Inf outputs (poisoned state,
+        # numerical blowup) trigger restore-and-replay, never a sampled token.
+        # The recurrent state must be gated too, not just the logits: the
+        # PCILT path quantizes activations to integer table indices, which
+        # *launders* NaN into a valid (wrong) lookup — poisoned ssd state
+        # yields finite logits while the corruption persists in the cache.
+        checks = [jnp.all(jnp.isfinite(logits))]
+        checks += [jnp.all(jnp.isfinite(l)) for l in jax.tree.leaves(new_cache)
+                   if jnp.issubdtype(l.dtype, jnp.floating)]
+        if not bool(jnp.all(jnp.stack(checks))):
+            raise RuntimeError("non-finite decode outputs or state (NaN/Inf)")
+        self.cache = new_cache
+        return np.asarray(jnp.argmax(logits, axis=-1))
 
     def _prefill_into_slot(self, slot: int, req: Request):
         """Feed the prompt through decode steps (teacher-forced prefill).
 
         Production pods run the fused ``prefill_step`` over the whole prompt;
         the slot engine replays tokens through the decode path so a single
-        compiled step serves both phases (classic small-deployment trade)."""
+        compiled step serves both phases (classic small-deployment trade).
+
+        Concurrently active slots keep *generating* during these ticks —
+        their cache advances either way, so their sampled tokens must be
+        committed, not dropped (dropping them skipped every token a slot
+        sampled while a neighbor prefilled).  The step that consumes the
+        final prompt token emits the request's first generated token."""
+        req.outcome = "active"
+        req.t_admit = time.time()
+        # an idle slot still steps with the batch (its outputs dropped), so
+        # its recurrent state is garbage by now — start from a clean slate or
+        # the request's tokens depend on what the slot did while unowned
+        self._reset_slot(slot)
+        last = 0
         for t in req.prompt:
             self.tokens[slot, 0] = int(t)
-            self._step()
+            out = self._step()
+            self.prefill_ticks += 1
+            self._commit_tokens(out, skip=slot)
+            last = int(out[slot])
         self.active[slot] = req
+        req.out.append(last)
+        self.tokens[slot, 0] = last
+        self._finish_if_done(slot)
 
-    def _step(self):
-        logits, self.cache = self.decode(
-            self.params, self.cache, jnp.asarray(self.tokens))
-        return np.asarray(jnp.argmax(logits, axis=-1))
+    def _commit_tokens(self, nxt, skip: Optional[int] = None):
+        degraded_now = self.monitor is not None and self.monitor.degraded
+        for s, req in enumerate(self.active):
+            if req is None or s == skip:
+                continue
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self.tokens[s, 0] = tok
+            if degraded_now:
+                req.degraded = True
+            self._finish_if_done(s)
+
+    def _finish_if_done(self, s: int):
+        req = self.active[s]
+        if req is not None and len(req.out) >= req.max_new:
+            req.done = True
+            req.outcome = "degraded" if req.degraded else "served"
+            self.active[s] = None
+            self._reset_slot(s)
+
+    def _reset_slot(self, s: int):
+        """Zero one slot's recurrent/cache state so a recycled (or evicted)
+        slot can never leak a previous request's context into the next."""
+        def z(a):
+            if hasattr(a, "ndim") and a.ndim >= 2 and a.shape[1] == self.slots:
+                return a.at[:, s].set(0)
+            return a
+
+        self.cache = dict(self.cache,
+                          layers=jax.tree.map(z, self.cache["layers"]))
+
+    # -- checkpoint ring -----------------------------------------------------
+
+    def _checkpoint(self):
+        """Snapshot the full engine state (jax arrays are immutable — holding
+        the refs *is* the snapshot; host-side state is copied)."""
+        self.ckpts.append({
+            "tick": self.tick,
+            "cache": self.cache,
+            "tokens": self.tokens.copy(),
+            "active": list(self.active),
+            "queue": list(self.queue),
+            "reqs": {r.rid: (list(r.out), r.done, r.outcome, r.retries,
+                             r.degraded, r.t_admit, r.not_before)
+                     for r in self._requests},
+        })
+
+    def _restore(self, target_tick: int):
+        """Restore the newest checkpoint at or before ``target_tick``
+        (falling back to the oldest retained — the ring bounds how far back
+        a restore can reach, and the monitor's per-tick verification bounds
+        how far back one ever *needs* to reach)."""
+        snaps = [c for c in self.ckpts if c["tick"] <= target_tick]
+        snap = snaps[-1] if snaps else self.ckpts[0]
+        # drop now-stale snapshots of ticks the replay will redo
+        keep = [c for c in self.ckpts if c["tick"] <= snap["tick"]
+                and c is not snap] + [snap]
+        self.ckpts = deque(keep, maxlen=self.ckpts.maxlen)
+        self.cache = snap["cache"]
+        self.tokens = snap["tokens"].copy()
+        self.active = list(snap["active"])
+        self.queue = list(snap["queue"])
+        for r in self._requests:
+            out, done, outcome, retries, degraded, t_admit, nb = \
+                snap["reqs"][r.rid]
+            r.out, r.done, r.outcome = list(out), done, outcome
+            r.retries, r.degraded, r.t_admit, r.not_before = \
+                retries, degraded, t_admit, nb
+        self.tick = snap["tick"]
+        if self.monitor is not None:
+            # a verification recorded at a now-rewound tick no longer vouches
+            # for any committed token — clamp so a later breach rolls back
+            # far enough
+            np.minimum(self.monitor.last_verified, self.tick,
+                       out=self.monitor.last_verified)
+            self.monitor.head_last_verified = min(
+                self.monitor.head_last_verified, self.tick)
+        log.warning("restored engine state at tick %d", self.tick)
+
+    # -- deadlines -----------------------------------------------------------
+
+    def _enforce_deadlines(self):
+        now = time.time()
+        for s, req in enumerate(self.active):
+            if req is None or req.deadline_s is None:
+                continue
+            if now - req.t_admit <= req.deadline_s:
+                continue
+            self.active[s] = None
+            self._reset_slot(s)
+            req.out = []
+            req.degraded = False
+            req.retries += 1
+            if req.retries > req.max_retries:
+                req.done = True
+                req.outcome = "failed"
+                log.error("req %d failed: deadline %.3fs exceeded %d times",
+                          req.rid, req.deadline_s, req.retries)
+            else:
+                req.not_before = now + 0.05 * (2 ** (req.retries - 1))
+                req.outcome = "queued"
+                self.queue.append(req)
+                log.warning("req %d missed deadline; requeued (retry %d/%d, "
+                            "backoff %.3fs)", req.rid, req.retries,
+                            req.max_retries, req.not_before - now)
+
+    # -- main loop -----------------------------------------------------------
 
     def run(self, requests: List[Request], greedy: bool = True):
-        queue = list(requests)
+        self.queue = list(requests)
+        self._requests = list(requests)
+        for r in requests:
+            r.outcome = "queued"
         t0 = time.time()
-        n_decoded = 0
-        while queue or any(r is not None for r in self.active):
-            for s in range(self.slots):
-                if self.active[s] is None and queue:
-                    self._prefill_into_slot(s, queue.pop(0))
-            nxt = self._step()
-            n_decoded += 1
-            for s, req in enumerate(self.active):
-                if req is None:
+        self.tick = 0
+        self.prefill_ticks = 0
+        self.ckpts.clear()
+        self._checkpoint()
+        watchdog = StepWatchdog()
+        while self.queue or any(r is not None for r in self.active):
+            try:
+                t_tick = time.time()
+                now = time.time()
+                for s in range(self.slots):
+                    if self.active[s] is not None or not self.queue:
+                        continue
+                    i = next((i for i, r in enumerate(self.queue)
+                              if r.not_before <= now), None)
+                    if i is None:
+                        break  # every queued request is backing off
+                    self._prefill_into_slot(s, self.queue.pop(i))
+                if not any(r is not None for r in self.active):
+                    time.sleep(0.005)  # wait out the shortest backoff
                     continue
-                tok = int(nxt[s])
-                req.out.append(tok)
-                self.tokens[s, 0] = tok
-                if len(req.out) >= req.max_new:
-                    req.done = True
-                    self.active[s] = None
+                nxt = self._step()
+                if self.monitor is not None:
+                    breaches = self.monitor.on_tick(self.tick)
+                    if breaches:
+                        # commits since the breached layer was last verified
+                        # may be corrupt — rewind there and replay demoted
+                        lv = [int(self.monitor.last_verified[e["layer"]])
+                              for e in breaches if e["layer"] is not None]
+                        lv += [int(self.monitor.head_last_verified)
+                               for e in breaches if e["kind"] == "head"]
+                        raise _Degraded(max(min(lv), 0), breaches)
+                self._commit_tokens(nxt)
+                self._enforce_deadlines()
+                watchdog.observe(self.tick, time.time() - t_tick)
+                self.tick += 1
+                self._checkpoint()
+            except _Degraded as d:
+                self.rollbacks += 1
+                log.warning("rolling back to tick <= %d after %d breach(es)",
+                            d.target_tick, len(d.events))
+                self._restore(d.target_tick)
+            except Exception as e:  # noqa: BLE001 — any tick fault
+                self.restarts += 1
+                log.error("decode tick %d failed (%s); restart %d/%d",
+                          self.tick, e, self.restarts, self.max_restarts)
+                if self.restarts > self.max_restarts:
+                    raise
+                self._restore(self.tick)
         dt = time.time() - t0
-        return {"decode_ticks": n_decoded, "wall_s": dt}
+        # outcome accounting from final request state — replays through the
+        # checkpoint ring can never double-count
+        outcomes = {r.rid: r.outcome for r in self._requests}
+        stats = {
+            "decode_ticks": self.tick,
+            "prefill_ticks": self.prefill_ticks,
+            "wall_s": dt,
+            "served": sum(o == "served" for o in outcomes.values()),
+            "degraded": sum(o == "degraded" for o in outcomes.values()),
+            "failed": sum(o == "failed" for o in outcomes.values()),
+            "retried": sum(r.retries > 0 for r in self._requests),
+            "restarts": self.restarts,
+            "rollbacks": self.rollbacks,
+            "straggler_ticks": list(watchdog.flagged),
+            "outcomes": outcomes,
+        }
+        if self.monitor is not None:
+            stats["health_events"] = list(self.monitor.events)
+        return stats
+
+
+def _chaos_plan(eng: Engine, injector):
+    """The fault schedule the ``--chaos`` smoke drives: one action per fault
+    class, each exercising its detection + response end to end."""
+    from repro.kernels import autotune as atn
+
+    def garble_autotune(e):
+        cache = atn.get_cache()
+        # make sure there are bytes to garble, then corrupt them in place;
+        # the reload must warn + quarantine, never crash or silently reset
+        cache.record("chaos_probe|B=1,dtype=float32|backend=cpu",
+                     atn.TileConfig(Bb=8, Gb=1, Ob=128), None, 0)
+        injector.garble_file(cache.path, "garbage")
+        atn.reset_cache(cache.path)
+
+    def poison_state(e):
+        layers = e.cache["layers"]
+        e.cache = dict(e.cache, layers=dict(
+            layers, ssd=injector.poison(layers["ssd"], "nan", n=4)))
+
+    def corrupt_proj(e):
+        tabs = e.pdecode.pcilt["proj"]["tables"]
+        tabs["wx"] = injector.corrupt_table(tabs["wx"], n_flips=2)
+        e.pdecode.rehoist()  # jit closed over the old arrays
+
+    def flip_head(e):
+        head = e.pdecode.pcilt["head"]
+        head["seg_idx"] = injector.flip_seg_idx(
+            head["seg_idx"], n_pool=head["pool"].shape[0])
+        e.pdecode.rehoist()
+
+    # keyed on the monotone step counter (prefill + decode steps) so every
+    # entry fires even when requests finish during neighbors' prefill ticks
+    return {
+        4: [garble_autotune],
+        7: [lambda e: injector.maybe_fail(7)],
+        11: [poison_state],
+        15: [corrupt_proj],
+        19: [flip_head],
+    }
+
+
+def _make_requests(cfg, n: int, max_new: int, deadline: Optional[float],
+                   seed: int) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(2, cfg.vocab, size=rng.integers(4, 12)),
+                    max_new, deadline_s=deadline) for i in range(n)]
 
 
 def main(argv=None):
@@ -100,20 +454,129 @@ def main(argv=None):
     p.add_argument("--requests", type=int, default=6)
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--pcilt", action="store_true",
+                   help="serve the converted PCILT decode path (Mamba archs) "
+                        "under the health monitor")
+    p.add_argument("--chaos", action="store_true",
+                   help="drive the fault-injection schedule and verify the "
+                        "resilience contract (implies a reference run)")
+    p.add_argument("--deadline", type=float, default=None,
+                   help="per-request deadline in seconds")
+    p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
+    logging.basicConfig(level=logging.WARNING)
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     if cfg.n_img_tokens or cfg.encoder_layers:
         raise SystemExit("serve demo targets text decoder archs")
-    eng = Engine(cfg, max_len=256, slots=args.slots)
-    rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(2, cfg.vocab, size=rng.integers(4, 12)),
-                    args.max_new) for i in range(args.requests)]
+    if args.pcilt:
+        import dataclasses as dc
+        import os
+        import tempfile
+
+        from repro.configs.base import PCILTConfig
+
+        if cfg.ssm is None:
+            raise SystemExit("--pcilt serves the converted Mamba decode "
+                             "path; pick an [ssm] arch (e.g. mamba2-130m)")
+        cfg = dc.replace(cfg, pcilt=PCILTConfig(act_bits=4, group=2),
+                         dtype=jnp.float32)
+        if args.chaos and "REPRO_PCILT_TUNE_CACHE" not in os.environ:
+            # the chaos plan garbles the autotune cache file — never the
+            # user's real one
+            from repro.kernels import autotune as atn
+
+            atn.reset_cache(os.path.join(tempfile.mkdtemp(), "tiles.json"))
+
+    reqs = _make_requests(cfg, args.requests, args.max_new, args.deadline,
+                          args.seed)
+
+    injector = None
+    eng = Engine(cfg, max_len=256, slots=args.slots, pcilt=args.pcilt)
+    if args.chaos:
+        from repro.runtime.faults import FaultInjector
+
+        injector = FaultInjector(fail_at=(7,), seed=args.seed)
+        if eng.pdecode is not None:
+            eng.chaos = _chaos_plan(eng, injector)
+        else:
+            eng.chaos = {4: [lambda e: injector.maybe_fail(7)]}
+
     stats = eng.run(reqs)
     for r in reqs:
-        print(f"req {r.rid}: prompt {len(r.prompt)} toks -> {r.out[:8]}...")
-    print(f"served {len(reqs)} requests in {stats['wall_s']:.2f}s "
+        print(f"req {r.rid}: prompt {len(r.prompt)} toks -> {r.out[:8]}... "
+              f"[{r.outcome}]")
+    n_completed = sum(r.outcome in ("served", "degraded") for r in reqs)
+    print(f"served {n_completed} requests in {stats['wall_s']:.2f}s "
           f"({stats['decode_ticks']} decode ticks)")
+    if stats["degraded"] or stats["restarts"] or stats["rollbacks"]:
+        print(f"resilience: degraded={stats['degraded']} "
+              f"retried={stats['retried']} failed={stats['failed']} "
+              f"restarts={stats['restarts']} rollbacks={stats['rollbacks']}")
+
+    if args.chaos:
+        _verify_chaos_contract(cfg, args, eng, reqs, stats, injector)
+
+
+def _verify_chaos_contract(cfg, args, eng, reqs, stats, injector):
+    """The CI gate: no request lost, fault-free-identical tokens, and the
+    demoted path equal to the dense fake-quant oracle.  Exits non-zero on
+    any violation."""
+    lost = [r.rid for r in reqs if r.outcome not in ("served", "degraded")]
+    if lost:
+        raise SystemExit(f"chaos contract violated: requests lost: {lost}")
+    if not injector.events:
+        raise SystemExit("chaos smoke injected no faults — schedule never "
+                         "fired (engine finished too fast?)")
+    if eng.chaos:
+        raise SystemExit(f"chaos smoke left faults unfired at step keys "
+                         f"{sorted(eng.chaos)} (engine ran only "
+                         f"{eng.steps} steps)")
+
+    # fault-free reference run: same params (PRNGKey(0)), same request stream.
+    # Undegraded requests must be token-identical; degraded requests ran
+    # (partly) through the dense-oracle path, which is allclose-but-not-
+    # bitwise to PCILT — their correctness is covered by the oracle-
+    # equivalence check below, not token identity.
+    ref_eng = Engine(cfg, max_len=256, slots=args.slots, pcilt=args.pcilt)
+    ref = _make_requests(cfg, args.requests, args.max_new, args.deadline,
+                         args.seed)
+    ref_eng.run(ref)
+    mismatched = [r.rid for r, q in zip(reqs, ref)
+                  if r.outcome == "served" and r.out != q.out]
+    if mismatched:
+        raise SystemExit(
+            f"chaos contract violated: undegraded tokens diverge from the "
+            f"fault-free run for requests {mismatched}")
+    n_exact = sum(r.outcome == "served" for r in reqs)
+
+    if eng.pdecode is not None:
+        # demoted decode == dense fake-quant oracle (one explicit step)
+        pc_fq = dict(eng.pdecode.pcilt)
+        proj = pc_fq.get("proj")
+        B = args.slots
+        cspecs = eng.model.cache_specs(B, 256)
+        cache = materialize(cspecs, jax.random.PRNGKey(5))
+        cache = dict(cache, pos=jnp.asarray(1, jnp.int32))
+        tok = np.full((B, 1), 3, np.int32)
+        la = jnp.zeros((cfg.n_layers,), bool)
+        got, _ = eng.pdecode.step(eng.params, cache, jnp.asarray(tok),
+                                  layer_ok=la, head_ok=jnp.asarray(False))
+        if proj is not None:
+            pc_fq["proj"] = dict(proj, path="dense_fq")
+        ref_step = jax.jit(lambda p, c, t: eng.model.decode_step(
+            p, c, t, make_ctx(None, None, decode=True), pcilt=pc_fq,
+            head_ok=jnp.asarray(False)))
+        want, _ = ref_step(eng.params, cache, jnp.asarray(tok))
+        if not np.allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                           atol=1e-4):
+            raise SystemExit("chaos contract violated: demoted decode "
+                             "diverges from the dense fake-quant oracle")
+    print(f"chaos contract verified: {len(reqs)} requests completed "
+          f"({n_exact} token-identical to fault-free run, "
+          f"{len(injector.events)} faults injected, "
+          f"{stats['restarts']} restarts, {stats['rollbacks']} rollbacks, "
+          f"{stats['degraded']} degraded)")
 
 
 if __name__ == "__main__":

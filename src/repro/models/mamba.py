@@ -104,7 +104,8 @@ class MambaLM:
 
     def build_pcilt(self, params, scale, proj_scales=None, proj_path="fused",
                     projections=None, mesh=None, mesh_axis="model",
-                    table_dtype=jnp.float32):
+                    table_dtype=jnp.float32, head_scale=None,
+                    head_weight_bits=4):
         """Offline PCILT build for the decode hot loop (requires
         ``cfg.pcilt``).
 
@@ -126,6 +127,18 @@ class MambaLM:
         ``proj_path`` selects the execution route (``"fused"`` stacked
         kernel; ``"kernel"``/``"gather"``/``"onehot"`` host-packed
         references; ``"dense_fq"`` fake-quant dense oracle).
+
+        Logits head: pass ``head_scale`` (calibrated absmax-derived scale of
+        the ``ln_f`` output — ``calibrate_pcilt``'s ``head_in``) and the
+        tied-embedding / ``lm_head`` kernel is fake-quantized to
+        ``head_weight_bits`` and converted to a **shared-pool** (ext.-3)
+        PCILT (``pool [X, V, O]`` + ``seg_idx [G]``), executed by
+        :meth:`_head_logits` on the ``"shared"`` dispatch path.
+
+        The returned bundle carries an ``"integrity"`` record — per-layer
+        CRC-32 checksums of every table array
+        (``core.serving.pcilt_integrity``) — verified at executor load and
+        on demand by the serving health monitor.
         """
         from repro.core import QuantSpec
         from repro.core.lut_layers import build_dwconv_tables
@@ -149,7 +162,80 @@ class MambaLM:
             out["proj"] = self._build_proj_pcilt(
                 params, spec, proj_scales, proj_path, projections, mesh,
                 mesh_axis, table_dtype)
+        if head_scale is not None:
+            out["head"] = self._build_head_pcilt(
+                params, head_scale, head_weight_bits)
+        from repro.core.serving import pcilt_integrity
+
+        out["integrity"] = pcilt_integrity(out)
         return out
+
+    def _build_head_pcilt(self, params, head_scale, head_weight_bits):
+        """Shared-pool (ext.-3) PCILT over the weight-quantized logits head.
+
+        Weight fake-quantization to ``head_weight_bits`` gives the kernel a
+        low segment cardinality, so the ``[G, V, O]`` grouped tables dedupe
+        into a ``pool [X, V, O]`` + ``seg_idx [G]`` pointer vector; the
+        quantized kernel itself rides along as the exact dense oracle the
+        demoted path evaluates (``fetch(x) == fake_quant(x) @ kernel_q`` on
+        the activation grid — zero-padded alignment rows contribute 0).
+        """
+        from repro.core import (QuantSpec, build_shared_grouped_tables,
+                                fake_quant, scale_from_amax)
+
+        cfg = self.cfg
+        group = cfg.pcilt.group
+        if cfg.tie_embeddings:
+            k = params["embed"]["embedding"].astype(jnp.float32).T  # [d, Vp]
+        else:
+            k = params["lm_head"]["kernel"].astype(jnp.float32)
+        wspec = QuantSpec(bits=head_weight_bits, symmetric=True)
+        w_scale = scale_from_amax(jnp.max(jnp.abs(k)), wspec)
+        kq = fake_quant(k, wspec, w_scale)
+        n = kq.shape[0]
+        pad = (-n) % group
+        kp = jnp.concatenate(
+            [kq, jnp.zeros((pad, kq.shape[1]), kq.dtype)], 0) if pad else kq
+        spec = QuantSpec(bits=cfg.pcilt.act_bits, symmetric=True)
+        shared = build_shared_grouped_tables(
+            kp, spec, head_scale, group)
+        return {"pool": shared.pool, "seg_idx": shared.seg_idx,
+                "group": group, "spec": spec,
+                "scale": jnp.asarray(head_scale, jnp.float32),
+                "kernel_q": kq, "n": n + pad}
+
+    def _head_logits(self, head, x, ok=None):
+        """Last-position logits through the shared-pool PCILT head.
+
+        ``x [B, d]`` -> ``[B, padded_vocab]``.  ``ok`` (traced bool) demotes
+        the fetch to the exact fake-quant dense oracle under ``lax.cond`` —
+        the response to a corrupted pool entry or re-aimed ``seg_idx``
+        pointer."""
+        from repro.core import fake_quant, pcilt_linear
+        from repro.core.pcilt import SharedGroupedTables
+
+        cfg = self.cfg
+
+        def _fetch(xx):
+            pad = head["n"] - xx.shape[-1]
+            if pad:  # group-alignment slots (zero weights -> zero tables)
+                xx = jnp.concatenate(
+                    [xx, jnp.zeros((*xx.shape[:-1], pad), xx.dtype)], -1)
+            shared = SharedGroupedTables(pool=head["pool"],
+                                         seg_idx=head["seg_idx"],
+                                         group=head["group"])
+            return pcilt_linear(
+                xx.astype(jnp.float32), shared, head["spec"], head["scale"],
+                head["group"], path="shared").astype(cfg.dtype)
+
+        def _oracle(xx):
+            xq = fake_quant(xx.astype(jnp.float32), head["spec"],
+                            head["scale"])
+            return (xq @ head["kernel_q"]).astype(cfg.dtype)
+
+        if ok is None:
+            return _fetch(x)
+        return jax.lax.cond(jnp.asarray(ok, bool), _fetch, _oracle, x)
 
     def _build_proj_pcilt(self, params, spec, proj_scales, proj_path,
                           projections, mesh, mesh_axis, table_dtype):
@@ -209,35 +295,54 @@ class MambaLM:
                      "out": calib["wo_in"], "conv_in": calib["conv_in"]}
             return h + y, stats
 
-        _, stats = jax.lax.scan(body, x, params["blocks"])
+        h, stats = jax.lax.scan(body, x, params["blocks"])
+        head_in = jnp.max(
+            jnp.abs(rmsnorm(params["ln_f"], h, cfg.norm_eps))
+        ).astype(jnp.float32)
         return {"in": stats["in"], "out": stats["out"],
-                "conv_in": jnp.max(stats["conv_in"])}
+                "conv_in": jnp.max(stats["conv_in"]), "head_in": head_in}
 
-    def decode_step(self, params, cache, tokens, ctx: Ctx, pcilt=None):
+    def decode_step(self, params, cache, tokens, ctx: Ctx, pcilt=None,
+                    layer_ok=None, head_ok=None):
         """One decode step.  ``pcilt`` (from :meth:`build_pcilt`) routes every
         layer's conv frontend through the fused PCILT fetch; with a
         ``pcilt["proj"]`` bundle the projections execute as layer-stacked
         table fetches too — the stacked ``[L, G, V, O]`` tables stay
         closure-resident while only the integer layer index and that layer's
-        calibration scales ride the scan."""
+        calibration scales ride the scan.
+
+        Resilience masks: ``layer_ok`` (``[L]`` bool) and ``head_ok`` (bool)
+        demote individual layers' fetches (conv + projections) or the PCILT
+        logits head to their exact dense fake-quant oracles under
+        ``lax.cond``.  They are runtime *arguments* — flipping a bit never
+        retraces — and an all-True mask executes the identical fetch
+        computation, so healthy serving is bitwise-unchanged."""
         cfg = self.cfg
+        if pcilt is None and (layer_ok is not None or head_ok is not None):
+            raise ValueError(
+                "layer_ok/head_ok demote PCILT fetches to their dense "
+                "oracles — they require a pcilt bundle (got pcilt=None)")
         pos = cache["pos"]
         x = self._embed(params, ctx, tokens)
         proj = None if pcilt is None else pcilt.get("proj")
 
         def body(h, inp):
             p, st = inp[0], inp[1]
+            per = inp[3] if len(inp) > 3 else {}
             pc = None
             if pcilt is not None:
                 pc = {"tables": inp[2], "scale": pcilt["scale"],
                       "spec": pcilt["spec"]}
+                if "ok" in per:
+                    pc["ok"] = per["ok"]
                 if proj is not None:
                     pc["proj"] = {
                         "tables": proj["tables"],  # full stack, not scanned
                         "spec": proj["spec"], "group": proj["group"],
                         "path": proj["path"], "mesh": proj["mesh"],
                         "mesh_axis": proj["mesh_axis"],
-                        "layer": inp[3]["layer"], "scale": inp[3]["scale"]}
+                        "layer": per["layer"], "scale": per["scale"],
+                        "ok": per.get("ok")}
             y, st2 = mamba_decode(p["mixer"], cfg, ctx,
                                   rmsnorm(p["ln"], h, cfg.norm_eps), st,
                                   pcilt=pc)
@@ -246,10 +351,19 @@ class MambaLM:
         xs = (params["blocks"], cache["layers"])
         if pcilt is not None:
             xs = xs + (pcilt["tables"],)
+            per = {}
             if proj is not None:
-                xs = xs + ({"layer": jnp.arange(cfg.n_layers, dtype=jnp.int32),
-                            "scale": proj["scales"]},)
+                per["layer"] = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+                per["scale"] = proj["scales"]
+            if layer_ok is not None:
+                per["ok"] = jnp.asarray(layer_ok, bool)
+            if per:
+                xs = xs + (per,)
         x, new_states = jax.lax.scan(body, x, xs)
         x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
-        logits = self._logits(params, x)[:, -1]
+        head = None if pcilt is None else pcilt.get("head")
+        if head is None:
+            logits = self._logits(params, x)[:, -1]
+        else:
+            logits = self._head_logits(head, x[:, -1], head_ok)
         return logits, dict(cache, layers=new_states, pos=pos + 1)

@@ -91,6 +91,13 @@ def _proj(params, name, x, cfg, proj):
     ``"dense_fq"`` (dense matmul on fake-quantized input: the parity oracle
     the table fetch must equal, since the fetch is exact on the quantized
     grid).
+
+    Resilience: when the bundle carries a per-layer health bit
+    (``proj["ok"]``, a traced bool from ``decode_step(layer_ok=...)``), the
+    fetch runs under ``lax.cond`` against the dense fake-quant oracle — a
+    layer whose tables failed their integrity/health check is demoted to the
+    oracle branch without retracing (the bit is a runtime argument, not a
+    closure constant), and the request keeps being served correctly.
     """
     if proj is None or name not in proj["tables"]:
         return dense(params[name], x, cfg.dtype)
@@ -98,19 +105,30 @@ def _proj(params, name, x, cfg, proj):
 
     scale = proj["scale"][name]
     path = proj.get("path", "fused")
-    if path == "dense_fq":
-        xq = fake_quant(x.astype(jnp.float32), proj["spec"], scale)
+
+    def _oracle(xx):
+        xq = fake_quant(xx.astype(jnp.float32), proj["spec"], scale)
         return dense(params[name], xq, jnp.float32).astype(cfg.dtype)
-    tables = proj["tables"][name]
-    pad = tables.shape[1] * proj["group"] - x.shape[-1]
-    if pad:  # group-alignment slots: table rows built from zero weights
-        x = jnp.concatenate(
-            [x, jnp.zeros((*x.shape[:-1], pad), x.dtype)], axis=-1)
-    out = pcilt_linear(x, tables, proj["spec"], scale, proj["group"],
-                       path=path, stacked=proj["layer"],
-                       mesh=proj.get("mesh"),
-                       mesh_axis=proj.get("mesh_axis", "model"))
-    return out.astype(cfg.dtype)
+
+    if path == "dense_fq":
+        return _oracle(x)
+
+    def _fetch(xx):
+        tables = proj["tables"][name]
+        pad = tables.shape[1] * proj["group"] - xx.shape[-1]
+        if pad:  # group-alignment slots: table rows built from zero weights
+            xx = jnp.concatenate(
+                [xx, jnp.zeros((*xx.shape[:-1], pad), xx.dtype)], axis=-1)
+        out = pcilt_linear(xx, tables, proj["spec"], scale, proj["group"],
+                           path=path, stacked=proj["layer"],
+                           mesh=proj.get("mesh"),
+                           mesh_axis=proj.get("mesh_axis", "model"))
+        return out.astype(cfg.dtype)
+
+    ok = proj.get("ok")
+    if ok is None:
+        return _fetch(x)
+    return jax.lax.cond(ok, _fetch, _oracle, x)
 
 
 def _dims(cfg):
@@ -155,12 +173,25 @@ def _conv1d(params, cfg, x, conv_state=None, pcilt=None):
     if conv_state is not None:  # decode: state [B, k-1, C]
         window = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # [B,k,C]
         if pcilt is not None:
-            from repro.core import pcilt_depthwise_conv1d
+            from repro.core import fake_quant, pcilt_depthwise_conv1d
 
-            y = pcilt_depthwise_conv1d(
-                window[:, -k:], params["conv_w"], pcilt["spec"],
-                pcilt["scale"], tables=pcilt["tables"], path="fused",
-                padding="VALID").astype(x.dtype)  # [B, 1, C]
+            def _fetch(win):
+                return pcilt_depthwise_conv1d(
+                    win, params["conv_w"], pcilt["spec"],
+                    pcilt["scale"], tables=pcilt["tables"], path="fused",
+                    padding="VALID").astype(x.dtype)  # [B, 1, C]
+
+            def _oracle(win):
+                wq = fake_quant(win.astype(jnp.float32), pcilt["spec"],
+                                pcilt["scale"])
+                return jnp.einsum(
+                    "bkc,kc->bc", wq, params["conv_w"].astype(jnp.float32)
+                )[:, None].astype(x.dtype)
+
+            ok = pcilt.get("ok")
+            win = window[:, -k:]
+            y = _fetch(win) if ok is None else jax.lax.cond(
+                ok, _fetch, _oracle, win)
         else:
             y = jnp.einsum("bkc,kc->bc", window[:, -k:], w)[:, None]
         new_state = window[:, -(k - 1):]

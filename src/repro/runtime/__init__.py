@@ -1,3 +1,4 @@
 """Distributed runtime: fault tolerance, straggler mitigation, pipeline parallelism."""
-from .supervisor import StepWatchdog, detect_stragglers, Supervisor, FaultInjector
+from .supervisor import StepWatchdog, detect_stragglers, Supervisor
+from .faults import FaultInjector
 from .pipeline import pipeline_apply

@@ -1,0 +1,145 @@
+"""Composable fault injection — the chaos harness behind the resilience layer.
+
+Generalizes the scheduled-raise ``FaultInjector`` that ``Supervisor`` tests
+always used into one seeded harness covering every fault class the serving
+engine must survive (``docs/resilience.md`` maps each to its detection and
+response):
+
+* **scheduled step faults** — :meth:`FaultInjector.maybe_fail` raises at
+  given steps, once each (the original ``Supervisor`` contract, unchanged);
+* **table corruption** — :meth:`corrupt_table` flips entries of any dense
+  PCILT table array (conv ``[L, C, V]``, stacked proj ``[L, G, V, O]``,
+  shared pools ``[X, V, O]``), simulating an HBM / host-memory bit-flip;
+* **pointer corruption** — :meth:`flip_seg_idx` re-aims extension-3
+  ``seg_idx`` pointers at wrong (possibly out-of-range) pool rows;
+* **activation poisoning** — :meth:`poison` plants NaN/Inf in decode
+  activations or recurrent cache state;
+* **file garbling** — :meth:`garble_file` truncates or overwrites the
+  persistent autotune JSON (or any on-disk artifact) in place.
+
+Every injection is recorded in :attr:`FaultInjector.events` (a structured
+list the chaos suite asserts against) and logged.  Corruption methods are
+*functional*: they return a fresh corrupted array — JAX arrays are immutable
+and jitted executors close over table values, so the caller swaps the new
+array into its bundle and re-hoists the executor (the serving analogue of
+"the bytes under the kernel changed").
+"""
+
+from __future__ import annotations
+
+import logging
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+log = logging.getLogger("repro.faults")
+
+__all__ = ["FaultInjector"]
+
+
+class FaultInjector:
+    """Deterministic (seeded) fault schedule + corruption primitives."""
+
+    def __init__(self, fail_at: Sequence[int] = (), seed: int = 0):
+        self.fail_at = set(fail_at)
+        self.rng = np.random.default_rng(seed)
+        #: structured record of every injected fault, in injection order
+        self.events: List[Dict[str, Any]] = []
+
+    def _record(self, kind: str, **info) -> None:
+        self.events.append({"kind": kind, **info})
+        log.warning("injected %s: %s", kind, info)
+
+    # -- scheduled step faults (the original Supervisor contract) -----------
+
+    def maybe_fail(self, step: int) -> None:
+        """Raise at the scheduled steps, once each — replays are clean."""
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            self._record("step_fault", step=int(step))
+            raise RuntimeError(f"injected fault at step {step}")
+
+    # -- table / pointer corruption ------------------------------------------
+
+    def corrupt_table(self, tables, n_flips: int = 1):
+        """Flip ``n_flips`` random entries of a table array; returns the
+        corrupted copy (same shape/dtype) — swap it into the bundle and
+        re-hoist.  Each flipped value is guaranteed to differ from the
+        original (``x -> x + (1 + |x|)`` survives any float rounding)."""
+        import jax.numpy as jnp
+
+        a = np.asarray(tables).copy()
+        flat = a.reshape(-1)
+        n = min(max(n_flips, 1), flat.size)
+        idx = self.rng.choice(flat.size, size=n, replace=False)
+        for i in idx:
+            old = float(np.float32(flat[i]))
+            flat[i] = flat.dtype.type(old + (1.0 + abs(old)))
+        sites = [tuple(int(c) for c in np.unravel_index(int(i), a.shape))
+                 for i in idx]
+        self._record("table_corruption", shape=tuple(a.shape), sites=sites)
+        return jnp.asarray(a)
+
+    def flip_seg_idx(self, seg_idx, n_pool: Optional[int] = None,
+                     n_flips: int = 1):
+        """Re-aim ``n_flips`` extension-3 segment pointers; returns the
+        corrupted copy.  Pointers move to a different row of the ``n_pool``
+        -row pool (``X == 1`` pools get an out-of-range pointer — the only
+        way a single-row pool's pointers can be wrong)."""
+        import jax.numpy as jnp
+
+        a = np.asarray(seg_idx).copy()
+        X = int(n_pool) if n_pool is not None else int(a.max()) + 1
+        n = min(max(n_flips, 1), a.size)
+        idx = self.rng.choice(a.size, size=n, replace=False)
+        for i in idx:
+            old = int(a.reshape(-1)[i])
+            if X > 1:
+                new = (old + 1 + int(self.rng.integers(0, X - 1))) % X
+            else:
+                new = old + 1  # out of range: still a detectable wrong pointer
+            a.reshape(-1)[i] = new
+        self._record("seg_idx_flip", sites=[int(i) for i in idx], n_pool=X)
+        return jnp.asarray(a)
+
+    # -- activation / state poisoning ----------------------------------------
+
+    def poison(self, x, kind: str = "nan", n: int = 1):
+        """Plant ``n`` NaN (or Inf) values at random positions of a float
+        array (activations, logits, recurrent cache state); returns the
+        poisoned copy."""
+        import jax.numpy as jnp
+
+        a = np.asarray(x).copy()
+        val = np.nan if kind == "nan" else np.inf
+        flat = a.reshape(-1)
+        n = min(max(n, 1), flat.size)
+        idx = self.rng.choice(flat.size, size=n, replace=False)
+        flat[idx] = flat.dtype.type(val)
+        self._record("activation_poison", poison=kind,
+                     sites=[int(i) for i in idx], shape=tuple(a.shape))
+        return jnp.asarray(a)
+
+    # -- on-disk artifact garbling -------------------------------------------
+
+    def garble_file(self, path: str, mode: str = "truncate") -> None:
+        """Corrupt a file in place: ``"truncate"`` keeps the first half of
+        the bytes, ``"garbage"`` overwrites with non-JSON bytes, ``"empty"``
+        leaves zero bytes.  A missing file is recorded, not an error."""
+        if not os.path.exists(path):
+            self._record("file_garble", path=path, mode=mode, absent=True)
+            return
+        with open(path, "rb") as f:
+            data = f.read()
+        if mode == "truncate":
+            data = data[: max(len(data) // 2, 1)]
+        elif mode == "garbage":
+            data = b'{"tiles": tru\x00\xff not json'
+        elif mode == "empty":
+            data = b""
+        else:
+            raise ValueError(f"unknown garble mode {mode!r}")
+        with open(path, "wb") as f:
+            f.write(data)
+        self._record("file_garble", path=path, mode=mode, absent=False)

@@ -12,6 +12,9 @@ wires to real heartbeats:
   latest good checkpoint and replays from there, up to ``max_restarts``.
   Elastic: the restore callback receives the (possibly re-built) mesh so a
   shrunken device set resumes seamlessly (tests simulate exactly this).
+
+``FaultInjector`` grew into the full chaos harness and lives in
+``runtime.faults`` now; it is re-exported here for compatibility.
 """
 
 from __future__ import annotations
@@ -22,6 +25,8 @@ import time
 from typing import Callable, List, Optional, Sequence
 
 import numpy as np
+
+from .faults import FaultInjector
 
 log = logging.getLogger("repro.supervisor")
 
@@ -59,18 +64,6 @@ def detect_stragglers(host_step_times: Sequence[float],
     t = np.asarray(host_step_times, np.float64)
     med = np.median(t)
     return [int(i) for i in np.nonzero(t > threshold * med)[0]]
-
-
-class FaultInjector:
-    """Deterministic fault schedule for tests: raise at given steps (once)."""
-
-    def __init__(self, fail_at: Sequence[int] = ()):
-        self.fail_at = set(fail_at)
-
-    def maybe_fail(self, step: int):
-        if step in self.fail_at:
-            self.fail_at.discard(step)
-            raise RuntimeError(f"injected fault at step {step}")
 
 
 @dataclasses.dataclass

@@ -284,3 +284,36 @@ def test_bounded_tunes_select_no_slower_tiles_on_recorded_cases(tune_cache):
     unbounded = atn.gemv_candidates(8, T.shape[0], T.shape[1], 256, 4,
                                     scratch_budget=float("inf"))
     assert winner in unbounded
+
+
+def test_corrupt_cache_warns_quarantines_and_recovers(tune_cache, caplog):
+    """A truncated/garbled cache file must never crash or silently reset:
+    the load warns (naming the path and the parse error), preserves the
+    original bytes at ``<path>.corrupt``, and the cache keeps working."""
+    import logging
+
+    from repro.runtime.faults import FaultInjector
+
+    x, T, spec, s, group = _problem()
+    ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
+    with open(tune_cache, "rb") as f:
+        garbled = f.read()[: 10]  # truncated mid-JSON
+
+    FaultInjector().garble_file(tune_cache, "truncate")
+    with open(tune_cache, "rb") as f:
+        garbled = f.read()
+    with caplog.at_level(logging.WARNING, logger="repro.autotune"):
+        cache = atn.reset_cache(tune_cache)
+    msgs = [r.getMessage() for r in caplog.records
+            if r.name == "repro.autotune"]
+    assert any(tune_cache in m and "corrupt" in m for m in msgs), msgs
+    # original bytes preserved for post-mortem, live path starts empty
+    with open(tune_cache + ".corrupt", "rb") as f:
+        assert f.read() == garbled
+    assert not os.path.exists(tune_cache)
+
+    # the cache still records and persists after recovery
+    atn.TIMING_RUNS = 0
+    ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
+    assert atn.TIMING_RUNS > 0  # entry was lost with the corrupt file
+    assert cache.lookup(next(iter(json.load(open(tune_cache))))) is not None

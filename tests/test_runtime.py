@@ -22,6 +22,14 @@ def test_detect_stragglers():
     assert detect_stragglers([0.1] * 8) == []
 
 
+def test_detect_stragglers_degenerate_inputs():
+    # all hosts equal: nobody exceeds threshold x median
+    assert detect_stragglers([0.25, 0.25, 0.25, 0.25]) == []
+    # a single host is its own median — it can never be its own straggler
+    assert detect_stragglers([0.25]) == []
+    assert detect_stragglers([1e9]) == []
+
+
 def test_supervisor_restarts_and_replays():
     """Injected fault at step 25 -> restore at 20 -> final state identical to
     an uninterrupted run (determinism through restart)."""
@@ -58,12 +66,31 @@ def test_supervisor_restarts_and_replays():
 
 
 def test_supervisor_gives_up_after_max_restarts():
+    calls = []
+
     def step_fn(state, step):
+        calls.append(step)
         raise RuntimeError("always fails")
 
     sup = Supervisor(step_fn, lambda *a: None, lambda: (0, 0),
                      ckpt_every=10, max_restarts=2)
-    with pytest.raises(RuntimeError):
+    with pytest.raises(RuntimeError, match="always fails"):
+        sup.run(0, 10)
+    # the budget bounds the attempts: initial try + max_restarts replays
+    assert len(calls) == 3
+
+
+def test_supervisor_no_checkpoint_to_restore():
+    """A fault before the first checkpoint exists must surface as a restore
+    failure, not an infinite replay of nothing."""
+    def step_fn(state, step):
+        if step == 3:
+            raise ValueError("fault before any checkpoint")
+        return state + step
+
+    sup = Supervisor(step_fn, lambda *a: None, lambda: None,
+                     ckpt_every=10, max_restarts=3)
+    with pytest.raises(RuntimeError, match="no checkpoint to restore"):
         sup.run(0, 10)
 
 
