@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Static analysis gate: lint + VMEM verifier + artifact schemas
+# (see docs/static_analysis.md).  No kernel execution; seconds, not minutes.
+# Usage: scripts/lint.sh [extra repro.analysis args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m repro.analysis "$@"

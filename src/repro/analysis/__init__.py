@@ -1,0 +1,178 @@
+"""Static contract checker for the PCILT kernel zoo.
+
+The paper's premise — tables resident in fast on-chip memory — makes two
+things load-bearing that ordinary tests only exercise dynamically, on
+whichever shapes they happen to run: the analytic VMEM scratch bound
+(``kernels.autotune._fit_scratch_gb`` / ``SCRATCH_BUDGET``) and the kernel
+shape/dtype contracts.  This package proves those invariants *statically*,
+for every candidate configuration — never executing a kernel — via three
+passes (see ``docs/static_analysis.md`` for the rule catalogue):
+
+* :mod:`repro.analysis.lint` — AST lint over ``src/repro``: f32-accumulation
+  inside Pallas kernel bodies, no bare ``assert`` in library code, no host
+  calls / Python side effects in kernel bodies or BlockSpec index maps, and
+  autotune-key completeness at every ``ops.py`` dispatch site.
+* :mod:`repro.analysis.vmem` — static VMEM/grid verifier: enumerates each
+  candidate generator over a recorded shape sweep and, by abstract tracing
+  only (``jax.make_jaxpr`` — the kernel is *traced*, never run), proves the
+  per-grid-step scratch respects ``SCRATCH_BUDGET``, the scratch model
+  matches the real kernel body, and every BlockSpec ``index_map`` stays
+  in-bounds and tiles its operand without gaps over the full grid.
+* :mod:`repro.analysis.schema` — versioned schemas for the autotune cache
+  JSON (``us`` null-or-float, shape-key grammar) and the checked-in
+  ``BENCH_*.json`` artifacts (including ``skipped`` rows).
+
+CLI: ``python -m repro.analysis`` — ``file:line: RULE severity: message``
+findings, exit code 1 when any un-baselined error remains (the CI gate),
+``--write-baseline`` to accept the current findings as exceptions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Iterable, List, Optional
+
+__all__ = [
+    "Finding",
+    "Baseline",
+    "repo_root",
+    "rel",
+    "run_all",
+]
+
+#: bumped when finding fingerprints or pass semantics change incompatibly.
+ANALYSIS_VERSION = 1
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source (or artifact) location.
+
+    ``symbol`` is the enclosing function / kernel / artifact key — it anchors
+    the baseline fingerprint so accepted exceptions survive unrelated line
+    drift in the same file.
+    """
+
+    rule: str            # e.g. "LINT001", "VMEM002", "SCHEMA001"
+    severity: str        # "error" | "warning"
+    path: str            # repo-relative where possible
+    line: int            # 1-based; 0 for whole-file/artifact findings
+    message: str
+    symbol: str = ""     # enclosing def / kernel name / JSON key
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(
+                f"finding severity must be one of {SEVERITIES}, "
+                f"got {self.severity!r} for rule {self.rule}")
+
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by the baseline: rule + file +
+        enclosing symbol + the first message clause (shape lists and config
+        reprs after the first ';' are allowed to drift)."""
+        head = self.message.split(";")[0].strip()
+        return f"{self.rule}|{self.path}|{self.symbol}|{head}"
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{loc}: {self.rule} {self.severity}: {self.message}{sym}"
+
+
+class Baseline:
+    """Accepted-exception list: a JSON file of finding fingerprints.
+
+    A finding whose fingerprint is listed is reported as baselined and does
+    not affect the exit code.  The file records the analysis version so a
+    fingerprint-scheme change invalidates stale baselines loudly rather than
+    silently accepting everything.
+    """
+
+    def __init__(self, fingerprints: Iterable[str] = (), path: str = ""):
+        self.path = path
+        self.fingerprints = set(fingerprints)
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.exists(path):
+            return cls(path=path)
+        with open(path) as f:
+            data = json.load(f)
+        if not isinstance(data, dict) or "accepted" not in data:
+            raise ValueError(
+                f"baseline {path} is not a {{'version', 'accepted': [...]}} "
+                f"object")
+        ver = data.get("version")
+        if ver != ANALYSIS_VERSION:
+            raise ValueError(
+                f"baseline {path} was written for analysis version {ver}, "
+                f"this is version {ANALYSIS_VERSION}; regenerate it with "
+                f"--write-baseline")
+        return cls(data["accepted"], path=path)
+
+    @classmethod
+    def write(cls, path: str, findings: Iterable[Finding]) -> "Baseline":
+        fps = sorted({f.fingerprint() for f in findings})
+        with open(path, "w") as f:
+            json.dump({"version": ANALYSIS_VERSION, "accepted": fps},
+                      f, indent=1, sort_keys=True)
+            f.write("\n")
+        return cls(fps, path=path)
+
+    def accepts(self, finding: Finding) -> bool:
+        return finding.fingerprint() in self.fingerprints
+
+
+def repo_root() -> str:
+    """The repository root, resolved from this package's location
+    (``<root>/src/repro/analysis`` -> ``<root>``)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def rel(path: str, root: Optional[str] = None) -> str:
+    root = root or repo_root()
+    try:
+        r = os.path.relpath(os.path.abspath(path), root)
+    except ValueError:  # different drive (windows); keep absolute
+        return path
+    return path if r.startswith("..") else r
+
+
+def run_all(
+    root: Optional[str] = None,
+    passes: Iterable[str] = ("lint", "vmem", "schema"),
+    sweep: str = "quick",
+    scratch_budget: Optional[float] = None,
+) -> List[Finding]:
+    """Run the requested passes over the repository; returns all findings.
+
+    ``sweep`` selects the VMEM verifier's shape sweep (``quick`` | ``full``);
+    ``scratch_budget`` overrides ``autotune.SCRATCH_BUDGET`` for the
+    soundness check (tests shrink it to prove the verifier rejects).
+    """
+    root = root or repo_root()
+    passes = set(passes)
+    unknown = passes - {"lint", "vmem", "schema"}
+    if unknown:
+        raise ValueError(f"unknown analysis passes: {sorted(unknown)} "
+                         f"(valid: lint, vmem, schema)")
+    findings: List[Finding] = []
+    if "lint" in passes:
+        from repro.analysis import lint
+        findings.extend(lint.lint_tree(os.path.join(root, "src", "repro"),
+                                       root=root))
+    if "vmem" in passes:
+        from repro.analysis import vmem
+        findings.extend(vmem.verify_all(sweep=sweep,
+                                        scratch_budget=scratch_budget))
+    if "schema" in passes:
+        from repro.analysis import schema
+        findings.extend(schema.validate_repo_artifacts(root))
+    order = {"error": 0, "warning": 1}
+    findings.sort(key=lambda f: (order[f.severity], f.path, f.line, f.rule))
+    return findings

@@ -1,0 +1,92 @@
+"""CLI for the PCILT static contract checker.
+
+    python -m repro.analysis                   # all passes, exit 1 on errors
+    python -m repro.analysis --passes lint     # just the AST lint
+    python -m repro.analysis --sweep full      # exhaustive VMEM shape sweep
+    python -m repro.analysis --write-baseline  # accept current findings
+
+Findings print as ``file:line: RULE severity: message [symbol]``.  The exit
+code is 1 when any *error* finding is not in the baseline file
+(``<root>/.analysis-baseline.json`` by default) — warnings never gate.  CI
+runs this via ``scripts/lint.sh``; the whole run traces kernels abstractly
+but never executes one.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from repro.analysis import Baseline, Finding, repo_root, run_all
+
+DEFAULT_BASELINE = ".analysis-baseline.json"
+
+
+def main(argv: List[str] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static verification of PCILT kernel invariants, VMEM "
+                    "budgets, and autotune/bench artifact schemas.")
+    p.add_argument("--passes", default="lint,vmem,schema",
+                   help="comma-separated subset of: lint, vmem, schema")
+    p.add_argument("--sweep", default="quick", choices=("quick", "full"),
+                   help="VMEM verifier shape sweep (default: quick)")
+    p.add_argument("--root", default=None,
+                   help="repository root (default: derived from the package "
+                        "location)")
+    p.add_argument("--baseline", default=None,
+                   help=f"baseline file of accepted finding fingerprints "
+                        f"(default: <root>/{DEFAULT_BASELINE})")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write the current findings to the baseline file "
+                        "and exit 0")
+    p.add_argument("--scratch-budget", type=float, default=None,
+                   help="override autotune.SCRATCH_BUDGET bytes for the "
+                        "VMEM pass (soundness experiments)")
+    args = p.parse_args(argv)
+
+    root = os.path.abspath(args.root) if args.root else repo_root()
+    passes = tuple(s.strip() for s in args.passes.split(",") if s.strip())
+    baseline_path = args.baseline or os.path.join(root, DEFAULT_BASELINE)
+
+    try:
+        findings = run_all(root=root, passes=passes, sweep=args.sweep,
+                           scratch_budget=args.scratch_budget)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        Baseline.write(baseline_path, findings)
+        print(f"wrote {len(findings)} accepted fingerprint(s) to "
+              f"{baseline_path}")
+        return 0
+
+    try:
+        baseline = Baseline.load(baseline_path)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    gating: List[Finding] = []
+    n_base = n_warn = 0
+    for f in findings:
+        suffix = ""
+        if baseline.accepts(f):
+            n_base += 1
+            suffix = "  (baselined)"
+        elif f.severity == "warning":
+            n_warn += 1
+        else:
+            gating.append(f)
+        print(f.render() + suffix)
+    print(f"repro.analysis: {len(findings)} finding(s) — {len(gating)} "
+          f"error(s), {n_warn} warning(s), {n_base} baselined "
+          f"[passes: {','.join(passes)}; sweep: {args.sweep}]")
+    return 1 if gating else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,551 @@
+"""AST kernel lint for ``src/repro``.
+
+Four rules, each encoding a convention the kernel zoo depends on but that
+only dynamic tests exercised before this pass existed:
+
+* **LINT001 bare-assert** — no bare ``assert`` in library code.  Typed
+  ``ValueError`` naming the offending shapes is the repo convention (PR 5):
+  asserts vanish under ``python -O`` and their bare-tuple messages tell a
+  caller nothing.
+* **LINT002 kernel-f32-accum** — every ``jnp.dot`` / ``lax.dot_general`` /
+  matmul reachable from a Pallas kernel body must pass
+  ``preferred_element_type=jnp.float32``.  bf16 tables are a supported
+  storage dtype; a contraction that accumulates in the table dtype rounds
+  the adder tree through bf16 on every grid step and breaks the
+  parity-with-oracle contract silently.
+* **LINT003 kernel-host-call** — no Python side effects or host calls
+  (``print``/``open``/``os.*``/``np.*``/...) inside kernel bodies or
+  BlockSpec ``index_map``s.  These either crash at trace time in ways that
+  depend on which shapes compile first, or — worse — get constant-folded
+  into the kernel and silently diverge from per-step semantics.
+* **LINT004 autotune-key-completeness** — every ``ops.py`` dispatch site
+  must key the ``TileCache`` on every shape symbol its candidate generator
+  consumes.  A generator argument that does not reach the shape key means
+  two different problems share one cache entry and dispatch each other's
+  tiles.  Cross-checked from both directions: the call site's argument
+  expressions are root-expanded through local assignments and compared
+  against the key's expressions, and the generator's *signature* (via
+  ``inspect.signature`` on ``kernels.autotune``) pins the parameter names so
+  a generator growing a new shape parameter fires here until the key learns
+  it.
+
+Kernel bodies are discovered, not declared: any function passed (directly or
+via ``functools.partial``) as the kernel argument of a ``pl.pallas_call`` is
+a root, and the reachable set is closed transitively over same-package
+helper calls (``_quantize`` / ``_strip_offsets`` / ... — including helpers
+imported from sibling kernel modules).  Index maps are the lambdas (or
+``index_map=`` arguments) of ``pl.BlockSpec`` calls.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import Finding, rel
+
+__all__ = ["RULES", "lint_tree", "lint_files"]
+
+RULES: Dict[str, str] = {
+    "LINT001": "bare assert in library code (use a typed ValueError naming "
+               "the offending shapes)",
+    "LINT002": "contraction inside a Pallas kernel body without "
+               "preferred_element_type=jnp.float32",
+    "LINT003": "Python side effect / host call inside a Pallas kernel body "
+               "or BlockSpec index_map",
+    "LINT004": "autotune shape key misses a shape symbol the candidate "
+               "generator consumes",
+}
+
+#: names whose *call* in a kernel body is a host-side effect.
+_HOST_CALLS = {
+    "print", "open", "input", "breakpoint", "exec", "eval", "compile",
+    "setattr", "delattr", "globals", "locals", "vars", "id", "hash",
+}
+#: module roots whose attribute calls inside a kernel body run on the host.
+_HOST_MODULES = {
+    "os", "sys", "io", "json", "time", "logging", "random", "np", "numpy",
+    "subprocess", "pathlib", "pickle", "socket", "threading", "warnings",
+}
+#: candidate-generator parameters that deliberately do not enter the shape
+#: key: the scratch budget is a global constant, and dtype/itemsize enter
+#: the key through its dedicated ``dtype=`` field.
+_KEY_EXEMPT_PARAMS = {"scratch_budget", "itemsize"}
+
+
+def _dot(node: ast.AST) -> str:
+    """Render a Name/Attribute chain as 'a.b.c' ('' when not a pure chain)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _names(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+class _Module:
+    """One parsed source file plus the lookup tables the rules need."""
+
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.tree = tree
+        #: top-level (and class-level) function defs by name
+        self.functions: Dict[str, ast.FunctionDef] = {}
+        #: from-import links: local name -> (module, remote name)
+        self.imports: Dict[str, Tuple[str, str]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.setdefault(node.name, node)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for alias in node.names:
+                    self.imports[alias.asname or alias.name] = (
+                        node.module, alias.name)
+
+
+def _parse(paths: Iterable[str]) -> Dict[str, _Module]:
+    mods: Dict[str, _Module] = {}
+    for path in paths:
+        with open(path) as f:
+            src = f.read()
+        mods[path] = _Module(path, ast.parse(src, filename=path))
+    return mods
+
+
+# ----------------------------------------------------------------------------
+# Kernel-body discovery: pallas_call roots + transitive helper closure
+# ----------------------------------------------------------------------------
+
+
+def _kernel_arg_name(call: ast.Call) -> Optional[str]:
+    """The kernel function's name in ``pl.pallas_call(<kernel>, ...)`` —
+    either a bare name or the first argument of a ``functools.partial``."""
+    if not call.args:
+        return None
+    arg = call.args[0]
+    if isinstance(arg, ast.Call) and _dot(arg.func) in (
+            "functools.partial", "partial") and arg.args:
+        arg = arg.args[0]
+    if isinstance(arg, ast.Name):
+        return arg.id
+    return None
+
+
+def _kernel_roots(mod: _Module) -> Set[str]:
+    roots: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and _dot(node.func).endswith(
+                "pallas_call"):
+            name = _kernel_arg_name(node)
+            if name:
+                roots.add(name)
+    return roots
+
+
+def _reachable_kernel_fns(
+    mods: Dict[str, _Module],
+) -> Dict[str, List[Tuple[_Module, ast.FunctionDef]]]:
+    """Close the kernel roots over same-package helper calls.
+
+    Returns ``{qualified_name: [(module, fndef)]}`` for every function whose
+    body executes inside a Pallas kernel.  Imported helpers are followed
+    through ``from .x import y`` links by matching the *source* module's
+    basename, so ``pcilt_shared``'s use of ``_strip_offsets`` resolves back
+    into ``pcilt_fused.py``.
+    """
+    by_basename: Dict[str, List[_Module]] = {}
+    for mod in mods.values():
+        base = os.path.splitext(os.path.basename(mod.path))[0]
+        by_basename.setdefault(base, []).append(mod)
+
+    seen: Dict[str, List[Tuple[_Module, ast.FunctionDef]]] = {}
+    work: List[Tuple[_Module, str]] = []
+    for mod in mods.values():
+        for name in _kernel_roots(mod):
+            work.append((mod, name))
+
+    def resolve(mod: _Module, name: str
+                ) -> Optional[Tuple[_Module, ast.FunctionDef]]:
+        if name in mod.functions:
+            return mod, mod.functions[name]
+        if name in mod.imports:
+            src_mod, remote = mod.imports[name]
+            base = src_mod.rsplit(".", 1)[-1]
+            for cand in by_basename.get(base, ()):
+                if remote in cand.functions:
+                    return cand, cand.functions[remote]
+        return None
+
+    while work:
+        mod, name = work.pop()
+        hit = resolve(mod, name)
+        if hit is None:
+            continue
+        fmod, fdef = hit
+        qual = f"{fmod.path}::{fdef.name}"
+        if qual in seen:
+            continue
+        seen[qual] = [(fmod, fdef)]
+        for node in ast.walk(fdef):
+            if isinstance(node, ast.Call):
+                callee = _dot(node.func)
+                if callee and "." not in callee:
+                    work.append((fmod, callee))
+    return seen
+
+
+def _index_map_nodes(mod: _Module) -> List[ast.AST]:
+    """The ``index_map`` functions of every ``pl.BlockSpec`` in the module:
+    the second positional argument, or the ``index_map=`` keyword."""
+    out: List[ast.AST] = []
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and _dot(node.func).endswith("BlockSpec")):
+            continue
+        if len(node.args) >= 2:
+            out.append(node.args[1])
+        for kw in node.keywords:
+            if kw.arg == "index_map":
+                out.append(kw.value)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# LINT001 — bare assert
+# ----------------------------------------------------------------------------
+
+
+def _check_bare_assert(mod: _Module, root: str) -> List[Finding]:
+    out = []
+    enclosing: Dict[int, str] = {}
+    for fn in ast.walk(mod.tree):
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in ast.walk(fn):
+                enclosing.setdefault(id(sub), fn.name)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assert):
+            cond = ast.unparse(node.test)
+            out.append(Finding(
+                "LINT001", "error", rel(mod.path, root), node.lineno,
+                f"bare assert ({cond!r}) in library code; raise a typed "
+                f"ValueError naming the offending shapes instead",
+                symbol=enclosing.get(id(node), "<module>")))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# LINT002 — f32 accumulation in kernel bodies
+# ----------------------------------------------------------------------------
+
+_DOT_CALLEES = ("jnp.dot", "jnp.matmul", "lax.dot_general",
+                "jax.lax.dot_general", "jnp.einsum", "jax.numpy.dot",
+                "jax.numpy.matmul", "jax.numpy.einsum")
+
+
+def _is_f32_pref(kw_value: ast.AST) -> bool:
+    return _dot(kw_value) in ("jnp.float32", "jax.numpy.float32",
+                              "np.float32", "numpy.float32")
+
+
+def _check_f32_accum(mod: _Module, fdef: ast.FunctionDef,
+                     root: str) -> List[Finding]:
+    out = []
+    for node in ast.walk(fdef):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+            out.append(Finding(
+                "LINT002", "error", rel(mod.path, root), node.lineno,
+                "matmul operator '@' in a Pallas kernel body cannot request "
+                "f32 accumulation; use jnp.dot(..., "
+                "preferred_element_type=jnp.float32)",
+                symbol=fdef.name))
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _dot(node.func)
+        if callee not in _DOT_CALLEES:
+            continue
+        pref = [kw for kw in node.keywords
+                if kw.arg == "preferred_element_type"]
+        if not pref:
+            out.append(Finding(
+                "LINT002", "error", rel(mod.path, root), node.lineno,
+                f"{callee} in a Pallas kernel body without "
+                f"preferred_element_type=jnp.float32; bf16 tables would "
+                f"round the adder tree through bf16 every grid step",
+                symbol=fdef.name))
+        elif not _is_f32_pref(pref[0].value):
+            out.append(Finding(
+                "LINT002", "error", rel(mod.path, root), node.lineno,
+                f"{callee} in a Pallas kernel body accumulates in "
+                f"{ast.unparse(pref[0].value)}, not jnp.float32",
+                symbol=fdef.name))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# LINT003 — host calls / side effects in kernel bodies and index maps
+# ----------------------------------------------------------------------------
+
+
+def _check_host_calls(mod: _Module, body: ast.AST, symbol: str,
+                      root: str, where: str) -> List[Finding]:
+    out = []
+    for node in ast.walk(body):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _dot(node.func)
+        if not callee:
+            continue
+        head = callee.split(".", 1)[0]
+        if callee in _HOST_CALLS or head in _HOST_MODULES:
+            out.append(Finding(
+                "LINT003", "error", rel(mod.path, root), node.lineno,
+                f"host call {callee!r} inside a {where}; kernel bodies and "
+                f"index maps must be pure traced functions",
+                symbol=symbol))
+        elif isinstance(node.func, ast.Name) and node.func.id == "getattr":
+            out.append(Finding(
+                "LINT003", "error", rel(mod.path, root), node.lineno,
+                f"dynamic getattr inside a {where}", symbol=symbol))
+    for node in ast.walk(body):
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            out.append(Finding(
+                "LINT003", "error", rel(mod.path, root), node.lineno,
+                f"global/nonlocal mutation inside a {where}", symbol=symbol))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# LINT004 — autotune-key completeness at ops dispatch sites
+# ----------------------------------------------------------------------------
+
+
+class _RootExpander:
+    """Expand a variable of one function body to its *root atoms*.
+
+    Atoms are the irreducible shape sources of a dispatch function:
+
+    * ``('dim', base, i)`` — ``B = x.shape[0]`` or ``B, n = x.shape``;
+    * ``('name', n)`` — a function parameter or otherwise opaque name.
+
+    Arithmetic assignments expand transitively (``Wo = (Wp - kw) // s + 1``
+    roots to ``{('dim', x, 2), ('name', kw), ('name', s)}``); tuple-returns
+    from helper calls (``xp, _ = _pad_axis(x, ...)``) expand to the call
+    arguments' roots.  This is what lets the rule accept a key that pins
+    ``W``/``k``/``s`` when the generator consumes the derived ``Wo`` — and
+    still fire when a generator argument's roots are wholly absent from the
+    key.
+    """
+
+    def __init__(self, fdef: ast.FunctionDef):
+        self.params = {a.arg for a in (fdef.args.posonlyargs + fdef.args.args
+                                       + fdef.args.kwonlyargs)}
+        #: name -> defining RHS expression (last one wins, in source order —
+        #: good enough for the straight-line dispatch bodies this rule
+        #: targets)
+        self.defs: Dict[str, ast.AST] = {}
+        #: name -> ('dim', base_name, index) for shape unpacks
+        self.dims: Dict[str, Tuple[str, str, int]] = {}
+        #: base name -> set of dim names unpacked from it
+        self.shape_dims: Dict[str, Set[str]] = {}
+        for node in ast.walk(fdef):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            tgt, val = node.targets[0], node.value
+            if isinstance(tgt, ast.Name):
+                self._record(tgt.id, val, index=None)
+            elif isinstance(tgt, ast.Tuple) and all(
+                    isinstance(e, ast.Name) for e in tgt.elts):
+                if (isinstance(val, ast.Attribute) and val.attr == "shape"):
+                    base = _dot(val.value)
+                    for i, e in enumerate(tgt.elts):
+                        self.dims[e.id] = ("dim", base, i)
+                        self.shape_dims.setdefault(base, set()).add(e.id)
+                elif isinstance(val, ast.Tuple) and len(val.elts) == len(
+                        tgt.elts):
+                    for e, v in zip(tgt.elts, val.elts):
+                        self._record(e.id, v, index=None)
+                else:  # tuple-from-call: every target roots to the call args
+                    for e in tgt.elts:
+                        self.defs[e.id] = val
+
+    def _record(self, name: str, val: ast.AST, index) -> None:
+        # `B = x.shape[0]` / `O = tables.shape[-1]` -> dim atom
+        if (isinstance(val, ast.Subscript)
+                and isinstance(val.value, ast.Attribute)
+                and val.value.attr == "shape"):
+            base = _dot(val.value.value)
+            idx = val.slice
+            if isinstance(idx, ast.Constant) and isinstance(idx.value, int):
+                self.dims[name] = ("dim", base, idx.value)
+                self.shape_dims.setdefault(base, set()).add(name)
+                return
+            if (isinstance(idx, ast.UnaryOp) and isinstance(idx.op, ast.USub)
+                    and isinstance(idx.operand, ast.Constant)):
+                self.dims[name] = ("dim", base, -idx.operand.value)
+                self.shape_dims.setdefault(base, set()).add(name)
+                return
+        self.defs[name] = val
+
+    def roots_of_expr(self, expr: ast.AST, _depth: int = 0) -> Set[tuple]:
+        out: Set[tuple] = set()
+        for name in _names(expr):
+            out |= self.roots_of_name(name, _depth)
+        return out
+
+    def roots_of_name(self, name: str, _depth: int = 0) -> Set[tuple]:
+        if _depth > 12:  # cyclic defs (x = f(x)): stop at the name
+            return {("name", name)}
+        if name in self.dims:
+            return {self.dims[name]}
+        if name in self.defs:
+            return self.roots_of_expr(self.defs[name], _depth + 1)
+        return {("name", name)}
+
+
+def _call_of(node: ast.AST, suffixes: Tuple[str, ...]) -> Optional[ast.Call]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            callee = _dot(sub.func)
+            if any(callee.endswith(s) for s in suffixes):
+                return sub
+    return None
+
+
+def _candidates_call(fdef: ast.FunctionDef) -> Optional[ast.Call]:
+    return _call_of(fdef, ("_candidates",))
+
+
+def _shape_key_call(fdef: ast.FunctionDef) -> Optional[ast.Call]:
+    return _call_of(fdef, ("shape_key",))
+
+
+def _check_autotune_keys(mod: _Module, root: str) -> List[Finding]:
+    """Every dispatch function pairing a ``shape_key`` with a
+    ``*_candidates`` call must key every shape symbol the generator
+    consumes."""
+    try:
+        import inspect
+
+        from repro.kernels import autotune as _atn
+    except Exception:  # pragma: no cover - analysis must not hard-require jax
+        _atn, inspect = None, None
+    out: List[Finding] = []
+    for fdef in mod.functions.values():
+        key_call = _shape_key_call(fdef)
+        cand_call = _candidates_call(fdef)
+        if key_call is None or cand_call is None:
+            continue
+        gen_name = _dot(cand_call.func).rsplit(".", 1)[-1]
+        exp = _RootExpander(fdef)
+
+        # key side: every dim kwarg name, plus the root atoms of every kwarg
+        # value expression (dtype= included — it covers itemsize arguments).
+        key_dim_names = {kw.arg for kw in key_call.keywords if kw.arg}
+        key_roots: Set[tuple] = set()
+        for kw in key_call.keywords:
+            key_roots |= exp.roots_of_expr(kw.value)
+
+        def covered(atom: tuple) -> bool:
+            if atom in key_roots:
+                return True
+            if atom[0] == "name":
+                # a whole-array parameter is covered when every dim unpacked
+                # from its .shape is itself keyed (directly or via derived
+                # key expressions like To = x.shape[1] - k + 1)
+                dims = exp.shape_dims.get(atom[1])
+                if dims:
+                    return all(
+                        all(covered(a) for a in exp.roots_of_name(d))
+                        or ("dim", atom[1], i) in key_roots
+                        for i, d in enumerate(sorted(dims)))
+            return False
+
+        # generator side: bind call-site args to the generator's signature
+        # so violations name the parameter, not an argument position.
+        params: List[str] = []
+        if _atn is not None and hasattr(_atn, gen_name):
+            sig = inspect.signature(getattr(_atn, gen_name))
+            params = list(sig.parameters)
+        bound: List[Tuple[str, ast.AST]] = []
+        for i, arg in enumerate(cand_call.args):
+            bound.append((params[i] if i < len(params) else f"arg{i}", arg))
+        for kw in cand_call.keywords:
+            if kw.arg:
+                if params and kw.arg not in params:
+                    out.append(Finding(
+                        "LINT004", "error", rel(mod.path, root),
+                        cand_call.lineno,
+                        f"{gen_name} has no parameter {kw.arg!r} "
+                        f"(signature introspection)", symbol=fdef.name))
+                    continue
+                bound.append((kw.arg, kw.value))
+
+        for pname, arg in bound:
+            if pname in _KEY_EXEMPT_PARAMS:
+                continue
+            # itemsize-style args (x.dtype.itemsize) are covered by dtype=
+            if isinstance(arg, ast.Attribute) and arg.attr == "itemsize":
+                continue
+            # parameter name matching a key dim is the common, legible case
+            if pname in key_dim_names:
+                continue
+            if isinstance(arg, ast.Name) and arg.id in key_dim_names:
+                continue
+            missing = sorted(
+                str(a) for a in exp.roots_of_expr(arg) if not covered(a))
+            if missing:
+                out.append(Finding(
+                    "LINT004", "error", rel(mod.path, root), cand_call.lineno,
+                    f"candidate generator {gen_name} consumes parameter "
+                    f"{pname!r} (arg {ast.unparse(arg)!r}) whose shape roots "
+                    f"never reach the autotune shape key; two problems "
+                    f"differing only in it would share a cache entry; "
+                    f"missing roots: {missing}",
+                    symbol=fdef.name))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Driver
+# ----------------------------------------------------------------------------
+
+
+def lint_files(paths: Iterable[str], root: Optional[str] = None
+               ) -> List[Finding]:
+    """Lint an explicit set of python files (tests use this on fixture
+    snippets); returns all findings."""
+    mods = _parse(list(paths))
+    out: List[Finding] = []
+    kernel_fns = _reachable_kernel_fns(mods)
+    kernel_by_mod: Dict[str, List[ast.FunctionDef]] = {}
+    for entries in kernel_fns.values():
+        for fmod, fdef in entries:
+            kernel_by_mod.setdefault(fmod.path, []).append(fdef)
+    for mod in mods.values():
+        out.extend(_check_bare_assert(mod, root))
+        for fdef in kernel_by_mod.get(mod.path, ()):
+            out.extend(_check_f32_accum(mod, fdef, root))
+            out.extend(_check_host_calls(mod, fdef, fdef.name, root,
+                                         "Pallas kernel body"))
+        for im in _index_map_nodes(mod):
+            out.extend(_check_host_calls(mod, im, "<index_map>", root,
+                                         "BlockSpec index_map"))
+        out.extend(_check_autotune_keys(mod, root))
+    return out
+
+
+def lint_tree(src_root: str, root: Optional[str] = None) -> List[Finding]:
+    """Lint every ``.py`` file under ``src_root`` (the library tree — tests
+    and benchmarks have different conventions and are not scanned)."""
+    paths = []
+    for dirpath, _dirnames, filenames in os.walk(src_root):
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                paths.append(os.path.join(dirpath, fn))
+    return lint_files(paths, root=root)

@@ -1,0 +1,309 @@
+"""Versioned schemas for the repo's checked-in JSON artifacts.
+
+Two artifact families drift silently if nothing pins them:
+
+* the **autotune cache** (``kernels/autotune.py`` ``TileCache``): a flat map
+  of shape keys to ``{"tiles", "us", "candidates"}`` entries.  The key
+  grammar (``kernel|dim=val,...,dtype=...|backend=...``) is load-bearing —
+  ``ops.py`` dispatch, the sharded no-collision policy, and the VMEM
+  verifier's sweep ingestion all parse it — and ``us`` is strict JSON
+  (``null`` or a finite float, never a bare ``NaN`` token).
+* the **benchmark payloads** (``BENCH_pr*.json``, written by
+  ``benchmarks/run.py``): top-level metadata plus ``rows`` of
+  ``{"name", "us_per_call", "derived"}`` — including ``skipped`` rows,
+  which must carry both the row-level ``"skipped"`` reason and an entry in
+  the top-level ``skipped`` map (the "never silently under-report" contract
+  from PR 4).
+
+Validation is hand-rolled (no jsonschema dependency — the container may not
+ship it) and versioned: ``BENCH_SCHEMA_VERSION`` / ``CACHE_SCHEMA_VERSION``
+gate additive evolution; loosening a rule requires bumping the version and
+the rule catalogue in ``docs/static_analysis.md``.
+
+Rules: ``SCHEMA001`` (BENCH file violation), ``SCHEMA002`` (autotune cache
+violation).  Both are errors — CI fails when a checked-in artifact drifts.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import Finding, rel
+
+__all__ = [
+    "BENCH_SCHEMA_VERSION",
+    "CACHE_SCHEMA_VERSION",
+    "KNOWN_KERNELS",
+    "parse_shape_key",
+    "validate_bench",
+    "validate_tune_cache",
+    "validate_repo_artifacts",
+]
+
+BENCH_SCHEMA_VERSION = 1
+CACHE_SCHEMA_VERSION = 1
+
+#: kernel families that may appear in a shape key, with the dims each one is
+#: required to carry (the autotune module's documented key grammar).  A key
+#: may carry *extra* dims (additive evolution is allowed without a version
+#: bump); missing a required dim is a violation.
+KNOWN_KERNELS: Dict[str, Tuple[str, ...]] = {
+    "gemv_host": ("B", "G", "V", "O"),
+    "conv2d_host": ("B", "Ho", "Wo", "G", "V", "O"),
+    "fused_gemv": ("B", "G", "V", "O", "g", "bits"),
+    "fused_gemv_stacked": ("B", "L", "G", "V", "O", "g", "bits"),
+    "fused_conv2d": ("B", "Ho", "W", "C", "k", "s", "G", "V", "O", "g",
+                     "bits"),
+    "fused_dwconv1d": ("B", "T", "C", "V", "k", "bits"),
+    "shared_gemv": ("B", "G", "V", "O", "X", "g", "bits"),
+    "shared_conv2d": ("B", "Ho", "W", "C", "k", "s", "G", "V", "O", "X",
+                      "g", "bits"),
+}
+
+_KEY_RE = re.compile(
+    r"^(?P<kernel>[a-z0-9_]+)\|"
+    r"(?P<dims>(?:[A-Za-z]\w*=[^,|]+,)*)"
+    r"dtype=(?P<dtype>[^,|]+)"
+    r"\|backend=(?P<backend>\w+)$")
+
+
+def parse_shape_key(key: str) -> Tuple[str, Dict[str, int], str, str]:
+    """Parse ``kernel|d1=v1,...,dtype=D|backend=B`` -> (kernel, dims, dtype,
+    backend).  Raises ``ValueError`` naming the malformed piece."""
+    m = _KEY_RE.match(key)
+    if not m:
+        raise ValueError(
+            f"shape key does not match "
+            f"'kernel|dim=val,...,dtype=<dtype>|backend=<backend>': {key!r}")
+    dims: Dict[str, int] = {}
+    dim_str = m.group("dims").rstrip(",")
+    for part in filter(None, dim_str.split(",")):
+        name, _, val = part.partition("=")
+        try:
+            dims[name] = int(val)
+        except ValueError:
+            raise ValueError(
+                f"shape-key dim {name!r} has non-integer value {val!r} "
+                f"in key {key!r}") from None
+    return m.group("kernel"), dims, m.group("dtype"), m.group("backend")
+
+
+def _is_num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def _finite_num(x) -> bool:
+    return _is_num(x) and math.isfinite(x)
+
+
+# ----------------------------------------------------------------------------
+# Autotune cache schema
+# ----------------------------------------------------------------------------
+
+_TILE_FIELDS = ("Bb", "Gb", "Ob", "row_tile")
+
+
+def validate_tune_cache(obj, path: str = "<cache>") -> List[Finding]:
+    """Validate one autotune cache payload (the parsed JSON object)."""
+    out: List[Finding] = []
+
+    def err(msg: str, key: str = "") -> None:
+        out.append(Finding("SCHEMA002", "error", path, 0, msg, symbol=key))
+
+    if not isinstance(obj, dict):
+        err(f"cache root must be an object mapping shape keys to entries, "
+            f"got {type(obj).__name__}")
+        return out
+    for key, entry in obj.items():
+        try:
+            kernel, dims, dtype, backend = parse_shape_key(key)
+        except ValueError as e:
+            err(f"bad shape key: {e}", key)
+            continue
+        if kernel not in KNOWN_KERNELS:
+            err(f"unknown kernel family {kernel!r} "
+                f"(known: {sorted(KNOWN_KERNELS)})", key)
+        else:
+            missing = [d for d in KNOWN_KERNELS[kernel] if d not in dims]
+            if missing:
+                err(f"key for kernel {kernel!r} is missing required dims "
+                    f"{missing}; present: {sorted(dims)}", key)
+        nonpos = {d: v for d, v in dims.items() if v < 1}
+        if nonpos:
+            err(f"key carries non-positive dims {nonpos}", key)
+        if not isinstance(entry, dict):
+            err(f"entry must be an object, got {type(entry).__name__}", key)
+            continue
+        extra = set(entry) - {"tiles", "us", "candidates"}
+        if extra:
+            err(f"entry carries unknown fields {sorted(extra)} "
+                f"(schema v{CACHE_SCHEMA_VERSION} allows tiles/us/candidates)",
+                key)
+        tiles = entry.get("tiles")
+        if not isinstance(tiles, dict):
+            err(f"entry 'tiles' must be an object, got "
+                f"{type(tiles).__name__}", key)
+        else:
+            for f in _TILE_FIELDS:
+                v = tiles.get(f)
+                if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                    err(f"tiles.{f} must be a positive int, got {v!r}", key)
+            unknown = set(tiles) - set(_TILE_FIELDS)
+            if unknown:
+                err(f"tiles carries unknown fields {sorted(unknown)}", key)
+        us = entry.get("us", "<absent>")
+        if us == "<absent>":
+            err("entry is missing 'us' (null when the tune was untimed)", key)
+        elif us is not None and not _finite_num(us):
+            err(f"'us' must be null or a finite number, got {us!r} "
+                f"(bare NaN/Infinity tokens break strict parsers)", key)
+        cand = entry.get("candidates")
+        if not isinstance(cand, int) or isinstance(cand, bool) or cand < 0:
+            err(f"'candidates' must be a non-negative int, got {cand!r}", key)
+        elif us is not None and cand == 0:
+            err("entry has a timed 'us' but candidates=0 — a timing with no "
+                "timed candidate is contradictory", key)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# BENCH_*.json schema
+# ----------------------------------------------------------------------------
+
+_ROW_NAME_RE = re.compile(r"^[a-z0-9_]+\.[A-Za-z0-9_.\-]+$")
+
+
+def validate_bench(obj, path: str = "<bench>") -> List[Finding]:
+    """Validate one BENCH payload (the parsed JSON object)."""
+    out: List[Finding] = []
+
+    def err(msg: str, sym: str = "") -> None:
+        out.append(Finding("SCHEMA001", "error", path, 0, msg, symbol=sym))
+
+    if not isinstance(obj, dict):
+        err(f"BENCH root must be an object, got {type(obj).__name__}")
+        return out
+    if not isinstance(obj.get("pr"), int) or isinstance(obj.get("pr"), bool):
+        err(f"top-level 'pr' must be an int, got {obj.get('pr')!r}")
+    for field in ("backend", "timing"):
+        if not isinstance(obj.get(field), str) or not obj.get(field):
+            err(f"top-level {field!r} must be a non-empty string, "
+                f"got {obj.get(field)!r}")
+    skipped = obj.get("skipped", {})
+    if not isinstance(skipped, dict) or not all(
+            isinstance(k, str) and isinstance(v, str)
+            for k, v in skipped.items()):
+        err(f"top-level 'skipped' must map sub-benchmark names to string "
+            f"reasons, got {skipped!r}")
+        skipped = {}
+    rows = obj.get("rows")
+    if not isinstance(rows, list) or not rows:
+        err("top-level 'rows' must be a non-empty list")
+        rows = []
+    row_skips = set()
+    for i, row in enumerate(rows):
+        sym = f"rows[{i}]"
+        if not isinstance(row, dict):
+            err(f"row must be an object, got {type(row).__name__}", sym)
+            continue
+        name = row.get("name")
+        if not isinstance(name, str) or not _ROW_NAME_RE.match(name):
+            err(f"row 'name' must be a '<section>.<case>' string, "
+                f"got {name!r}", sym)
+        else:
+            sym = name
+        missing = {"name", "us_per_call", "derived"} - set(row)
+        if missing:
+            err(f"row is missing required fields {sorted(missing)}", sym)
+        extra = set(row) - {"name", "us_per_call", "derived", "skipped"}
+        if extra:
+            err(f"row carries unknown fields {sorted(extra)} "
+                f"(schema v{BENCH_SCHEMA_VERSION})", sym)
+        us = row.get("us_per_call")
+        if "us_per_call" in row and not _finite_num(us):
+            err(f"row 'us_per_call' must be a finite number, got {us!r}", sym)
+        der = row.get("derived")
+        if "derived" in row and not (isinstance(der, str) or _finite_num(der)):
+            err(f"row 'derived' must be a string or finite number, "
+                f"got {der!r}", sym)
+        skip = row.get("skipped")
+        if skip is not None:
+            if not isinstance(skip, str) or not skip:
+                err(f"row 'skipped' must be a non-empty reason string, "
+                    f"got {skip!r}", sym)
+            if "derived" in row and not (
+                    isinstance(der, str) and der.startswith("skipped: ")):
+                err("skipped row's 'derived' must carry the "
+                    "'skipped: <reason>' marker (the CSV mirror)", sym)
+            if isinstance(name, str):
+                row_skips.add(name)
+                if name not in skipped:
+                    err("skipped row has no entry in the top-level 'skipped' "
+                        "map — the two views must agree", sym)
+    for name in skipped:
+        if name not in row_skips:
+            err(f"top-level 'skipped' names {name!r} but no row carries the "
+                f"skip — the two views must agree", name)
+    # speedup blocks, when present, are flat name -> finite number maps.
+    for field in ("speedup", "target_min_speedup"):
+        block = obj.get(field)
+        if block is None:
+            continue
+        if not isinstance(block, dict) or not all(
+                isinstance(k, str) and _finite_num(v)
+                for k, v in block.items()):
+            err(f"top-level {field!r} must map metric names to finite "
+                f"numbers, got {block!r}")
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Repo artifact discovery
+# ----------------------------------------------------------------------------
+
+
+def _load(path: str) -> Tuple[Optional[object], Optional[str]]:
+    try:
+        with open(path) as f:
+            return json.load(f), None
+    except (OSError, ValueError) as e:
+        return None, f"{type(e).__name__}: {e}"
+
+
+def validate_repo_artifacts(root: str,
+                            cache_path: Optional[str] = None
+                            ) -> List[Finding]:
+    """Validate every checked-in ``BENCH_*.json`` under ``root`` plus the
+    autotune cache: an explicit ``cache_path``, else
+    ``$REPRO_PCILT_TUNE_CACHE`` when set, else any committed
+    ``*tiles*.json`` under the repo root.  A missing cache is fine (nothing
+    committed yet); an unparseable artifact is a finding, not a crash."""
+    out: List[Finding] = []
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        obj, emsg = _load(path)
+        if emsg is not None:
+            out.append(Finding("SCHEMA001", "error", rel(path, root), 0,
+                               f"unreadable BENCH file ({emsg})"))
+            continue
+        out.extend(validate_bench(obj, rel(path, root)))
+    caches = []
+    if cache_path:
+        caches.append(cache_path)
+    else:
+        env = os.environ.get("REPRO_PCILT_TUNE_CACHE")
+        if env and os.path.exists(env):
+            caches.append(env)
+        caches.extend(sorted(glob.glob(os.path.join(root, "*tiles*.json"))))
+    for path in caches:
+        obj, emsg = _load(path)
+        if emsg is not None:
+            out.append(Finding("SCHEMA002", "error", rel(path, root), 0,
+                               f"unreadable autotune cache ({emsg})"))
+            continue
+        out.extend(validate_tune_cache(obj, rel(path, root)))
+    return out

@@ -39,7 +39,10 @@ class SyntheticLM:
 
     @property
     def local_batch(self) -> int:
-        assert self.global_batch % self.n_shards == 0
+        if self.global_batch % self.n_shards:
+            raise ValueError(
+                f"global_batch {self.global_batch} is not divisible by "
+                f"n_shards {self.n_shards}")
         return self.global_batch // self.n_shards
 
     def _rng(self, step: int) -> np.random.Generator:

@@ -266,7 +266,10 @@ def pcilt_fused_dwconv1d(
     """
     B, T, C = x.shape
     C2, V = tables.shape
-    assert C == C2, (C, C2)
+    if C != C2:
+        raise ValueError(
+            f"x channel dim {C} != tables channel dim {C2} "
+            f"(x {x.shape}, tables {tables.shape})")
     x = jnp.pad(x, ((0, 0), _dwconv_pads(k, padding), (0, 0)))
     To = x.shape[1] - k + 1
     key = atn.shape_key("fused_dwconv1d", dtype=tables.dtype,

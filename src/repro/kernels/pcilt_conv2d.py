@@ -67,7 +67,10 @@ def pcilt_conv2d_pallas(
     """
     B, H, W, G = offsets.shape
     G2, V, O = tables.shape
-    assert G == G2
+    if G != G2:
+        raise ValueError(
+            f"offsets segment dim {G} != tables segment dim {G2} "
+            f"(offsets {offsets.shape}, tables {tables.shape})")
     if tiles is None:
         Hb = min(row_tile, H)
         Gb = G if G * V * O * tables.dtype.itemsize <= 8 * 2**20 else 1

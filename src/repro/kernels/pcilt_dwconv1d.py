@@ -67,7 +67,10 @@ def pcilt_dwconv1d_pallas(
     """offsets ``[B, T, C]`` int32, tables ``[C, V]`` -> out ``[B, T, C]``."""
     B, T, C = offsets.shape
     C2, V = tables.shape
-    assert C == C2
+    if C != C2:
+        raise ValueError(
+            f"offsets channel dim {C} != tables channel dim {C2} "
+            f"(offsets {offsets.shape}, tables {tables.shape})")
     Tb = min(time_tile, T)
     while T % Tb:
         Tb -= 1
@@ -156,7 +159,10 @@ def pcilt_fused_dwconv1d_pallas(
     """
     B, Tp, C = x.shape
     C2, V = tables.shape
-    assert C == C2, (C, C2)
+    if C != C2:
+        raise ValueError(
+            f"x channel dim {C} != tables channel dim {C2} "
+            f"(x {x.shape}, tables {tables.shape})")
     To = Tp - k + 1
     Tb, Cb = tiles
     grid = (B, To // Tb, C // Cb)

@@ -112,7 +112,10 @@ def pcilt_fused_gemv_pallas(
     """
     B, n = x.shape
     G, V, O = tables.shape
-    assert n == G * group, (n, G, group)
+    if n != G * group:
+        raise ValueError(
+            f"x trailing dim {n} != G*group = {G}*{group} "
+            f"(x {x.shape}, tables {tables.shape})")
     Bb, Gb, Ob = tiles
     grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G // Gb)
     return pl.pallas_call(
@@ -183,7 +186,10 @@ def pcilt_fused_gemv_stacked_pallas(
     """
     B, n = x.shape
     L, G, V, O = tables.shape
-    assert n == G * group, (n, G, group)
+    if n != G * group:
+        raise ValueError(
+            f"x trailing dim {n} != G*group = {G}*{group} "
+            f"(x {x.shape}, stacked tables {tables.shape})")
     Bb, Gb, Ob = tiles
     grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G // Gb)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -316,7 +322,11 @@ def pcilt_fused_conv2d_pallas(
     G, V, O = tables.shape
     n = kh * kw * C
     n_tot = n_total or G * group
-    assert n_tot >= max(n, G * group), (n_tot, n, G, group)
+    if n_tot < max(n, G * group):
+        raise ValueError(
+            f"n_total {n_tot} must cover the patch length kh*kw*C = {n} "
+            f"and the table span G*group = {G}*{group} "
+            f"(x {x.shape}, tables {tables.shape})")
     Ho = (Hp - kh) // stride + 1
     Wo = (Wp - kw) // stride + 1
     Hb, Gb, Ob = tiles

@@ -84,7 +84,10 @@ def pcilt_gemv_pallas(
     """
     B, G = offsets.shape
     G2, V, O = tables.shape
-    assert G == G2, (G, G2)
+    if G != G2:
+        raise ValueError(
+            f"offsets segment dim {G} != tables segment dim {G2} "
+            f"(offsets {offsets.shape}, tables {tables.shape})")
     Bb, Gb, Ob = tiles if tiles is not None else default_tiles(
         B, G, V, O, itemsize=tables.dtype.itemsize)
     Bb, Ob = min(Bb, B), min(Ob, O)

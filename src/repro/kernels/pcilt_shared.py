@@ -130,7 +130,10 @@ def pcilt_shared_gemv_pallas(
     B, n = x.shape
     G = seg_idx.shape[-1]
     X, V, O = pool.shape
-    assert n == G * group, (n, G, group)
+    if n != G * group:
+        raise ValueError(
+            f"x trailing dim {n} != G*group = {G}*{group} "
+            f"(x {x.shape}, seg_idx {seg_idx.shape}, pool {pool.shape})")
     pool_t = jnp.transpose(pool, (1, 0, 2))  # [V, X, O], once per call
     Bb, Gb, Ob = tiles
     grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G // Gb)
@@ -209,7 +212,11 @@ def pcilt_shared_conv2d_pallas(
     X, V, O = pool.shape
     n = kh * kw * C
     n_tot = n_total or G * group
-    assert n_tot >= max(n, G * group), (n_tot, n, G, group)
+    if n_tot < max(n, G * group):
+        raise ValueError(
+            f"n_total {n_tot} must cover the patch length kh*kw*C = {n} "
+            f"and the table span G*group = {G}*{group} "
+            f"(x {x.shape}, seg_idx {seg_idx.shape}, pool {pool.shape})")
     pool_t = jnp.transpose(pool, (1, 0, 2))  # [V, X, O], once per call
     Ho = (Hp - kh) // stride + 1
     Wo = (Wp - kw) // stride + 1

@@ -179,8 +179,12 @@ class TransformerLM:
         return self.cfg.moe.interleave if self.cfg.moe else 1
 
     def _n_units(self) -> int:
-        assert self.cfg.n_layers % self._unit_size() == 0
-        return self.cfg.n_layers // self._unit_size()
+        u = self._unit_size()
+        if self.cfg.n_layers % u:
+            raise ValueError(
+                f"n_layers {self.cfg.n_layers} is not a multiple of the MoE "
+                f"interleave unit size {u}")
+        return self.cfg.n_layers // u
 
     def _unit_spec(self, cross=False):
         cfg, u = self.cfg, self._unit_size()

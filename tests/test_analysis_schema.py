@@ -1,0 +1,208 @@
+"""Artifact schemas (repro.analysis.schema): the checked-in BENCH payloads
+and any committed autotune cache validate clean, seeded violations fail with
+named findings, and a real TileCache round-trips through the validator."""
+
+import copy
+import glob
+import json
+import os
+
+import pytest
+
+from repro.analysis import repo_root
+from repro.analysis import schema
+from repro.kernels import autotune as atn
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ----------------------------------------------------------------------------
+# Checked-in artifacts are clean (the acceptance gate)
+# ----------------------------------------------------------------------------
+
+
+def test_repo_artifacts_validate_clean():
+    fs = schema.validate_repo_artifacts(repo_root())
+    assert fs == [], "\n".join(f.render() for f in fs)
+
+
+def test_checked_in_bench_files_exist_and_validate():
+    paths = sorted(glob.glob(os.path.join(repo_root(), "BENCH_*.json")))
+    assert paths, "the repo ships BENCH_pr*.json artifacts"
+    for p in paths:
+        with open(p) as f:
+            payload = json.load(f)
+        assert schema.validate_bench(payload, p) == []
+
+
+# ----------------------------------------------------------------------------
+# Shape-key grammar
+# ----------------------------------------------------------------------------
+
+
+def test_parse_shape_key_roundtrips_real_keys():
+    key = atn.shape_key("fused_gemv", dtype="float32", backend="cpu",
+                        B=8, G=512, V=16, O=1024, g=2, bits=2)
+    kernel, dims, dtype, backend = schema.parse_shape_key(key)
+    assert kernel == "fused_gemv" and dtype == "float32" and backend == "cpu"
+    assert dims == {"B": 8, "G": 512, "V": 16, "O": 1024, "g": 2, "bits": 2}
+
+
+@pytest.mark.parametrize("bad", [
+    "no_pipes_at_all",
+    "fused_gemv|B=8,G=2|backend=cpu",            # missing dtype
+    "fused_gemv|B=eight,dtype=float32|backend=cpu",  # non-int dim
+    "fused_gemv|B=8,dtype=float32",              # missing backend
+])
+def test_parse_shape_key_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        schema.parse_shape_key(bad)
+
+
+def test_known_kernels_match_family_names():
+    from repro.analysis import vmem
+    assert {f.name for f in vmem.FAMILIES()} == set(schema.KNOWN_KERNELS)
+
+
+# ----------------------------------------------------------------------------
+# Autotune cache validation
+# ----------------------------------------------------------------------------
+
+
+def _good_cache():
+    key = atn.shape_key("fused_gemv", dtype="float32", backend="cpu",
+                        B=8, G=512, V=16, O=1024, g=2, bits=2)
+    return {key: {"tiles": {"Bb": 8, "Gb": 512, "Ob": 128, "row_tile": 8},
+                  "us": 812.4, "candidates": 4}}
+
+
+def test_good_cache_validates_clean():
+    assert schema.validate_tune_cache(_good_cache()) == []
+
+
+def test_null_us_untimed_fallback_is_legal():
+    c = _good_cache()
+    entry = next(iter(c.values()))
+    entry["us"] = None
+    entry["candidates"] = 0
+    assert schema.validate_tune_cache(c) == []
+
+
+@pytest.mark.parametrize("mutate, needle", [
+    (lambda c, e: c.update({"gibberish key": e}), "bad shape key"),
+    (lambda c, e: c.update({"mystery_kernel|B=8,dtype=f32|backend=cpu": e}),
+     "unknown kernel family"),
+    (lambda c, e: c.update(
+        {"fused_gemv|B=8,dtype=float32|backend=cpu": e}), "missing required"),
+    (lambda c, e: e["tiles"].update({"Gb": 0}), "positive int"),
+    (lambda c, e: e["tiles"].update({"Qb": 3}), "unknown fields"),
+    (lambda c, e: e.update({"us": float("nan")}), "finite"),
+    (lambda c, e: e.update({"candidates": -1}), "non-negative"),
+    (lambda c, e: e.pop("us"), "missing 'us'"),
+    (lambda c, e: e.update({"extra": 1}), "unknown fields"),
+    (lambda c, e: e.update({"us": 10.0, "candidates": 0}), "contradictory"),
+])
+def test_seeded_cache_violations_fire_schema002(mutate, needle):
+    c = _good_cache()
+    mutate(c, next(iter(c.values())))
+    fs = schema.validate_tune_cache(c)
+    assert fs and _rules(fs) == ["SCHEMA002"]
+    assert any(needle in f.message for f in fs), \
+        f"{needle!r} not in: " + "\n".join(f.message for f in fs)
+
+
+def test_real_tilecache_roundtrip_validates(tmp_path):
+    path = str(tmp_path / "tiles.json")
+    cache = atn.TileCache(path)
+    key = atn.shape_key("shared_gemv", dtype="bfloat16", backend="cpu",
+                        B=8, G=64, V=16, O=256, X=4, g=2, bits=2)
+    cache.record(key, atn.TileConfig(Bb=8, Gb=64, Ob=128), 55.5, 3)
+    cache.record(  # a failed tune records us=null — also schema-legal
+        atn.shape_key("fused_dwconv1d", dtype="float32", backend="cpu",
+                      B=2, T=16, C=128, V=256, k=4, bits=2),
+        atn.TileConfig(Bb=16, Gb=1, Ob=128), None, 0)
+    with open(path) as f:
+        payload = json.load(f)
+    assert schema.validate_tune_cache(payload, path) == []
+
+
+# ----------------------------------------------------------------------------
+# BENCH payload validation
+# ----------------------------------------------------------------------------
+
+
+def _good_bench():
+    return {
+        "pr": 7, "backend": "cpu", "timing": "perf_counter min-of-5",
+        "skipped": {"decode.e2e": "needs 8 devices"},
+        "rows": [
+            {"name": "gemv.fused_f32", "us_per_call": 812.4,
+             "derived": 1.31},
+            {"name": "decode.e2e", "us_per_call": 0.0,
+             "derived": "skipped: needs 8 devices",
+             "skipped": "needs 8 devices"},
+        ],
+        "speedup": {"gemv": 1.31},
+        "target_min_speedup": {"gemv": 1.3},
+    }
+
+
+def test_good_bench_validates_clean():
+    assert schema.validate_bench(_good_bench()) == []
+
+
+@pytest.mark.parametrize("mutate, needle", [
+    (lambda b: b.update({"pr": "seven"}), "'pr' must be an int"),
+    (lambda b: b.update({"backend": ""}), "non-empty string"),
+    (lambda b: b.update({"rows": []}), "non-empty list"),
+    (lambda b: b["rows"][0].update({"name": "NoSection"}),
+     "'<section>.<case>'"),
+    (lambda b: b["rows"][0].pop("us_per_call"), "missing required"),
+    (lambda b: b["rows"][0].update({"us_per_call": float("inf")}), "finite"),
+    (lambda b: b["rows"][0].update({"mystery": 1}), "unknown fields"),
+    (lambda b: b["rows"][1].pop("skipped"), "no row carries the skip"),
+    (lambda b: b.update({"skipped": {}}), "no entry in the top-level"),
+    (lambda b: b["rows"][1].update({"derived": 0.0}), None),
+    (lambda b: b.update({"target_min_speedup": 1.3}),
+     "map metric names to finite numbers"),
+    (lambda b: b.update({"speedup": {"gemv": float("nan")}}),
+     "map metric names to finite numbers"),
+])
+def test_seeded_bench_violations_fire_schema001(mutate, needle):
+    b = _good_bench()
+    mutate(b)
+    fs = schema.validate_bench(b)
+    if needle is None:  # derived losing its skip marker: any finding is fine
+        assert fs and _rules(fs) == ["SCHEMA001"]
+        return
+    assert fs and _rules(fs) == ["SCHEMA001"]
+    assert any(needle in f.message for f in fs), \
+        f"{needle!r} not in: " + "\n".join(f.message for f in fs)
+
+
+def test_unreadable_artifacts_become_findings_not_crashes(tmp_path):
+    (tmp_path / "BENCH_pr9.json").write_text("{not json")
+    (tmp_path / "tiles.json").write_text("[1, 2")
+    fs = schema.validate_repo_artifacts(str(tmp_path))
+    assert _rules(fs) == ["SCHEMA001", "SCHEMA002"]
+    assert all("unreadable" in f.message for f in fs)
+
+
+def test_legacy_scalar_target_min_speedup_rejected():
+    # the drift this pass caught in the real BENCH_pr1/pr2 artifacts: the
+    # PR-4 writer moved to per-metric maps, stale scalars must keep failing
+    b = _good_bench()
+    b["target_min_speedup"] = 1.3
+    fs = schema.validate_bench(b)
+    assert any("target_min_speedup" in f.message for f in fs)
+
+
+def test_mutating_a_copy_of_checked_in_bench_fails(tmp_path):
+    src = sorted(glob.glob(os.path.join(repo_root(), "BENCH_*.json")))[0]
+    with open(src) as f:
+        payload = json.load(f)
+    bad = copy.deepcopy(payload)
+    bad["rows"][0]["us_per_call"] = float("nan")
+    assert schema.validate_bench(bad) != []

@@ -1,0 +1,152 @@
+"""Typed shape errors: every former bare ``assert`` in the kernel zoo (and
+the two library sites outside it) now raises a ``ValueError`` that *names the
+offending shapes* — callers debugging a mis-built table stack get the numbers,
+not a naked AssertionError tuple, and the checks survive ``python -O``.
+
+One test per raise site, matching on message content (the numbers and the
+operand names), plus the lint-side guarantee that ``src/repro`` is
+assert-free lives in test_analysis_lint.py.
+"""
+
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantSpec
+from repro.data.pipeline import SyntheticLM
+from repro.kernels import ops
+from repro.kernels.pcilt_conv2d import pcilt_conv2d_pallas
+from repro.kernels.pcilt_dwconv1d import (pcilt_dwconv1d_pallas,
+                                          pcilt_fused_dwconv1d_pallas)
+from repro.kernels.pcilt_fused import (pcilt_fused_conv2d_pallas,
+                                       pcilt_fused_gemv_pallas,
+                                       pcilt_fused_gemv_stacked_pallas)
+from repro.kernels.pcilt_gemv import pcilt_gemv_pallas
+from repro.kernels.pcilt_shared import (pcilt_shared_conv2d_pallas,
+                                        pcilt_shared_gemv_pallas)
+from repro.models.transformer import TransformerLM
+
+S2 = jnp.ones((1, 1), jnp.float32)
+SEG2 = jnp.zeros((1, 1), jnp.int32)
+
+
+def test_gemv_host_segment_mismatch():
+    off = jnp.zeros((4, 8), jnp.int32)
+    tab = jnp.zeros((9, 16, 128), jnp.float32)
+    with pytest.raises(ValueError, match=r"segment dim 8 != .*9"):
+        pcilt_gemv_pallas(off, tab, interpret=True)
+
+
+def test_conv2d_host_segment_mismatch():
+    off = jnp.zeros((1, 4, 8, 8), jnp.int32)
+    tab = jnp.zeros((9, 16, 128), jnp.float32)
+    with pytest.raises(ValueError, match=r"segment dim 8 != .*9"):
+        pcilt_conv2d_pallas(off, tab, interpret=True)
+
+
+def test_dwconv1d_host_channel_mismatch():
+    off = jnp.zeros((1, 8, 16), jnp.int32)
+    tab = jnp.zeros((17, 4), jnp.float32)
+    with pytest.raises(ValueError, match=r"channel dim 16 != .*17"):
+        pcilt_dwconv1d_pallas(off, tab, interpret=True)
+
+
+def test_fused_dwconv1d_kernel_channel_mismatch():
+    x = jnp.zeros((1, 11, 16), jnp.float32)
+    tab = jnp.zeros((17, 256), jnp.float32)
+    with pytest.raises(ValueError, match=r"channel dim 16 != .*17"):
+        pcilt_fused_dwconv1d_pallas(x, S2, tab, bits=2, zero_point=2, k=4,
+                                    tiles=(8, 16), interpret=True)
+
+
+def test_fused_dwconv1d_dispatch_channel_mismatch():
+    x = jnp.asarray(np.zeros((1, 8, 16)), jnp.float32)
+    tab = jnp.zeros((17, 256), jnp.float32)
+    with pytest.raises(ValueError, match=r"channel dim 16 != .*17"):
+        ops.pcilt_fused_dwconv1d(x, tab, QuantSpec(2), 1.0, k=4)
+
+
+def test_fused_gemv_group_mismatch():
+    x = jnp.zeros((8, 30), jnp.float32)
+    tab = jnp.zeros((16, 16, 128), jnp.float32)
+    with pytest.raises(ValueError, match=r"trailing dim 30 != G\*group = 16\*2"):
+        pcilt_fused_gemv_pallas(x, S2, tab, bits=2, zero_point=2, group=2,
+                                tiles=(8, 16, 128), interpret=True)
+
+
+def test_fused_gemv_stacked_group_mismatch():
+    l1 = jnp.zeros((1,), jnp.int32)
+    x = jnp.zeros((8, 30), jnp.float32)
+    tab = jnp.zeros((3, 16, 16, 128), jnp.float32)
+    with pytest.raises(ValueError, match=r"trailing dim 30 != G\*group = 16\*2"):
+        pcilt_fused_gemv_stacked_pallas(l1, x, S2, tab, bits=2, zero_point=2,
+                                        group=2, tiles=(8, 16, 128),
+                                        interpret=True)
+
+
+def test_fused_conv2d_n_total_too_small():
+    x = jnp.zeros((1, 6, 6, 4), jnp.float32)
+    tab = jnp.zeros((4, 16, 128), jnp.float32)
+    with pytest.raises(ValueError,
+                       match=r"n_total 10 .*kh\*kw\*C = 36.*G\*group = 4\*2"):
+        pcilt_fused_conv2d_pallas(x, S2, SEG2, tab, bits=2, zero_point=2,
+                                  group=2, kh=3, kw=3, n_total=10,
+                                  tiles=(1, 1, 128), interpret=True)
+
+
+def test_shared_gemv_group_mismatch():
+    x = jnp.zeros((4, 10), jnp.float32)
+    idx = jnp.zeros((1, 4), jnp.int32)
+    pool = jnp.zeros((2, 16, 128), jnp.float32)
+    with pytest.raises(ValueError, match=r"trailing dim 10 != G\*group = 4\*2"):
+        pcilt_shared_gemv_pallas(x, S2, idx, pool, bits=2, zero_point=2,
+                                 group=2, tiles=(8, 4, 128), interpret=True)
+
+
+def test_shared_conv2d_n_total_too_small():
+    x = jnp.zeros((1, 6, 6, 4), jnp.float32)
+    idx = jnp.zeros((1, 4), jnp.int32)
+    pool = jnp.zeros((2, 16, 128), jnp.float32)
+    with pytest.raises(ValueError,
+                       match=r"n_total 10 .*kh\*kw\*C = 36.*G\*group = 4\*2"):
+        pcilt_shared_conv2d_pallas(x, S2, SEG2, idx, pool, bits=2,
+                                   zero_point=2, group=2, kh=3, kw=3,
+                                   n_total=10, tiles=(1, 1, 128),
+                                   interpret=True)
+
+
+def test_ops_fused_dwconv1d_survives_python_O():
+    # The former bare assert vanished under `python -O`; the ValueError is
+    # raise-based and must fire regardless of optimization level.
+    import subprocess
+    import sys
+
+    code = (
+        "import jax.numpy as jnp\n"
+        "from repro.kernels.pcilt_gemv import pcilt_gemv_pallas\n"
+        "try:\n"
+        "    pcilt_gemv_pallas(jnp.zeros((4, 8), jnp.int32),\n"
+        "                      jnp.zeros((9, 16, 128), jnp.float32),\n"
+        "                      interpret=True)\n"
+        "except ValueError as e:\n"
+        "    assert 'segment dim 8' in str(e), str(e)\n"
+        "    print('OK')\n"
+    )
+    res = subprocess.run([sys.executable, "-O", "-c", code],
+                         capture_output=True, text=True)
+    assert res.returncode == 0 and "OK" in res.stdout, res.stderr
+
+
+def test_transformer_interleave_mismatch():
+    lm = TransformerLM(cfg=SimpleNamespace(
+        n_layers=5, moe=SimpleNamespace(interleave=2)))
+    with pytest.raises(ValueError, match=r"n_layers 5 .*unit size 2"):
+        lm._n_units()
+
+
+def test_pipeline_shard_mismatch():
+    ds = SyntheticLM(vocab=16, seq_len=8, global_batch=5, n_shards=2)
+    with pytest.raises(ValueError, match=r"global_batch 5 .*n_shards 2"):
+        ds.local_batch
