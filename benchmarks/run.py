@@ -636,6 +636,141 @@ def decode_e2e_rows(bench_json: str = "BENCH_pr5.json"):
     return rows
 
 
+def decode_e2e_pr8_rows(bench_json: str = "BENCH_pr8.json"):
+    """decode_e2e_pr8.* -> BENCH_pr8.json: paired multi-scalar decode.
+
+    The PR 8 claim: TL1-style paired tables (adjacent segment pairs merged
+    into seg-major ``[G/2, L, V^2, O]`` stacks, fetched by ``take_along_
+    axis`` row-gather instead of a one-hot contraction) halve the fetch
+    count per output and make the fully-converted PCILT decode step **beat
+    dense** on the PR 5 config — the end-to-end target the unpaired fused
+    path missed.  Measured on the identical model/calibration as
+    ``decode_e2e_rows``:
+
+    * **dense** — every projection a matmul, conv a tap-dot;
+    * **full_pcilt_fused** — the PR 5 unpaired stacked path (baseline);
+    * **full_pcilt_paired** — the paired stacked path (this PR), with the
+      conv frontend's dwconv key tuned at warmup like the projections;
+    * **paired_parity** — paired-vs-unpaired fetch parity on an
+      exact-arithmetic grid (integer weights, power-of-two scales: every
+      summation order is exact, so the two table layouts must agree
+      *bit-for-bit*; any nonzero diff is a build/kernel index bug).
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    rows = []
+    speedups = {}
+    skipped = {}
+
+    def block():
+        from repro.configs import get_smoke_config
+        from repro.configs.base import PCILTConfig
+        from repro.core import QuantSpec
+        from repro.core.pcilt import build_grouped_tables, build_paired_tables
+        from repro.core.serving import convert_mamba_decode
+        from repro.kernels import ops
+        from repro.models import build_model
+        from repro.nn import materialize
+        from repro.nn.layers import Ctx
+
+        cfg = get_smoke_config("mamba2-130m")
+        if not _SMOKE:
+            # The PR 5 decode_e2e config — the regime the paired path must
+            # win in; smoke keeps the CI-sized smoke dims.
+            cfg = dataclasses.replace(
+                cfg, d_model=256,
+                ssm=dataclasses.replace(cfg.ssm, d_state=64, head_dim=64))
+        cfg = dataclasses.replace(cfg, pcilt=PCILTConfig(act_bits=2, group=2),
+                                  dtype=jnp.float32)
+        model = build_model(cfg)
+        key = jax.random.PRNGKey(0)
+        params = materialize(model.param_specs(), key)
+        ctx = Ctx()
+        B, S = 1, 16
+        calib = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        _, cache = model.prefill(params, {"tokens": calib}, ctx)
+        tok = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+
+        eng_u = convert_mamba_decode(model, params, calib)
+        eng_p = convert_mamba_decode(model, params, calib, paired=True)
+        eng_u.tune(batch=B)  # records stacked + dwconv winners
+        eng_p.tune(batch=B)  # records paired-stacked + dwconv winners
+
+        variants = [
+            ("dense", None),
+            ("full_pcilt_fused", eng_u.pcilt),
+            ("full_pcilt_paired", eng_p.pcilt),
+        ]
+        times = {}
+        for name, pc in variants:
+            fn = jax.jit(lambda p, c, t, pc=pc: model.decode_step(
+                p, c, t, ctx, pcilt=pc))
+            fn(params, cache, tok)[0].block_until_ready()
+            times[name] = _timeit(
+                lambda: fn(params, cache, tok)[0].block_until_ready())
+        speedups["full_pcilt_vs_dense"] = (
+            times["dense"] / times["full_pcilt_paired"])
+        speedups["paired_vs_unpaired"] = (
+            times["full_pcilt_fused"] / times["full_pcilt_paired"])
+
+        # paired-vs-unpaired bit-exactness probe on the exact grid: integer
+        # weights + power-of-two scale make every summation order exact, so
+        # the [G, V, O] and [G/2, V^2, O] layouts must agree bit-for-bit.
+        spec = QuantSpec(bits=2, symmetric=True)
+        kw = jax.random.randint(
+            jax.random.PRNGKey(7), (64, 128), -2, 3).astype(jnp.float32)
+        scale = jnp.float32(0.5)  # power of two: quantize is exact
+        xs = jax.random.randint(
+            jax.random.PRNGKey(8), (4, 64), -2, 2).astype(jnp.float32)
+        t_u = build_grouped_tables(kw, spec, scale, 2)
+        t_p = build_paired_tables(kw, spec, scale, 2)
+        out_u = ops.pcilt_fused_gemv(xs, t_u, spec, scale, 2)
+        out_p = ops.pcilt_fused_gemv_paired(xs, t_p, spec, scale, 2)
+        diff = float(jnp.max(jnp.abs(out_u - out_p)))
+        if diff != 0.0:
+            raise AssertionError(
+                f"paired tables are not bit-exact vs unpaired on the exact-"
+                f"arithmetic grid (max diff {diff})")
+
+        tag = (f"b1_d{cfg.d_model}_L{cfg.n_layers}"
+               f"_bits{cfg.pcilt.act_bits}g{cfg.pcilt.group}")
+        rows.append((f"decode_e2e_pr8.{tag}_dense", times["dense"],
+                     f"{1e6 / times['dense']:.1f} tokens/s"))
+        rows.append((f"decode_e2e_pr8.{tag}_full_pcilt_fused",
+                     times["full_pcilt_fused"],
+                     "unpaired stacked path (PR 5 baseline)"))
+        rows.append((f"decode_e2e_pr8.{tag}_full_pcilt_paired",
+                     times["full_pcilt_paired"],
+                     f"{speedups['paired_vs_unpaired']:.2f}x vs unpaired, "
+                     f"{speedups['full_pcilt_vs_dense']:.2f}x vs dense"))
+        rows.append((f"decode_e2e_pr8.{tag}_paired_parity", diff,
+                     "max |paired - unpaired| on the exact grid "
+                     "(bit-exact contract: must be 0)"))
+        rows.append((f"decode_e2e_pr8.{tag}_paired_table_mib",
+                     eng_p.table_bytes() / 2**20,
+                     "conv [L,C,V] + seg-major paired proj [G/2,L,V^2,O]"))
+
+    _guard(rows, skipped, "decode_e2e_pr8.batch1", block)
+
+    if bench_json:
+        payload = {
+            "pr": 8,
+            "backend": jax.default_backend(),
+            "timing": "interpret-mode CPU" if jax.default_backend() != "tpu"
+                      else "compiled TPU",
+            "target_min_speedup": {"full_pcilt_vs_dense": 1.0},
+            "speedup": {k: round(v, 3) for k, v in speedups.items()},
+            "skipped": skipped,
+            "rows": _json_rows(rows),
+        }
+        with open(_bench_path(bench_json), "w") as fp:
+            json.dump(payload, fp, indent=1)
+    return rows
+
+
 def resilience_rows(bench_json: str = "BENCH_pr6.json"):
     """resilience.* -> BENCH_pr6.json: what the serving health layer costs.
 
@@ -766,8 +901,8 @@ def main(argv=None) -> None:
     global _SMOKE
     _SMOKE = args.smoke
     sections = [paper_rows, micro_rows, lm_rows, fused_rows, shared_rows,
-                shard_rows, pr4_rows, decode_e2e_rows, resilience_rows,
-                roofline_rows]
+                shard_rows, pr4_rows, decode_e2e_rows, decode_e2e_pr8_rows,
+                resilience_rows, roofline_rows]
     if args.only:
         sections = [s for s in sections
                     if s.__name__.startswith(args.only)]

@@ -57,6 +57,11 @@ KNOWN_KERNELS: Dict[str, Tuple[str, ...]] = {
     "conv2d_host": ("B", "Ho", "Wo", "G", "V", "O"),
     "fused_gemv": ("B", "G", "V", "O", "g", "bits"),
     "fused_gemv_stacked": ("B", "L", "G", "V", "O", "g", "bits"),
+    # paired (TL1-style) families: G and V are paired-space (G/2 segment
+    # pairs at V**2 entries); g/bits stay the unpaired build parameters
+    "fused_gemv_paired": ("B", "G", "V", "O", "g", "bits"),
+    "fused_gemv_paired_stacked": ("B", "L", "G", "V", "O", "g", "bits"),
+    "fused_gemv_plan": ("B", "G", "V", "O", "g", "bits"),
     "fused_conv2d": ("B", "Ho", "W", "C", "k", "s", "G", "V", "O", "g",
                      "bits"),
     "fused_dwconv1d": ("B", "T", "C", "V", "k", "bits"),

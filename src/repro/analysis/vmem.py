@@ -119,9 +119,11 @@ def _build_families() -> List[Family]:
     from repro.kernels import ops
     from repro.kernels.pcilt_conv2d import pcilt_conv2d_pallas
     from repro.kernels.pcilt_dwconv1d import pcilt_fused_dwconv1d_pallas
-    from repro.kernels.pcilt_fused import (pcilt_fused_conv2d_pallas,
-                                           pcilt_fused_gemv_pallas,
-                                           pcilt_fused_gemv_stacked_pallas)
+    from repro.kernels.pcilt_fused import (
+        pcilt_fused_conv2d_pallas, pcilt_fused_gemv_pallas,
+        pcilt_fused_gemv_paired_pallas,
+        pcilt_fused_gemv_paired_stacked_pallas, pcilt_fused_gemv_plan_pallas,
+        pcilt_fused_gemv_stacked_pallas)
     from repro.kernels.pcilt_gemv import pcilt_gemv_pallas
     from repro.kernels.pcilt_shared import (pcilt_shared_conv2d_pallas,
                                             pcilt_shared_gemv_pallas)
@@ -209,6 +211,88 @@ def _build_families() -> List[Family]:
                sds((Bp, s["G"] * s["group"]), jnp.float32),
                sds((1, 1), jnp.float32),
                sds((s["L"], s["G"], s["V"], Op), tdt(s)),
+               bits=s["bits"], zero_point=(1 << s["bits"]) // 2,
+               group=s["group"], tiles=tiles, interpret=True)
+        return j, tiles
+
+    # -- paired (TL1-style) gemv + seg-major stack -------------------------
+    # G/V are paired-space (segment pairs at V**2 entries).  The paired
+    # kernels gather table rows with take_along_axis — no one-hot — so the
+    # scratch model is the f32 [Gb, Bb, Ob] fetched rows plus the [Bb, Gb]
+    # pair-index plane (autotune._fit_paired_gb), with no V factor.
+
+    PAIRED_SWEEP = {
+        "quick": [dict(B=8, G=8, V=256, O=256, group=2, bits=2, itemsize=4)],
+        "full": [dict(B=8, G=8, V=256, O=256, group=2, bits=2, itemsize=4),
+                 dict(B=1, G=16, V=16, O=128, group=1, bits=2, itemsize=2)],
+    }
+
+    def paired_cands(s, budget):
+        return atn.paired_gemv_candidates(s["B"], s["G"], s["V"], s["O"],
+                                          s["itemsize"],
+                                          scratch_budget=budget)
+
+    def paired_scratch(s, c):
+        # f32 fetched rows [Gb, Bb, Ob] + int32 pair indices [Bb, Gb] —
+        # exactly what _fit_paired_gb(G, Bb, Ob) bounds (no V factor).
+        return c.Gb * (c.Bb * c.Ob * 4 + c.Bb * 4)
+
+    def paired_witness(s, eff):
+        # the take_along_axis row-fetch intermediate [Gb, Bb, Ob]
+        return [(eff[1], eff[0], eff[2])]
+
+    def paired_trace(s, c):
+        tiles = ops._fit_tiles((c.Bb, c.Gb, c.Ob), s["B"], s["G"], s["O"])
+        Bp = _round_up(s["B"], tiles[0])
+        Op = _padded_O(s["O"], tiles[2])
+        j = mk(pcilt_fused_gemv_paired_pallas,
+               sds((Bp, s["G"] * 2 * s["group"]), jnp.float32),
+               sds((1, 1), jnp.float32),
+               sds((s["G"], s["V"], Op), tdt(s)),
+               bits=s["bits"], zero_point=(1 << s["bits"]) // 2,
+               group=s["group"], tiles=tiles, interpret=True)
+        return j, tiles
+
+    PAIRED_STACKED_SWEEP = {
+        "quick": [dict(B=8, L=2, G=8, V=256, O=128, group=2, bits=2,
+                       itemsize=4)],
+        "full": [dict(B=8, L=2, G=8, V=256, O=128, group=2, bits=2,
+                      itemsize=4),
+                 dict(B=1, L=4, G=16, V=16, O=128, group=1, bits=2,
+                      itemsize=2)],
+    }
+
+    def paired_stacked_cands(s, budget):
+        return atn.paired_stacked_gemv_candidates(
+            s["B"], s["L"], s["G"], s["V"], s["O"], s["itemsize"],
+            scratch_budget=budget)
+
+    def paired_stacked_trace(s, c):
+        tiles = ops._fit_tiles((c.Bb, c.Gb, c.Ob), s["B"], s["G"], s["O"])
+        Bp = _round_up(s["B"], tiles[0])
+        Op = _padded_O(s["O"], tiles[2])
+        j = mk(pcilt_fused_gemv_paired_stacked_pallas,
+               sds((1,), jnp.int32),
+               sds((Bp, s["G"] * 2 * s["group"]), jnp.float32),
+               sds((1, 1), jnp.float32),
+               sds((s["G"], s["L"], s["V"], Op), tdt(s)),
+               bits=s["bits"], zero_point=(1 << s["bits"]) // 2,
+               group=s["group"], tiles=tiles, interpret=True)
+        return j, tiles
+
+    # -- plan-gather gemv (generalized SegmentPlans on the fused path) -----
+    # Same one-hot contraction (and so the same generator + scratch model +
+    # witness) as fused_gemv; only the in-VMEM plan gather differs.
+
+    def plan_trace(s, c):
+        tiles = ops._fit_tiles((c.Bb, c.Gb, c.Ob), s["B"], s["G"], s["O"])
+        Bp = _round_up(s["B"], tiles[0])
+        Op = _padded_O(s["O"], tiles[2])
+        j = mk(pcilt_fused_gemv_plan_pallas,
+               sds((Bp, s["G"] * s["group"]), jnp.float32),
+               sds((1, 1), jnp.float32),
+               sds((s["G"], s["group"]), jnp.int32),
+               sds((s["G"], s["V"], Op), tdt(s)),
                bits=s["bits"], zero_point=(1 << s["bits"]) // 2,
                group=s["group"], tiles=tiles, interpret=True)
         return j, tiles
@@ -408,6 +492,13 @@ def _build_families() -> List[Family]:
         Family("fused_gemv_stacked", _kpath("pcilt_fused.py"), STACKED_SWEEP,
                stacked_cands, gemv_scratch, fused_gemv_witness,
                stacked_trace),
+        Family("fused_gemv_paired", _kpath("pcilt_fused.py"), PAIRED_SWEEP,
+               paired_cands, paired_scratch, paired_witness, paired_trace),
+        Family("fused_gemv_paired_stacked", _kpath("pcilt_fused.py"),
+               PAIRED_STACKED_SWEEP, paired_stacked_cands, paired_scratch,
+               paired_witness, paired_stacked_trace),
+        Family("fused_gemv_plan", _kpath("pcilt_fused.py"), GEMV_SWEEP,
+               gemv_cands, gemv_scratch, fused_gemv_witness, plan_trace),
         Family("conv2d_host", _kpath("pcilt_conv2d.py"), CONV_SWEEP,
                host_conv_cands, host_conv_scratch, host_conv_witness,
                host_conv_trace),

@@ -65,7 +65,7 @@ from jax.sharding import PartitionSpec as P
 
 from .quantization import QuantSpec, quantize
 from .offsets import SegmentPlan, pack_offsets
-from .pcilt import (SharedGroupedTables, ShardedSharedPool,
+from .pcilt import (SharedTables, SharedGroupedTables, ShardedSharedPool,
                     build_grouped_tables, shard_shared_grouped_tables)
 
 __all__ = [
@@ -150,28 +150,52 @@ def _check_contiguous_segments(path: str, plan, n: int, n_segments: int,
                                group: int) -> None:
     """Typed boundary validation for the in-kernel-packing paths.
 
-    ``path="fused"`` / ``path="shared"`` pack contiguous segments inside the
-    kernel, so a generalized ``SegmentPlan`` (non-adjacent / skipped /
-    reused positions) cannot execute there — reject it here, at the dispatch
-    boundary, instead of letting a bare shape error surface from deep inside
-    the kernel wrapper.  Catches both spellings of the mistake: an explicit
-    ``plan=`` argument, and tables *built* with a generalized plan (their
-    segment count no longer satisfies ``G * group == n``).
+    ``path="shared"`` packs contiguous segments inside the kernel, so a
+    generalized ``SegmentPlan`` (non-adjacent / skipped / reused positions)
+    cannot execute there — reject it here, at the dispatch boundary, instead
+    of letting a bare shape error surface from deep inside the kernel
+    wrapper.  ``path="fused"`` *does* run generalized plans (the plan-gather
+    kernel resolves the index in VMEM), so this helper only sees
+    ``plan=None`` on the fused route — the residual check catches tables
+    *built* with a generalized plan but dispatched without passing it
+    (their segment count no longer satisfies ``G * group == n``).
     """
     if plan is not None:
         raise ValueError(
             f"path={path!r} packs contiguous segments in-kernel and cannot "
             f"follow a generalized SegmentPlan; drop plan= (contiguous "
-            f"default) or use the host-packed paths ('gather'/'onehot'/"
+            f"default), use path='fused' (which gathers the plan index in "
+            f"VMEM), or use the host-packed paths ('gather'/'onehot'/"
             f"'kernel'), which honor plan.pack()")
     if n != n_segments * group:
         raise ValueError(
             f"path={path!r} requires contiguous segments covering the "
             f"reduction dim: got x trailing dim {n} but G*group = "
             f"{n_segments}*{group} = {n_segments * group}. Tables built from "
-            f"a generalized SegmentPlan (skipped/reused positions) execute "
-            f"on the host-packed paths ('gather'/'onehot'/'kernel') with the "
-            f"same plan passed as plan=")
+            f"a generalized SegmentPlan (skipped/reused positions) need that "
+            f"plan passed as plan= (path='fused' runs it via the in-VMEM "
+            f"plan gather; 'gather'/'onehot'/'kernel' via plan.pack())")
+
+
+def _pad_paired_phantom(x: jax.Array, n_pairs: int, group: int) -> jax.Array:
+    """Zero-pad ``x`` over the phantom segment of an odd-``G`` pairing.
+
+    Paired tables cover ``n_pairs`` two-segment fetches; when the unpaired
+    segment count was odd the builder padded a phantom segment whose table
+    column is exactly zero (``build_paired_tables``), so the matching
+    activation slots are zero here — any code they quantize to fetches 0.
+    """
+    want = n_pairs * 2 * group
+    n = x.shape[-1]
+    if n == want:
+        return x
+    if n == want - group:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, group)]
+        return jnp.pad(x, widths)
+    raise ValueError(
+        f"x trailing dim {n} matches neither G2*2*group = {want} nor the "
+        f"odd-G phantom layout {want - group} for paired tables with "
+        f"G2={n_pairs}, group={group}")
 
 
 def _shard_pool_for(tables: SharedGroupedTables,
@@ -189,7 +213,7 @@ def _shard_pool_for(tables: SharedGroupedTables,
 
 
 def _pcilt_linear_sharded(x, tables, spec, scale, group, path, mesh,
-                          mesh_axis) -> jax.Array:
+                          mesh_axis, paired: bool = False) -> jax.Array:
     """Run one fetch-and-sum layer under ``shard_map`` over local G-shards.
 
     Each device executes the unsharded layer on its table shard and the
@@ -216,7 +240,8 @@ def _pcilt_linear_sharded(x, tables, spec, scale, group, path, mesh,
         )(flat, tables.pools, tables.seg_idx)
     else:
         def shard_fn(xl, tab_l):
-            part = pcilt_linear(xl, tab_l, spec, scale, group, path=path)
+            part = pcilt_linear(xl, tab_l, spec, scale, group, path=path,
+                                paired=paired)
             return jax.lax.psum(part, mesh_axis)
 
         out = compat.shard_map(
@@ -257,6 +282,91 @@ def _pcilt_linear_stacked_sharded(x, tables, layer, spec, scale, group,
     return out.reshape(*lead, out.shape[-1])
 
 
+def _pcilt_linear_paired_stacked_sharded(x, tables, layer, spec, scale,
+                                         group, mesh, mesh_axis) -> jax.Array:
+    """Seg-major paired stack ``[G2, L, V2, O]`` under ``shard_map``: shards
+    split the *pair* axis (axis 0 — the ``"table_seg"`` position for
+    ``ndim=4, seg_axis=0`` in ``pcilt_table_sharding``), each device runs
+    the paired stacked kernel over its resident ``[G2/D, L, V2, O]`` shard,
+    and one ``psum`` per step combines the partial adder-tree sums."""
+    from repro import compat
+    from repro.kernels import ops  # local import: kernels are optional
+
+    lead = x.shape[:-1]
+    flat = x.reshape(-1, x.shape[-1])
+    l1 = jnp.asarray(layer, jnp.int32).reshape(1)
+
+    def shard_fn(xl, tab_l, lyr):
+        part = ops.pcilt_fused_gemv_paired_stacked(xl, tab_l, lyr[0], spec,
+                                                   scale, group)
+        return jax.lax.psum(part, mesh_axis)
+
+    out = compat.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(None, mesh_axis), P(mesh_axis, None, None, None), P()),
+        out_specs=P(), check_vma=False,
+    )(flat, tables, l1)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def _pcilt_linear_paired(x, tables, spec, scale, group, path, mesh,
+                         mesh_axis, stacked) -> jax.Array:
+    """The paired (TL1-style multi-scalar) routes of :func:`pcilt_linear`.
+
+    ``tables`` is a paired ``[G2, V2, out]`` array
+    (``build_paired_tables``) or, with ``stacked=``, the **segment-major**
+    ``[G2, L, V2, out]`` stack (``build_paired_stacked_tables``).  ``x`` is
+    zero-padded over the odd-``G`` phantom segment here, once, before any
+    shard split — so mesh divisibility is judged on the padded layout.
+    The host-packed reference paths fall out for free: a paired table *is*
+    a grouped table at width ``2*group``, so ``gather``/``onehot``/
+    ``kernel`` recurse into the dense layer with the doubled group.
+    """
+    pair = 2 * group
+    if stacked is not None:
+        if tables.ndim != 4:
+            raise ValueError(
+                f"paired stacked= expects seg-major [G2, L, V2, O] tables "
+                f"(build_paired_stacked_tables), got shape {tables.shape}")
+        G2, L, V2, O = tables.shape
+        x = _pad_paired_phantom(x, G2, group)
+        if path == "fused":
+            if mesh_shard_count(mesh, mesh_axis, G2) > 1:
+                return _pcilt_linear_paired_stacked_sharded(
+                    x, tables, stacked, spec, scale, group, mesh, mesh_axis)
+            from repro.kernels import ops  # local import: kernels optional
+
+            flat = x.reshape(-1, x.shape[-1])
+            out = ops.pcilt_fused_gemv_paired_stacked(
+                flat, tables, stacked, spec, scale, group)
+            return out.reshape(*x.shape[:-1], O)
+        # Reference / host-packed baseline: slice the layer out of the
+        # seg-major stack (axis 1) and run it as a dense grouped table at
+        # the doubled group width.
+        tab_l = jax.lax.dynamic_index_in_dim(
+            tables, jnp.asarray(stacked, jnp.int32), 1, keepdims=False)
+        return pcilt_linear(x, tab_l, spec, scale, pair, path=path)
+    if tables.ndim != 3:
+        raise ValueError(
+            f"paired tables are [G2, V2, O] (build_paired_tables), got "
+            f"shape {tables.shape}")
+    G2, V2, O = tables.shape
+    x = _pad_paired_phantom(x, G2, group)
+    if path == "fused":
+        if mesh_shard_count(mesh, mesh_axis, G2) > 1:
+            return _pcilt_linear_sharded(x, tables, spec, scale, group,
+                                         path, mesh, mesh_axis, paired=True)
+        from repro.kernels import ops  # local import: kernels are optional
+
+        flat = x.reshape(-1, x.shape[-1])
+        out = ops.pcilt_fused_gemv_paired(flat, tables, spec, scale, group)
+        return out.reshape(*x.shape[:-1], O)
+    # gather/onehot/kernel reference (and their sharded forms): a paired
+    # table is exactly a grouped table of width 2*group.
+    return pcilt_linear(x, tables, spec, scale, pair, path=path, mesh=mesh,
+                        mesh_axis=mesh_axis)
+
+
 def pcilt_linear(
     x: jax.Array,
     tables,
@@ -268,6 +378,7 @@ def pcilt_linear(
     mesh=None,
     mesh_axis: str = "model",
     stacked=None,
+    paired: bool = False,
 ) -> jax.Array:
     """Quantize -> pack offsets -> fetch -> sum.   ``x: [..., n] -> [..., out]``.
 
@@ -287,6 +398,29 @@ def pcilt_linear(
     (paying exactly that copy; they exist for parity and as the baseline
     the stacked kernel is benchmarked against).
 
+    With ``paired=True``, ``tables`` is the TL1-style multi-scalar layout:
+    ``[G2, V2, out]`` from ``build_paired_tables`` (or, stacked, the
+    segment-major ``[G2, L, V2, out]`` from ``build_paired_stacked_tables``)
+    where each fetch covers **two** adjacent ``group``-wide segments.  ``x``
+    keeps the *unpaired* layout — the layer zero-pads the odd-``G`` phantom
+    segment itself — and ``group`` stays the unpaired width.
+    ``path="fused"`` runs the row-gather paired kernels (halved fetch count
+    and adder-tree depth); the host-packed paths execute the paired table
+    as a dense grouped table of width ``2*group``.  Mesh execution shards
+    the pair axis (``pcilt_table_sharding(..., ndim=4, seg_axis=0)`` for
+    the seg-major stack).
+
+    A generalized ``SegmentPlan`` with ``path="fused"`` executes via the
+    plan-gather kernel (``pcilt_fused_gemv_plan``): the plan index is
+    gathered in VMEM before the standard quantize→pack→fetch, so plan-built
+    tables no longer fall back to the host-packed paths.
+
+    A scalar-level :class:`~repro.core.pcilt.SharedTables` (per-unique-value
+    pool) is accepted on ``path="shared"``/``"gather"``: it is re-expressed
+    as its 1-wide segment pool (``SharedTables.as_grouped_pool``) and runs
+    the fused shared kernel / pointer-gather — ``materialize()`` is never
+    called.
+
     With ``mesh=``, the segment axis is sharded over ``mesh_axis`` and the
     partial sums are ``psum``-combined (see the module docstring); without a
     mesh — or when the axis does not divide ``G`` — execution is the
@@ -294,6 +428,32 @@ def pcilt_linear(
     (its positions are arbitrary): combining ``plan=`` with a mesh that
     would shard raises rather than silently replicating.
     """
+    if isinstance(tables, SharedTables):
+        if paired:
+            raise ValueError(
+                "paired tables are dense [G2, V2, O] arrays; scalar-level "
+                "SharedTables pools have no paired layout")
+        # Scalar-level ext.-3: each weight position is a 1-wide segment over
+        # the deduped pointer-row pool; group becomes the pool's (1).
+        tables = tables.as_grouped_pool()
+        group = tables.group
+    if paired:
+        if plan is not None:
+            raise ValueError(
+                "paired tables pack adjacent contiguous segment pairs; "
+                "generalized SegmentPlans cannot pair — drop plan= or use "
+                "the unpaired paths")
+        if isinstance(tables, (SharedGroupedTables, ShardedSharedPool)):
+            raise ValueError(
+                "paired=True consumes dense paired [G2, V2, O] tables "
+                "(build_paired_tables); shared pools have no paired layout")
+        if path == "shared":
+            raise ValueError(
+                "path='shared' has no paired variant; paired tables run "
+                "path='fused' (row-gather kernels) or the host-packed "
+                "reference paths")
+        return _pcilt_linear_paired(x, tables, spec, scale, group, path,
+                                    mesh, mesh_axis, stacked)
     if stacked is not None:
         if isinstance(tables, (SharedGroupedTables, ShardedSharedPool)):
             raise ValueError(
@@ -368,7 +528,15 @@ def pcilt_linear(
             "path='fused' consumes dense [G, V, O] tables; use "
             "path='shared' for a SharedGroupedTables pool (or "
             "materialize() it explicitly)")
-    if path in ("fused", "shared"):
+    if path == "fused" and plan is not None:
+        # Generalized plans run fused via the in-VMEM plan gather — only
+        # validate that the plan and tables agree on the segment grid.
+        if plan.n_segments != n_segments or plan.group != group:
+            raise ValueError(
+                f"plan grid [{plan.n_segments}, {plan.group}] does not match "
+                f"tables' [{n_segments}, {group}] — tables must be built "
+                f"from plan.gather_weights(...)")
+    elif path in ("fused", "shared"):
         _check_contiguous_segments(path, plan, x.shape[-1], n_segments, group)
 
     D = mesh_shard_count(mesh, mesh_axis,
@@ -405,7 +573,12 @@ def pcilt_linear(
 
         G, _, O = tables.shape
         flat = x.reshape(-1, x.shape[-1])
-        out = ops.pcilt_fused_gemv(flat, tables, spec, scale, group)
+        if plan is not None:
+            out = ops.pcilt_fused_gemv_plan(
+                flat, tables, jnp.asarray(plan.index, jnp.int32), spec,
+                scale, group)
+        else:
+            out = ops.pcilt_fused_gemv(flat, tables, spec, scale, group)
         return out.reshape(*x.shape[:-1], O)
     codes = quantize(x, spec, scale)
     if plan is None:

@@ -61,6 +61,7 @@ If the mesh axis does not divide ``G``, execution falls back to replication
 from __future__ import annotations
 
 import dataclasses
+import functools
 import zlib
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -76,6 +77,8 @@ __all__ = [
     "log_mul_fn",
     "build_scalar_tables",
     "build_grouped_tables",
+    "build_paired_tables",
+    "build_paired_stacked_tables",
     "SharedTables",
     "build_shared_tables",
     "SharedGroupedTables",
@@ -178,6 +181,70 @@ def build_grouped_tables(
     return jnp.concatenate(chunks, axis=1)
 
 
+def build_paired_tables(
+    w: jax.Array,
+    spec: QuantSpec,
+    scale,
+    group: int,
+    fn: Callable = mul_fn,
+    dtype=jnp.float32,
+    build_chunk: int = 4096,
+) -> jax.Array:
+    """TL1-style paired (multi-scalar) tables: ``[ceil(G/2), V**2, out]``.
+
+    Pairs adjacent ``group``-wide segments into one double-wide segment so a
+    single fetch covers *two* segments' worth of weights: the table trades
+    ``V`` entries for ``V**2`` while halving the segment count ``G`` — half
+    the fetches, half the adder-tree depth on the hot decode path.
+
+    The paired index is **little-endian in the pair**, matching the fused
+    kernels' ``_pack_flat`` shift-or over ``2*group`` codes::
+
+        paired_off = off_even + off_odd * V        (V = K**group)
+
+    so ``T2[s, off_even + off_odd*V] == T[2s, off_even] + T[2s+1, off_odd]``
+    exactly (each paired entry is a single pre-summed dot over the combined
+    ``2*group`` weights — same summation the unpaired pair of fetches adds at
+    runtime).  When ``G`` is odd, ``w`` is zero-padded by one phantom segment
+    whose table column is exactly zero under ``mul_fn`` (``0 * val == 0``),
+    so parity with the unpaired tables holds bit-exactly.  ``dtype`` may be
+    bf16 — the build is one einsum in ``dtype``, same as the unpaired build.
+    """
+    n, out = w.shape
+    pair = 2 * group
+    pad = (-n) % pair
+    if pad:
+        w = jnp.concatenate([w, jnp.zeros((pad, out), w.dtype)], axis=0)
+    return build_grouped_tables(w, spec, scale, pair, fn=fn, dtype=dtype,
+                                build_chunk=build_chunk)
+
+
+def build_paired_stacked_tables(
+    ws: jax.Array,
+    spec: QuantSpec,
+    scales,
+    group: int,
+    fn: Callable = mul_fn,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Layer-stacked paired tables in **segment-major** layout
+    ``[G2, L, V**2, out]`` (``G2 = ceil(G/2)``).
+
+    ``ws`` is ``[L, n, out]`` (one projection per layer), ``scales`` is
+    ``[L]``.  Segment-major rather than the dense stack's layer-major
+    ``[L, G, V, O]`` so the stacked paired kernel can fold the layer into the
+    table's *value* axis: the BlockSpec stages a ``[Gb, L, V**2, Ob]`` block
+    whose segment index is constant in the prefetched layer, and the kernel
+    indexes row ``l*V**2 + off`` of the reshaped ``[Gb, L*V**2, Ob]`` block —
+    a constant-iota row-gather XLA lowers to its batched fast path, instead
+    of the traced-layer general gather that made the dense layout slow.
+    """
+    build = functools.partial(build_paired_tables, spec=spec, group=group,
+                              fn=fn, dtype=dtype)
+    t = jax.vmap(lambda w, s: build(w, scale=s))(ws, scales)  # [L, G2, V2, O]
+    return jnp.transpose(t, (1, 0, 2, 3))
+
+
 # ----------------------------------------------------------------------------
 # Shared tables (extension 3)
 # ----------------------------------------------------------------------------
@@ -200,17 +267,58 @@ class SharedTables:
     w_idx: jax.Array  # [n, out] uint16 pointers into pool rows
     unique_w: jax.Array  # [X]
     value_pool: Optional[jax.Array] = None  # [U] unique table values
+    #: lazily-built 1-wide segment pool (offline np.unique — built once)
+    _grouped: Optional["SharedGroupedTables"] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def as_grouped_pool(self) -> "SharedGroupedTables":
+        """The scalar pool re-expressed as a 1-wide segment pool
+        (:class:`SharedGroupedTables` with ``group=1``).
+
+        Each of the ``n`` weight positions is a 1-wide segment whose table is
+        the ``[K, out]`` slice its pointer row selects; positions with
+        bit-identical pointer rows share one pool row, so the pool holds only
+        the ``X' <= n`` *distinct rows of the pointer matrix* — never the
+        dense ``[n, K, out]`` tables ``materialize()`` expands in HBM.  This
+        is how the scalar-level extension-3 representation reaches the fused
+        shared kernel (``path="shared"``) and the pointer-gather lookup.
+        Must run outside jit (``np.unique`` on concrete pointers — part of
+        the offline table build; the result is cached on the instance).
+        """
+        if self._grouped is None:
+            pool = self.pool
+            if self.value_pool is not None:
+                pool = self.value_pool[pool]
+            idx = np.asarray(self.w_idx)
+            rows, inv = np.unique(idx, axis=0, return_inverse=True)  # [X',out]
+            seg_pool = jnp.transpose(
+                jnp.take(jnp.asarray(pool), jnp.asarray(rows), axis=0),
+                (0, 2, 1))  # [X', out, K] -> [X', K, out]
+            self._grouped = SharedGroupedTables(
+                pool=seg_pool,
+                seg_idx=jnp.asarray(inv.reshape(-1), jnp.int32),
+                group=1,
+            )
+        return self._grouped
 
     def lookup(self, codes: jax.Array) -> jax.Array:
-        """codes ``[..., n]`` -> summed dot result ``[..., out]`` (gather path)."""
-        full = self.materialize()  # [n, K, out]
-        g = jnp.take_along_axis(
-            full[None], codes[..., :, None, None].astype(jnp.int32), axis=2
-        )  # [..., n, 1, out]
-        return jnp.sum(g[..., 0, :], axis=-2)
+        """codes ``[..., n]`` -> summed dot result ``[..., out]``.
+
+        Routed through the 1-wide segment pool's pointer-gather
+        (:meth:`as_grouped_pool`): two advanced indexes on the deduped pool
+        and one adder-tree sum — the dense ``[n, K, out]`` tables are never
+        materialized in HBM.  Table-bytes accounting is unchanged (the pool
+        is the same ``[X', K]``-cell storage, only re-blocked per segment).
+        """
+        return self.as_grouped_pool().lookup(codes.astype(jnp.int32))
 
     def materialize(self) -> jax.Array:
-        """Expand pointers back into dense per-weight tables ``[n, K, out]``."""
+        """Expand pointers back into dense per-weight tables ``[n, K, out]``.
+
+        Exists for parity tests and memory-accounting comparisons only — the
+        execution paths (:meth:`lookup`, ``path="shared"``) go through
+        :meth:`as_grouped_pool` and never call this.
+        """
         pool = self.pool
         if self.value_pool is not None:
             pool = self.value_pool[pool]
@@ -529,9 +637,12 @@ def table_checksum(arr) -> int:
     return zlib.crc32(a.tobytes())
 
 
-def stacked_checksums(arr) -> List[int]:
-    """Per-leading-axis-slice CRC-32s for a stacked table (``[L, ...]``) —
-    one checksum per layer, so verification localizes a breach to the layer
-    that must be demoted."""
+def stacked_checksums(arr, axis: int = 0) -> List[int]:
+    """Per-layer CRC-32s for a stacked table — one checksum per slice along
+    ``axis``, so verification localizes a breach to the layer that must be
+    demoted.  Dense stacks are layer-major (``[L, G, V, O]``, ``axis=0``);
+    paired stacks are segment-major (``[G2, L, V**2, O]``, ``axis=1``)."""
     a = np.asarray(arr)
+    if axis:
+        a = np.moveaxis(a, axis, 0)
     return [table_checksum(a[i]) for i in range(a.shape[0])]

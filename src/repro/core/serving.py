@@ -49,7 +49,10 @@ def pcilt_integrity(pcilt: Dict) -> Dict:
     integ: Dict[str, Any] = {"conv": stacked_checksums(pcilt["tables"])}
     proj = pcilt.get("proj")
     if proj is not None:
-        integ["proj"] = {name: stacked_checksums(t)
+        # paired bundles stack seg-major ([G/2, L, V^2, O]) so the fused
+        # kernel's table blocks are contiguous; the layer axis is axis 1
+        axis = 1 if proj.get("paired") else 0
+        integ["proj"] = {name: stacked_checksums(t, axis=axis)
                         for name, t in proj["tables"].items()}
     head = pcilt.get("head")
     if head is not None:
@@ -595,8 +598,9 @@ class PCILTMambaDecode:
         proj = self.pcilt.get("proj")
         if proj is not None:
             for name, t in proj["tables"].items():
-                if table_checksum(np.asarray(t)[layer]) != \
-                        integ["proj"][name][layer]:
+                sl = (np.asarray(t)[:, layer] if proj.get("paired")
+                      else np.asarray(t)[layer])
+                if table_checksum(sl) != integ["proj"][name][layer]:
                     bad.append((name, int(layer)))
         return bad
 
@@ -637,25 +641,40 @@ class PCILTMambaDecode:
     def tune(self, batch: int = 1) -> None:
         """Eagerly autotune each projection's stacked kernel at this decode
         batch size (layer 0 is representative: the per-layer staged slice is
-        what the kernel tiles, and the shape key is layer-independent).
-        Under a mesh, tuning runs on the local ``[L, G/D, V, O]`` shard —
-        the problem each device's kernel dispatches."""
+        what the kernel tiles, and the shape key is layer-independent), plus
+        the conv frontend's fused dwconv key on the assembled ``[B, k, C]``
+        decode window.  Paired bundles tune the paired stacked kernel on the
+        seg-major ``[G/2, L, V^2, O]`` stack.  Under a mesh, tuning runs on
+        the local shard — the problem each device's kernel dispatches."""
         from repro.core.lut_layers import mesh_shard_count
         from repro.kernels import ops  # local import: kernels are optional
 
+        conv_t = self.pcilt["tables"]  # [L, C, V]
+        k = self.model.cfg.ssm.conv_kernel
+        win = jnp.zeros((batch, k, conv_t.shape[1]), jnp.float32)
+        ops.pcilt_fused_dwconv1d(win, conv_t[0], self.pcilt["spec"],
+                                 self.pcilt["scale"], k, padding="VALID",
+                                 autotune=True)
         proj = self.pcilt.get("proj")
         if proj is None or proj.get("path") != "fused":
             return
         group = proj["group"]
+        paired = bool(proj.get("paired"))
         for name, t in proj["tables"].items():
-            G = t.shape[1]
+            G = t.shape[0] if paired else t.shape[1]
             D = mesh_shard_count(proj.get("mesh"),
                                  proj.get("mesh_axis", "model"), G)
             Gl = G // D
-            x = jnp.zeros((batch, Gl * group), jnp.float32)
-            ops.pcilt_fused_gemv_stacked(
-                x, t[:, :Gl], 0, proj["spec"], proj["scales"][name][0],
-                group, autotune=True)
+            if paired:
+                x = jnp.zeros((batch, Gl * 2 * group), jnp.float32)
+                ops.pcilt_fused_gemv_paired_stacked(
+                    x, t[:Gl], 0, proj["spec"], proj["scales"][name][0],
+                    group, autotune=True)
+            else:
+                x = jnp.zeros((batch, Gl * group), jnp.float32)
+                ops.pcilt_fused_gemv_stacked(
+                    x, t[:, :Gl], 0, proj["spec"], proj["scales"][name][0],
+                    group, autotune=True)
 
 
 class HealthMonitor:
@@ -745,15 +764,17 @@ class HealthMonitor:
         proj = self.decode.pcilt.get("proj")
         if proj is None or "wx" not in proj["tables"]:
             return True
-        t = proj["tables"]["wx"]  # [L, G, V, O]
+        t = proj["tables"]["wx"]  # [L, G, V, O] (paired: [G/2, L, V^2, O])
         spec, group = proj["spec"], proj["group"]
+        paired = bool(proj.get("paired"))
         scale = proj["scales"]["wx"][layer]
         x = self._probe
-        pad = t.shape[1] * group - x.shape[-1]
+        n = t.shape[0] * 2 * group if paired else t.shape[1] * group
+        pad = n - x.shape[-1]
         xx = np.concatenate(
             [x, np.zeros((x.shape[0], pad), x.dtype)], -1) if pad else x
         got = pcilt_linear(jnp.asarray(xx), t, spec, scale, group,
-                           path="gather", stacked=int(layer))
+                           path="gather", stacked=int(layer), paired=paired)
         k = self.params["blocks"]["mixer"]["wx"]["kernel"][layer]
         want = fake_quant(jnp.asarray(x), spec, scale) @ k.astype(jnp.float32)
         return bool(np.allclose(np.asarray(got), np.asarray(want),
@@ -794,7 +815,7 @@ class HealthMonitor:
 def convert_mamba_decode(model, params, calib_tokens, ctx=None, *,
                          proj_path: str = "fused", projections=None,
                          mesh=None, mesh_axis: str = "model",
-                         table_dtype=jnp.float32,
+                         table_dtype=jnp.float32, paired: bool = False,
                          head: Optional[str] = None) -> PCILTMambaDecode:
     """Offline full-PCILT conversion of a ``MambaLM`` decode step.
 
@@ -817,7 +838,11 @@ def convert_mamba_decode(model, params, calib_tokens, ctx=None, *,
     (``"fused"`` is the deployment path; ``"kernel"`` is the host-packed
     baseline the benchmark measures against; ``"dense_fq"`` the parity
     oracle).  ``table_dtype=jnp.bfloat16`` halves table memory (the stacked
-    kernel contracts and accumulates f32 either way).  ``head="shared"``
+    kernel contracts and accumulates f32 either way).  ``paired=True``
+    builds TL1-style paired multi-scalar tables instead — adjacent segment
+    pairs merge into ``[G/2, L, V^2, O]`` seg-major stacks, halving fetches
+    per output at ``V^2`` table width (``docs/paired_tables.md``); parity
+    with the unpaired build is exact.  ``head="shared"``
     additionally converts the logits head to a shared-pool (ext.-3) PCILT
     calibrated on the ``ln_f`` output absmax.  The returned executor carries
     the bundle's conversion-time integrity record, verified at load.
@@ -847,7 +872,7 @@ def convert_mamba_decode(model, params, calib_tokens, ctx=None, *,
     pcilt = model.build_pcilt(
         params, to_scale(amax["conv_in"]), proj_scales=proj_scales,
         proj_path=proj_path, projections=projections, mesh=mesh,
-        mesh_axis=mesh_axis, table_dtype=table_dtype,
+        mesh_axis=mesh_axis, table_dtype=table_dtype, paired=paired,
         head_scale=to_scale(amax["head_in"]) if head == "shared" else None)
     return PCILTMambaDecode(model, pcilt, ctx)
 

@@ -102,6 +102,8 @@ __all__ = [
     "tune",
     "gemv_candidates",
     "stacked_gemv_candidates",
+    "paired_gemv_candidates",
+    "paired_stacked_gemv_candidates",
     "conv2d_candidates",
     "shared_gemv_candidates",
     "shared_conv2d_candidates",
@@ -431,6 +433,110 @@ def stacked_gemv_candidates(B: int, L: int, G: int, V: int, O: int,
     """
     del L  # enters the shape key, not the tiling space (per-layer staging)
     return gemv_candidates(B, G, V, O, itemsize, scratch_budget=scratch_budget)
+
+
+def _fit_paired_gb(G: int, R: int, Ob: int,
+                   budget: float = SCRATCH_BUDGET) -> int:
+    """Largest segment-tile whose per-grid-step *gather* scratch fits
+    ``budget``: the f32 ``[Gb, R, Ob]`` fetched rows plus the ``[R, Gb]``
+    pair-index plane.  The paired kernels fetch table rows with
+    ``take_along_axis`` — they never build a one-hot — so unlike
+    :func:`_fit_scratch_gb` there is **no V factor**: scratch scales with
+    the output tile, not the table cardinality, which is exactly why the
+    V→V² trade is free on the activation side.  Returns the largest
+    ``Gb | G`` admitted (>= 1)."""
+    per_gb = max(R * Ob * 4 + R * 4, 1)
+    if math.isinf(budget):
+        cap = G
+    else:
+        cap = max(1, int(budget // per_gb))
+    Gb = max(1, min(G, cap))
+    while G % Gb:
+        Gb -= 1
+    return Gb
+
+
+def paired_gemv_candidates(B: int, G: int, V: int, O: int, itemsize: int = 4,
+                           scratch_budget: float = SCRATCH_BUDGET
+                           ) -> List[TileConfig]:
+    """Tilings for the paired-table GEMV (``fused_gemv_paired`` keys).
+
+    ``G`` and ``V`` are **paired-space**: ``G`` counts segment *pairs*
+    (``ceil(G_dense / 2)``) and ``V`` is the squared cardinality
+    (``V_dense**2``), matching the ``[G, V, O]`` operand the kernel stages.
+    Candidate 0 is the staging heuristic (:func:`_fit_gb` keeps the
+    ``[Gb, V, Ob]`` table tile under the 8 MiB budget — the no-tune
+    fallback must never oversubscribe VMEM), later candidates trade staging
+    for fewer grid steps up to the single-step ``(Gb=G, Ob=O)``
+    configuration that usually wins on CPU interpret, and every ``Gb`` is
+    clamped by the gather scratch bound (:func:`_fit_paired_gb` — no V
+    factor, see there).  An exact-``B`` row tile rides along: batch-1
+    decode pads to the sublane multiple otherwise, and on interpret the
+    un-padded gather is measurably cheaper.
+    """
+    Bb = min(128, _round_up(max(B, 1), 8))
+    B_exact = max(1, min(B, 128))
+    O_full = _round_up(O, 128) if O >= 128 else O
+    out: List[TileConfig] = []
+    seen = set()
+
+    def add(bb: int, gb: int, ob: int) -> None:
+        gb = max(1, min(gb, _fit_paired_gb(G, bb, ob, budget=scratch_budget)))
+        while G % gb:
+            gb -= 1
+        if (bb, gb, ob) not in seen:
+            seen.add((bb, gb, ob))
+            out.append(TileConfig(Bb=bb, Gb=gb, Ob=ob))
+
+    add(Bb, _fit_gb(G, V, min(128, O_full), itemsize), min(128, O_full))
+    add(Bb, G, O_full)        # single grid step (scratch-clamped)
+    add(B_exact, G, O_full)   # un-padded rows, single step
+    for Ob in (128, O_full):
+        if Ob > O_full:
+            continue
+        add(Bb, _fit_gb(G, V, Ob, itemsize), Ob)
+    return out[:6]
+
+
+def paired_stacked_gemv_candidates(B: int, L: int, G: int, V: int, O: int,
+                                   itemsize: int = 4,
+                                   scratch_budget: float = SCRATCH_BUDGET
+                                   ) -> List[TileConfig]:
+    """Tilings for the seg-major layer-stacked paired GEMV
+    (``fused_gemv_paired_stacked`` keys; ``[G, L, V, O]`` operand).
+
+    Unlike the dense stacked kernel — which scalar-prefetch-selects a
+    per-layer ``[1, Gb, V, Ob]`` slice — the seg-major kernel stages the
+    **whole layer axis** for its segment tile (``[Gb, L, V, Ob]``: the
+    layer index is folded into the flattened value axis so the row-gather's
+    segment iota stays constant), so the staged-table budget acquires an
+    ``L`` factor: the heuristic runs :func:`_fit_gb` at effective
+    cardinality ``L*V``.  The gather scratch bound is L-independent
+    (the fetched ``[Gb, Bb, Ob]`` rows and ``[Bb, Gb]`` indices don't
+    grow with the stack), so :func:`_fit_paired_gb` carries over verbatim.
+    """
+    Bb = min(128, _round_up(max(B, 1), 8))
+    B_exact = max(1, min(B, 128))
+    O_full = _round_up(O, 128) if O >= 128 else O
+    out: List[TileConfig] = []
+    seen = set()
+
+    def add(bb: int, gb: int, ob: int) -> None:
+        gb = max(1, min(gb, _fit_paired_gb(G, bb, ob, budget=scratch_budget)))
+        while G % gb:
+            gb -= 1
+        if (bb, gb, ob) not in seen:
+            seen.add((bb, gb, ob))
+            out.append(TileConfig(Bb=bb, Gb=gb, Ob=ob))
+
+    add(Bb, _fit_gb(G, L * V, min(128, O_full), itemsize), min(128, O_full))
+    add(Bb, G, O_full)        # single grid step (scratch-clamped)
+    add(B_exact, G, O_full)   # un-padded rows, single step
+    for Ob in (128, O_full):
+        if Ob > O_full:
+            continue
+        add(Bb, _fit_gb(G, L * V, Ob, itemsize), Ob)
+    return out[:6]
 
 
 def conv2d_candidates(Ho: int, G: int, V: int, O: int, itemsize: int = 4,

@@ -67,6 +67,9 @@ from .pcilt_conv2d import pcilt_conv2d_pallas
 from .pcilt_dwconv1d import pcilt_dwconv1d_pallas, pcilt_fused_dwconv1d_pallas
 from .pcilt_fused import (pcilt_fused_gemv_pallas,
                           pcilt_fused_gemv_stacked_pallas,
+                          pcilt_fused_gemv_paired_pallas,
+                          pcilt_fused_gemv_paired_stacked_pallas,
+                          pcilt_fused_gemv_plan_pallas,
                           pcilt_fused_conv2d_pallas)
 from .pcilt_shared import (pcilt_shared_gemv_pallas,
                            pcilt_shared_conv2d_pallas)
@@ -77,6 +80,9 @@ __all__ = [
     "pcilt_dwconv1d",
     "pcilt_fused_gemv",
     "pcilt_fused_gemv_stacked",
+    "pcilt_fused_gemv_paired",
+    "pcilt_fused_gemv_paired_stacked",
+    "pcilt_fused_gemv_plan",
     "pcilt_fused_conv2d",
     "pcilt_fused_dwconv1d",
     "pcilt_shared_gemv",
@@ -439,6 +445,206 @@ def _fused_gemv_stacked_bench(l1, x, s2, tables, cfg, kw):
     tp, _ = _pad_axis(tables, 3, tiles[2] if O >= 128 else 1)
     return lambda: pcilt_fused_gemv_stacked_pallas(
         l1, xp, s2, tp, tiles=tiles, **kw
+    ).block_until_ready()
+
+
+def pcilt_fused_gemv_paired(
+    x: jax.Array,
+    tables: jax.Array,
+    spec,
+    scale,
+    group: int,
+    tiles=None,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """x [B, n] float, paired tables [G2, V2, O] (``n == G2 * 2 * group``,
+    ``V2 = (2**(bits*group))**2``) -> [B, O].
+
+    The TL1-style multi-scalar dispatch: each fetch covers two adjacent
+    ``group``-wide segments (``core.pcilt.build_paired_tables``), halving
+    the fetch count and adder-tree depth.  Keys record under
+    ``fused_gemv_paired`` with **paired-space** ``G``/``V`` — the shapes
+    the kernel actually stages.
+    """
+    B, n = x.shape
+    G2, V2, O = tables.shape
+    if n != G2 * 2 * group:
+        raise ValueError(
+            f"x trailing dim {n} != G2*2*group = {G2}*2*{group} (pad x over "
+            f"the phantom segment when the unpaired G was odd — "
+            f"core.lut_layers does this for you)")
+    key = atn.shape_key("fused_gemv_paired", dtype=tables.dtype,
+                        backend=jax.default_backend(),
+                        B=B, G=G2, V=V2, O=O, g=group, bits=spec.bits)
+    s2 = _scale_2d(scale, x.dtype)
+    kw = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
+              interpret=not on_tpu())
+    if tiles is None:
+        cfg = atn.lookup(key)
+        if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
+                x, s2, tables):
+            cfg = atn.tune(
+                key,
+                atn.paired_gemv_candidates(B, G2, V2, O,
+                                           tables.dtype.itemsize),
+                lambda c: _fused_gemv_paired_bench(x, s2, tables, c, kw),
+            )
+        if cfg is None:
+            # Candidate 0 keeps the staged [Gb, V2, Ob] tile under the VMEM
+            # budget — the untuned fallback must never oversubscribe.
+            cfg = atn.paired_gemv_candidates(B, G2, V2, O,
+                                             tables.dtype.itemsize)[0]
+        tiles = (cfg.Bb, cfg.Gb, cfg.Ob)
+    tiles = _fit_tiles(tiles, B, G2, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])  # zero rows quantize harmlessly
+    tp, _ = _pad_axis(tables, 2, tiles[2] if O >= 128 else 1)
+    out = pcilt_fused_gemv_paired_pallas(xp, s2, tp, tiles=tiles, **kw)
+    return out[:B, :O]
+
+
+def _fused_gemv_paired_bench(x, s2, tables, cfg, kw):
+    B, G2, O = x.shape[0], tables.shape[0], tables.shape[-1]
+    tiles = _fit_tiles((cfg.Bb, cfg.Gb, cfg.Ob), B, G2, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])
+    tp, _ = _pad_axis(tables, 2, tiles[2] if O >= 128 else 1)
+    return lambda: pcilt_fused_gemv_paired_pallas(
+        xp, s2, tp, tiles=tiles, **kw
+    ).block_until_ready()
+
+
+def pcilt_fused_gemv_paired_stacked(
+    x: jax.Array,
+    tables: jax.Array,
+    layer,
+    spec,
+    scale,
+    group: int,
+    tiles=None,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """x [B, n] float, **segment-major** paired tables [G2, L, V2, O]
+    (``n == G2 * 2 * group``), layer a (possibly traced) int scalar
+    -> [B, O].
+
+    The paired decode dispatch: the whole network's paired tables live in
+    one segment-major stack (``core.pcilt.build_paired_stacked_tables``)
+    and the scan's layer index rides the fetch's value coordinate (the
+    kernel folds L into the gathered row), so staging is layer-independent
+    and the traced layer costs nothing.  Keys record under
+    ``fused_gemv_paired_stacked`` with paired-space ``G``/``V`` plus ``L``;
+    under a mesh the wrapper sees one device's ``[G2/D, L, V2, O]`` shard
+    and keys carry the local ``G``.
+    """
+    B, n = x.shape
+    G2, L, V2, O = tables.shape
+    if n != G2 * 2 * group:
+        raise ValueError(
+            f"x trailing dim {n} != G2*2*group = {G2}*2*{group} (pad x over "
+            f"the phantom segment when the unpaired G was odd — "
+            f"core.lut_layers does this for you)")
+    key = atn.shape_key("fused_gemv_paired_stacked", dtype=tables.dtype,
+                        backend=jax.default_backend(),
+                        B=B, L=L, G=G2, V=V2, O=O, g=group, bits=spec.bits)
+    s2 = _scale_2d(scale, x.dtype)
+    l1 = jnp.asarray(layer, jnp.int32).reshape(1)
+    kw = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
+              interpret=not on_tpu())
+    if tiles is None:
+        cfg = atn.lookup(key)
+        if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
+                x, s2, l1, tables):
+            cfg = atn.tune(
+                key,
+                atn.paired_stacked_gemv_candidates(B, L, G2, V2, O,
+                                                   tables.dtype.itemsize),
+                lambda c: _fused_gemv_paired_stacked_bench(
+                    l1, x, s2, tables, c, kw),
+            )
+        if cfg is None:
+            # Candidate 0's [Gb, L, V2, Ob] staging is budget-clamped with
+            # the L factor (the seg-major kernel stages every layer of its
+            # segment tile) — the untuned fallback stays VMEM-safe.
+            cfg = atn.paired_stacked_gemv_candidates(
+                B, L, G2, V2, O, tables.dtype.itemsize)[0]
+        tiles = (cfg.Bb, cfg.Gb, cfg.Ob)
+    tiles = _fit_tiles(tiles, B, G2, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])  # zero rows quantize harmlessly
+    tp, _ = _pad_axis(tables, 3, tiles[2] if O >= 128 else 1)
+    out = pcilt_fused_gemv_paired_stacked_pallas(l1, xp, s2, tp, tiles=tiles,
+                                                 **kw)
+    return out[:B, :O]
+
+
+def _fused_gemv_paired_stacked_bench(l1, x, s2, tables, cfg, kw):
+    B, G2, O = x.shape[0], tables.shape[0], tables.shape[-1]
+    tiles = _fit_tiles((cfg.Bb, cfg.Gb, cfg.Ob), B, G2, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])
+    tp, _ = _pad_axis(tables, 3, tiles[2] if O >= 128 else 1)
+    return lambda: pcilt_fused_gemv_paired_stacked_pallas(
+        l1, xp, s2, tp, tiles=tiles, **kw
+    ).block_until_ready()
+
+
+def pcilt_fused_gemv_plan(
+    x: jax.Array,
+    tables: jax.Array,
+    plan_idx: jax.Array,
+    spec,
+    scale,
+    group: int,
+    tiles=None,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """x [B, n] float, tables [G, V, O], plan_idx [G, group] int32
+    (``-1`` = unused slot) -> [B, O].
+
+    The generalized-``SegmentPlan`` fused dispatch: segments may skip or
+    reuse arbitrary positions of ``x``, resolved by an in-VMEM gather of
+    the plan index before the standard quantize→pack→fetch — plan-built
+    tables no longer fall back to the host gather path.  Keys record under
+    ``fused_gemv_plan``; the tiling space is the dense GEMV's (the plan
+    gather adds only a ``[Gb*group]`` index block per step).
+    """
+    B, n = x.shape
+    G, V, O = tables.shape
+    if plan_idx.shape != (G, group):
+        raise ValueError(
+            f"plan_idx shape {tuple(plan_idx.shape)} != (G, group) = "
+            f"({G}, {group}) (tables {tables.shape})")
+    key = atn.shape_key("fused_gemv_plan", dtype=tables.dtype,
+                        backend=jax.default_backend(),
+                        B=B, G=G, V=V, O=O, g=group, bits=spec.bits)
+    s2 = _scale_2d(scale, x.dtype)
+    p2 = plan_idx.astype(jnp.int32)
+    kw = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
+              interpret=not on_tpu())
+    if tiles is None:
+        cfg = atn.lookup(key)
+        if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
+                x, s2, p2, tables):
+            cfg = atn.tune(
+                key,
+                atn.gemv_candidates(B, G, V, O, tables.dtype.itemsize),
+                lambda c: _fused_gemv_plan_bench(x, s2, p2, tables, c, kw),
+            )
+        if cfg is not None:
+            tiles = (cfg.Bb, cfg.Gb, cfg.Ob)
+        else:
+            tiles = default_tiles(B, G, V, O, itemsize=tables.dtype.itemsize)
+    tiles = _fit_tiles(tiles, B, G, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])  # zero rows quantize harmlessly
+    tp, _ = _pad_axis(tables, 2, tiles[2] if O >= 128 else 1)
+    out = pcilt_fused_gemv_plan_pallas(xp, s2, p2, tp, tiles=tiles, **kw)
+    return out[:B, :O]
+
+
+def _fused_gemv_plan_bench(x, s2, p2, tables, cfg, kw):
+    B, G, O = x.shape[0], tables.shape[0], tables.shape[-1]
+    tiles = _fit_tiles((cfg.Bb, cfg.Gb, cfg.Ob), B, G, O)
+    xp, _ = _pad_axis(x, 0, tiles[0])
+    tp, _ = _pad_axis(tables, 2, tiles[2] if O >= 128 else 1)
+    return lambda: pcilt_fused_gemv_plan_pallas(
+        xp, s2, p2, tp, tiles=tiles, **kw
     ).block_until_ready()
 
 

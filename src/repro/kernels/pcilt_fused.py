@@ -41,6 +41,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["pcilt_fused_gemv_pallas", "pcilt_fused_gemv_stacked_pallas",
+           "pcilt_fused_gemv_paired_pallas",
+           "pcilt_fused_gemv_paired_stacked_pallas",
+           "pcilt_fused_gemv_plan_pallas",
            "pcilt_fused_conv2d_pallas"]
 
 
@@ -69,6 +72,25 @@ def _flat_onehot_dot(off, tab, *, V: int):
     oh = (off[:, :, None] == lanes).astype(tab.dtype).reshape(R, Gb * V)
     return jnp.dot(oh, tab.reshape(Gb * V, tab.shape[-1]),
                    preferred_element_type=jnp.float32)
+
+
+def _take_rows(off, tab):
+    """The row-gather fetch: ``off [R, Gb]``, ``tab [Gb, Vt, Ob]`` -> f32
+    ``[R, Ob]``.
+
+    The paired-table fetch is literal fetch-and-add — the paper's
+    hardware-regime execution model — rather than the dense path's one-hot
+    contraction: at ``Vt = V**2`` lanes the one-hot matrix is ``V``-times
+    wider than the dense kernel's and the MXU contraction cost explodes
+    exactly where the table got cheaper.  ``take_along_axis`` with a
+    *constant* segment index (the leading ``Gb`` axis is iota — never
+    traced data) lowers to the backend's batched row-gather fast path; the
+    adder tree is the f32 sum over the segment axis.  No dot, so bf16
+    tables promote to f32 only at the accumulate.
+    """
+    fetched = jnp.take_along_axis(
+        tab, off.T[:, :, None].astype(jnp.int32), axis=1)  # [Gb, R, Ob]
+    return jnp.sum(fetched.astype(jnp.float32), axis=0)
 
 
 # ----------------------------------------------------------------------------
@@ -126,6 +148,81 @@ def pcilt_fused_gemv_pallas(
             pl.BlockSpec((Bb, Gb * group), lambda i, j, k: (i, k)),
             pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
             pl.BlockSpec((Gb, V, Ob), lambda i, j, k: (k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((Bb, Ob), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
+        interpret=interpret,
+    )(x, scale, tables).astype(tables.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Paired (TL1-style multi-scalar) fused GEMV: two segments per fetch.
+# ----------------------------------------------------------------------------
+
+
+def _gemv_paired_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
+                        bits: int, zero_point: int, group: int, Gb: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = _quantize(x_ref[...], scale_ref[0, 0],
+                      bits=bits, zero_point=zero_point)  # [Bb, Gb*2*group]
+    # Packing 2*group codes little-endian IS the paired index
+    # off_even + off_odd * V (V = 2**(bits*group)) — the same arithmetic
+    # `build_paired_tables` indexes its [G/2, V**2, O] entries by, so the
+    # in-kernel pack emits the paired offset directly.
+    off = _pack_flat(codes, bits=bits, group=2 * group, Gseg=Gb)  # [Bb, Gb]
+    out_ref[...] += _take_rows(off, tab_ref[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "zero_point", "group", "tiles", "interpret"),
+)
+def pcilt_fused_gemv_paired_pallas(
+    x: jax.Array,
+    scale: jax.Array,
+    tables: jax.Array,
+    *,
+    bits: int,
+    zero_point: int,
+    group: int,
+    tiles,
+    interpret: bool = False,
+) -> jax.Array:
+    """x ``[B, n]`` float, scale ``[1, 1]``, paired tables ``[G2, V2, O]``
+    (``V2 = (2**(bits*group))**2``) -> ``[B, O]``.
+
+    The TL1-style multi-scalar variant of :func:`pcilt_fused_gemv_pallas`:
+    each staged table row covers *two* adjacent ``group``-wide segments, so
+    ``n == G2 * 2 * group`` (the caller zero-pads ``x`` over the phantom
+    segment when the unpaired ``G`` was odd — its table column is exactly
+    zero).  Half the fetches, half the adder-tree depth; the fetch itself is
+    a batched row-gather (see :func:`_take_rows`), not a one-hot
+    contraction.  ``tiles`` is ``(Bb, Gb, Ob)`` with ``Gb | G2``.
+    """
+    B, n = x.shape
+    G2, V2, O = tables.shape
+    if n != G2 * 2 * group:
+        raise ValueError(
+            f"x trailing dim {n} != G2*2*group = {G2}*2*{group} "
+            f"(x {x.shape}, paired tables {tables.shape})")
+    if V2 != 1 << (2 * bits * group):
+        raise ValueError(
+            f"paired tables value axis {V2} != (2**(bits*group))**2 = "
+            f"{1 << (2 * bits * group)} (tables {tables.shape}, bits={bits}, "
+            f"group={group})")
+    Bb, Gb, Ob = tiles
+    grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G2 // Gb)
+    return pl.pallas_call(
+        functools.partial(_gemv_paired_kernel, bits=bits,
+                          zero_point=zero_point, group=group, Gb=Gb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bb, Gb * 2 * group), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((Gb, V2, Ob), lambda i, j, k: (k, 0, j)),
         ],
         out_specs=pl.BlockSpec((Bb, Ob), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
@@ -209,6 +306,171 @@ def pcilt_fused_gemv_stacked_pallas(
         out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
         interpret=interpret,
     )(layer, x, scale, tables).astype(tables.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Layer-stacked paired GEMV (the paired decode path): segment-major tables,
+# layer folded into the fetch's value axis.
+# ----------------------------------------------------------------------------
+
+
+def _gemv_paired_stacked_kernel(layer_ref, x_ref, scale_ref, tab_ref,
+                                out_ref, *, bits: int, zero_point: int,
+                                group: int, Gb: int, V2: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = _quantize(x_ref[...], scale_ref[0, 0],
+                      bits=bits, zero_point=zero_point)  # [Bb, Gb*2*group]
+    off = _pack_flat(codes, bits=bits, group=2 * group, Gseg=Gb)  # [Bb, Gb]
+    # The staged block is [Gb, L, V2, Ob] with a *constant* layer index in
+    # the BlockSpec map; folding L into the value axis keeps the segment
+    # index of the gather a constant iota (the batched-row-gather fast path)
+    # and moves the traced layer into the gathered *row* — the layout that
+    # makes the traced layer free instead of forcing a general gather.
+    Gb_, L, _, Ob = tab_ref.shape
+    tab = tab_ref[...].reshape(Gb_, L * V2, Ob)
+    out_ref[...] += _take_rows(off + layer_ref[0] * V2, tab)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "zero_point", "group", "tiles", "interpret"),
+)
+def pcilt_fused_gemv_paired_stacked_pallas(
+    layer: jax.Array,
+    x: jax.Array,
+    scale: jax.Array,
+    tables: jax.Array,
+    *,
+    bits: int,
+    zero_point: int,
+    group: int,
+    tiles,
+    interpret: bool = False,
+) -> jax.Array:
+    """layer ``[1]`` int32, x ``[B, n]`` float, scale ``[1, 1]``,
+    **segment-major** paired tables ``[G2, L, V2, O]`` -> ``[B, O]``.
+
+    The layer-scanned decode variant of
+    :func:`pcilt_fused_gemv_paired_pallas`.  The stack is segment-major
+    (``build_paired_stacked_tables``) so each grid step stages a
+    ``[Gb, L, V2, Ob]`` block whose index map is constant in the
+    scalar-prefetched layer; the kernel reshapes it to ``[Gb, L*V2, Ob]``
+    (adjacent contiguous axes — free) and fetches row ``l*V2 + off``.  The
+    traced layer index thus rides the gather's *value* coordinate while the
+    segment coordinate stays a constant iota — XLA's batched row-gather fast
+    path, where a traced segment index would fall off onto the slow general
+    gather.  ``n == G2 * 2 * group``; ``tiles`` is ``(Bb, Gb, Ob)`` with
+    ``Gb | G2``.
+    """
+    B, n = x.shape
+    G2, L, V2, O = tables.shape
+    if n != G2 * 2 * group:
+        raise ValueError(
+            f"x trailing dim {n} != G2*2*group = {G2}*2*{group} "
+            f"(x {x.shape}, stacked paired tables {tables.shape})")
+    if V2 != 1 << (2 * bits * group):
+        raise ValueError(
+            f"paired tables value axis {V2} != (2**(bits*group))**2 = "
+            f"{1 << (2 * bits * group)} (tables {tables.shape}, bits={bits}, "
+            f"group={group})")
+    Bb, Gb, Ob = tiles
+    grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G2 // Gb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bb, Gb * 2 * group), lambda i, j, k, l: (i, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k, l: (0, 0)),
+            pl.BlockSpec((Gb, L, V2, Ob), lambda i, j, k, l: (k, 0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((Bb, Ob), lambda i, j, k, l: (i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gemv_paired_stacked_kernel, bits=bits,
+                          zero_point=zero_point, group=group, Gb=Gb, V2=V2),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
+        interpret=interpret,
+    )(layer, x, scale, tables).astype(tables.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Plan-gather fused GEMV: generalized (non-contiguous) SegmentPlans run
+# fused via an in-VMEM gather of the plan index.
+# ----------------------------------------------------------------------------
+
+
+def _gemv_plan_kernel(x_ref, scale_ref, plan_ref, tab_ref, out_ref, *,
+                      bits: int, zero_point: int, group: int,
+                      Gb: int, V: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pidx = plan_ref[...].reshape(Gb * group)  # int32, -1 = unused slot
+    # In-VMEM gather of the plan's source positions; unused (-1) slots clamp
+    # to 0 and are zeroed — their table rows were built from zero weights
+    # (SegmentPlan.gather_weights), so any code fetches exactly 0, but
+    # forcing x=0 keeps the packed offset deterministic.
+    xg = jnp.take(x_ref[...], jnp.maximum(pidx, 0), axis=1)  # [Bb, Gb*group]
+    xg = jnp.where((pidx < 0)[None, :], jnp.zeros_like(xg), xg)
+    codes = _quantize(xg, scale_ref[0, 0], bits=bits, zero_point=zero_point)
+    off = _pack_flat(codes, bits=bits, group=group, Gseg=Gb)  # [Bb, Gb]
+    out_ref[...] += _flat_onehot_dot(off, tab_ref[...], V=V)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "zero_point", "group", "tiles", "interpret"),
+)
+def pcilt_fused_gemv_plan_pallas(
+    x: jax.Array,
+    scale: jax.Array,
+    plan_idx: jax.Array,
+    tables: jax.Array,
+    *,
+    bits: int,
+    zero_point: int,
+    group: int,
+    tiles,
+    interpret: bool = False,
+) -> jax.Array:
+    """x ``[B, n]`` float, scale ``[1, 1]``, plan_idx ``[G, group]`` int32
+    (``-1`` = unused slot), tables ``[G, V, O]`` -> ``[B, O]``.
+
+    The generalized-:class:`~repro.core.offsets.SegmentPlan` variant of
+    :func:`pcilt_fused_gemv_pallas`: segments may skip or reuse arbitrary
+    source positions, so the *whole* activation row is staged (the x
+    BlockSpec is constant in the segment grid axis) and each grid step
+    gathers its ``[Gb, group]`` plan block's positions in VMEM before the
+    standard quantize→pack→fetch.  ``tiles`` is ``(Bb, Gb, Ob)`` with
+    ``Gb | G``; ``B`` and ``O`` are padded by ``ops.py`` as usual.
+    """
+    B, n = x.shape
+    G, V, O = tables.shape
+    if plan_idx.shape != (G, group):
+        raise ValueError(
+            f"plan_idx shape {plan_idx.shape} != (G, group) = "
+            f"({G}, {group}) (tables {tables.shape})")
+    Bb, Gb, Ob = tiles
+    grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G // Gb)
+    return pl.pallas_call(
+        functools.partial(_gemv_plan_kernel, bits=bits,
+                          zero_point=zero_point, group=group, Gb=Gb, V=V),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bb, n), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((Gb, group), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((Gb, V, Ob), lambda i, j, k: (k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((Bb, Ob), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
+        interpret=interpret,
+    )(x, scale, plan_idx, tables).astype(tables.dtype)
 
 
 # ----------------------------------------------------------------------------

@@ -105,7 +105,7 @@ class MambaLM:
     def build_pcilt(self, params, scale, proj_scales=None, proj_path="fused",
                     projections=None, mesh=None, mesh_axis="model",
                     table_dtype=jnp.float32, head_scale=None,
-                    head_weight_bits=4):
+                    head_weight_bits=4, paired=False):
         """Offline PCILT build for the decode hot loop (requires
         ``cfg.pcilt``).
 
@@ -127,6 +127,15 @@ class MambaLM:
         ``proj_path`` selects the execution route (``"fused"`` stacked
         kernel; ``"kernel"``/``"gather"``/``"onehot"`` host-packed
         references; ``"dense_fq"`` fake-quant dense oracle).
+
+        With ``paired=True`` the projection stacks are built in the
+        TL1-style multi-scalar layout instead: **segment-major**
+        ``[G2, L, V2, O]`` paired tables
+        (``core.pcilt.build_paired_stacked_tables`` — each fetch covers two
+        adjacent segments, halving fetch count and adder-tree depth) and
+        decode dispatches the paired row-gather kernels.  Under a mesh the
+        *pair* axis shards (``seg_axis=0``).  The conv frontend and logits
+        head are unchanged.
 
         Logits head: pass ``head_scale`` (calibrated absmax-derived scale of
         the ``ln_f`` output — ``calibrate_pcilt``'s ``head_in``) and the
@@ -161,7 +170,7 @@ class MambaLM:
         if proj_scales is not None:
             out["proj"] = self._build_proj_pcilt(
                 params, spec, proj_scales, proj_path, projections, mesh,
-                mesh_axis, table_dtype)
+                mesh_axis, table_dtype, paired)
         if head_scale is not None:
             out["head"] = self._build_head_pcilt(
                 params, head_scale, head_weight_bits)
@@ -238,9 +247,13 @@ class MambaLM:
         return jax.lax.cond(jnp.asarray(ok, bool), _fetch, _oracle, x)
 
     def _build_proj_pcilt(self, params, spec, proj_scales, proj_path,
-                          projections, mesh, mesh_axis, table_dtype):
-        """Stacked ``[L, G, V, O]`` grouped tables per decode projection."""
+                          projections, mesh, mesh_axis, table_dtype,
+                          paired=False):
+        """Stacked grouped tables per decode projection: dense
+        ``[L, G, V, O]`` or, with ``paired``, seg-major ``[G2, L, V2, O]``
+        paired stacks (``build_paired_stacked_tables``)."""
         from repro.core import build_grouped_tables
+        from repro.core.pcilt import build_paired_stacked_tables
         from repro.core.lut_layers import mesh_shard_count
         from repro.nn.ssm import PROJ_NAMES
 
@@ -254,26 +267,38 @@ class MambaLM:
             _, n, O = ks.shape
             pad_n = (-n) % group
 
-            def build(w, s):
-                wf = w.astype(jnp.float32)
-                if pad_n:  # group-alignment slots built from zero weights
-                    wf = jnp.concatenate(
-                        [wf, jnp.zeros((pad_n, wf.shape[-1]), wf.dtype)], 0)
-                return build_grouped_tables(wf, spec, s, group)
+            if paired:
+                # build_paired_stacked_tables pads n to the pair width
+                # itself (alignment + phantom slots from zero weights) and
+                # returns the seg-major [G2, L, V2, O] layout; building in
+                # f32 and casting once keeps bf16 tables rounding-safe.
+                t = build_paired_stacked_tables(
+                    ks.astype(jnp.float32), spec, s_l, group
+                ).astype(table_dtype)
+                seg_count, seg_axis = t.shape[0], 0
+            else:
+                def build(w, s):
+                    wf = w.astype(jnp.float32)
+                    if pad_n:  # group-alignment slots from zero weights
+                        wf = jnp.concatenate(
+                            [wf, jnp.zeros((pad_n, wf.shape[-1]), wf.dtype)],
+                            0)
+                    return build_grouped_tables(wf, spec, s, group)
 
-            t = jax.vmap(build)(ks, s_l).astype(table_dtype)  # [L, G, V, O]
+                t = jax.vmap(build)(ks, s_l).astype(table_dtype)
+                seg_count, seg_axis = t.shape[1], 1
             if mesh is not None and mesh_shard_count(
-                    mesh, mesh_axis, t.shape[1]) > 1:
+                    mesh, mesh_axis, seg_count) > 1:
                 from repro.nn.module import pcilt_table_sharding
 
                 t = jax.device_put(t, pcilt_table_sharding(
-                    mesh, t.shape[1], ndim=4, mesh_axis=mesh_axis,
-                    seg_axis=1))
+                    mesh, seg_count, ndim=4, mesh_axis=mesh_axis,
+                    seg_axis=seg_axis))
             tabs[name] = t
             scales[name] = s_l
         return {"tables": tabs, "scales": scales, "spec": spec,
                 "group": group, "path": proj_path, "mesh": mesh,
-                "mesh_axis": mesh_axis}
+                "mesh_axis": mesh_axis, "paired": paired}
 
     def calibrate_pcilt(self, params, batch, ctx: Ctx):
         """Calibration prefill: one full-sequence pass over a calibration
@@ -342,6 +367,7 @@ class MambaLM:
                         "path": proj["path"], "mesh": proj["mesh"],
                         "mesh_axis": proj["mesh_axis"],
                         "layer": per["layer"], "scale": per["scale"],
+                        "paired": proj.get("paired", False),
                         "ok": per.get("ok")}
             y, st2 = mamba_decode(p["mixer"], cfg, ctx,
                                   rmsnorm(p["ln"], h, cfg.norm_eps), st,

@@ -115,14 +115,21 @@ def _proj(params, name, x, cfg, proj):
 
     def _fetch(xx):
         tables = proj["tables"][name]
-        pad = tables.shape[1] * proj["group"] - xx.shape[-1]
+        paired = bool(proj.get("paired"))
+        # Covered reduction width: dense stacks are [L, G, V, O] (G on axis
+        # 1, width G*group); paired stacks are seg-major [G2, L, V2, O]
+        # (pairs on axis 0, width G2*2*group — phantom slot included).
+        want = (tables.shape[0] * 2 * proj["group"] if paired
+                else tables.shape[1] * proj["group"])
+        pad = want - xx.shape[-1]
         if pad:  # group-alignment slots: table rows built from zero weights
             xx = jnp.concatenate(
                 [xx, jnp.zeros((*xx.shape[:-1], pad), xx.dtype)], axis=-1)
         out = pcilt_linear(xx, tables, proj["spec"], scale, proj["group"],
                            path=path, stacked=proj["layer"],
                            mesh=proj.get("mesh"),
-                           mesh_axis=proj.get("mesh_axis", "model"))
+                           mesh_axis=proj.get("mesh_axis", "model"),
+                           paired=paired)
         return out.astype(cfg.dtype)
 
     ok = proj.get("ok")

@@ -30,8 +30,9 @@ def test_shipped_generators_verify_clean_quick():
 def test_every_family_is_covered():
     names = {f.name for f in vmem.FAMILIES()}
     assert names == {"gemv_host", "fused_gemv", "fused_gemv_stacked",
-                     "conv2d_host", "fused_conv2d", "shared_gemv",
-                     "shared_conv2d", "fused_dwconv1d"}
+                     "fused_gemv_paired", "fused_gemv_paired_stacked",
+                     "fused_gemv_plan", "conv2d_host", "fused_conv2d",
+                     "shared_gemv", "shared_conv2d", "fused_dwconv1d"}
 
 
 def test_no_kernel_execution_happens(monkeypatch):

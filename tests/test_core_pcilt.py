@@ -139,26 +139,29 @@ def test_segment_plan_skip_dup_nonadjacent():
 
 
 def test_generalized_plan_rejected_at_fused_boundary():
-    """Regression: a generalized SegmentPlan on the in-kernel-packing paths
-    must raise a typed, actionable ValueError at the lut_layers dispatch
-    boundary — not a bare shape error from deep inside the kernel wrapper."""
+    """A generalized SegmentPlan now *executes* on path='fused' (the
+    in-VMEM plan gather) and must match the host-packed reference; on the
+    shared-pool path — and when the plan is omitted but the tables betray
+    one — the boundary still raises a typed, actionable ValueError, not a
+    bare shape error from deep inside the kernel wrapper."""
     spec, x, w, scale, _ = _data(2)
     plan = SegmentPlan(np.array([[0, 3], [5, 5], [-1, 7]], np.int32))
     T = build_grouped_tables(w, spec, scale, 2, plan=plan)
-    # Spelling 1: the plan passed explicitly.
-    with pytest.raises(ValueError, match="SegmentPlan"):
-        pcilt_linear(x, T, spec, scale, 2, plan=plan, path="fused")
+    # The plan passed explicitly: fused runs via the plan-gather kernel.
+    got_f = pcilt_linear(x, T, spec, scale, 2, plan=plan, path="fused")
+    ref = pcilt_linear(x, T, spec, scale, 2, plan=plan, path="gather")
+    np.testing.assert_allclose(got_f, ref, rtol=1e-5, atol=1e-5)
     from repro.core import build_shared_grouped_tables
 
     st = build_shared_grouped_tables(w, spec, scale, 2, plan=plan)
     with pytest.raises(ValueError, match="SegmentPlan"):
         pcilt_linear(x, st, spec, scale, 2, plan=plan, path="shared")
     # Spelling 2: tables *built* from the plan (G*group != n) with plan
-    # omitted, as the fused signature forces — the boundary must still name
-    # the SegmentPlan cause and point at the host-packed paths.
+    # omitted — the boundary must still name the SegmentPlan cause and
+    # point at passing the plan (which fused now executes).
     with pytest.raises(ValueError, match="generalized SegmentPlan"):
         pcilt_linear(x, T, spec, scale, 2, path="fused")
-    with pytest.raises(ValueError, match="host-packed"):
+    with pytest.raises(ValueError, match="plan="):
         pcilt_linear(x, T, spec, scale, 2, path="fused")
     # The plan still executes on the host-packed paths it is pointed at.
     codes = quantize(x, spec, scale)

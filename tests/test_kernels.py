@@ -355,7 +355,10 @@ def test_is_concrete_uses_compat_tracer_probe():
     assert not compat.is_tracer(np.zeros(1))
 
 
-def test_fused_rejects_segment_plans():
+def test_fused_executes_segment_plans():
+    """Formerly a hard raise: path='fused' now runs generalized plans via
+    the in-VMEM plan gather.  A contiguous plan is the identity mapping, so
+    it must match the planless fused dispatch exactly."""
     from repro.core import QuantSpec, SegmentPlan, calibrate, build_grouped_tables
     from repro.core import pcilt_linear
 
@@ -365,5 +368,7 @@ def test_fused_rejects_segment_plans():
     s = calibrate(x, spec)
     plan = SegmentPlan.contiguous(8, 2)
     T = build_grouped_tables(w, spec, s, group=2, plan=plan)
-    with pytest.raises(ValueError, match="fused"):
-        pcilt_linear(x, T, spec, s, group=2, plan=plan, path="fused")
+    got = pcilt_linear(x, T, spec, s, group=2, plan=plan, path="fused")
+    want = pcilt_linear(x, T, spec, s, group=2, path="fused")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
