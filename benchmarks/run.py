@@ -853,6 +853,24 @@ def resilience_rows(bench_json: str = "BENCH_pr6.json"):
     return rows
 
 
+def traffic_rows(bench_json: str = "BENCH_pr9.json"):
+    """traffic.* -> BENCH_pr9.json: traffic-hardened serving.
+
+    The PR 9 claims, measured on the virtual clock (seeded arrivals, no
+    wall-clock flake): the R-aware tuned stacked decode at R=8 beats 8
+    sequential batch-1 steps >= 2x bit-exactly; the bounded-admission
+    engine at 2x offered load sheds with typed ``rejected`` outcomes while
+    admitted p99 per-token latency stays within 2x of the 0.5x-load p99;
+    and the PR 6 chaos schedule injected mid-stream keeps every undegraded
+    request token-identical to a fault-free run of the same arrival trace.
+    ``benchmarks/traffic_bench.py`` holds the blocks; contract violations
+    raise inside the guard and land as skip rows (non-zero exit in smoke)."""
+    from benchmarks.traffic_bench import collect
+
+    return collect(bench_json and _bench_path(bench_json), _SMOKE, _timeit,
+                   _guard, _json_rows)
+
+
 def roofline_rows():
     import glob
     import json
@@ -902,7 +920,7 @@ def main(argv=None) -> None:
     _SMOKE = args.smoke
     sections = [paper_rows, micro_rows, lm_rows, fused_rows, shared_rows,
                 shard_rows, pr4_rows, decode_e2e_rows, decode_e2e_pr8_rows,
-                resilience_rows, roofline_rows]
+                resilience_rows, traffic_rows, roofline_rows]
     if args.only:
         sections = [s for s in sections
                     if s.__name__.startswith(args.only)]

@@ -56,11 +56,13 @@ KNOWN_KERNELS: Dict[str, Tuple[str, ...]] = {
     "gemv_host": ("B", "G", "V", "O"),
     "conv2d_host": ("B", "Ho", "Wo", "G", "V", "O"),
     "fused_gemv": ("B", "G", "V", "O", "g", "bits"),
-    "fused_gemv_stacked": ("B", "L", "G", "V", "O", "g", "bits"),
+    # stacked (serving) families key the decode-batch row count R explicitly
+    # alongside B so the R-aware row-tile sweep is cached per slot count
+    "fused_gemv_stacked": ("B", "R", "L", "G", "V", "O", "g", "bits"),
     # paired (TL1-style) families: G and V are paired-space (G/2 segment
     # pairs at V**2 entries); g/bits stay the unpaired build parameters
     "fused_gemv_paired": ("B", "G", "V", "O", "g", "bits"),
-    "fused_gemv_paired_stacked": ("B", "L", "G", "V", "O", "g", "bits"),
+    "fused_gemv_paired_stacked": ("B", "R", "L", "G", "V", "O", "g", "bits"),
     "fused_gemv_plan": ("B", "G", "V", "O", "g", "bits"),
     "fused_conv2d": ("B", "Ho", "W", "C", "k", "s", "G", "V", "O", "g",
                      "bits"),
@@ -264,7 +266,68 @@ def validate_bench(obj, path: str = "<bench>") -> List[Finding]:
                 for k, v in block.items()):
             err(f"top-level {field!r} must map metric names to finite "
                 f"numbers, got {block!r}")
+    # traffic block (BENCH_pr9+): open-loop load-sweep rows.  Each row
+    # carries the typed outcome counts, and the counts must partition the
+    # offered set — the overload-accounting invariant is enforced at the
+    # artifact layer too, so a stale/hand-edited BENCH file cannot claim a
+    # contract the engine did not uphold.
+    traffic = obj.get("traffic")
+    if traffic is not None:
+        out.extend(_validate_traffic(traffic, err))
     return out
+
+
+_TRAFFIC_COUNTS = ("offered", "served", "degraded", "failed", "rejected")
+_TRAFFIC_METRICS = ("shed_rate", "p50_token_s", "p99_token_s", "tokens_per_s")
+
+
+def _validate_traffic(traffic, err) -> List[Finding]:
+    """Validate a BENCH 'traffic' block: a list of load-sweep rows."""
+    if not isinstance(traffic, list) or not traffic:
+        err(f"top-level 'traffic' must be a non-empty list of load rows, "
+            f"got {type(traffic).__name__}")
+        return []
+    for i, row in enumerate(traffic):
+        sym = f"traffic[{i}]"
+        if not isinstance(row, dict):
+            err(f"traffic row must be an object, got {type(row).__name__}",
+                sym)
+            continue
+        prof = row.get("profile")
+        if not isinstance(prof, str) or not prof:
+            err(f"traffic row 'profile' must be a non-empty string, "
+                f"got {prof!r}", sym)
+        else:
+            sym = f"traffic[{i}]:{prof}@{row.get('load')}"
+        if not _finite_num(row.get("load")) or row.get("load") <= 0:
+            err(f"traffic row 'load' must be a positive finite number "
+                f"(offered-load multiple of capacity), got "
+                f"{row.get('load')!r}", sym)
+        counts = {}
+        for f in _TRAFFIC_COUNTS:
+            v = row.get(f)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                err(f"traffic row {f!r} must be a non-negative int, "
+                    f"got {v!r}", sym)
+            else:
+                counts[f] = v
+        if len(counts) == len(_TRAFFIC_COUNTS):
+            total = sum(counts[f] for f in _TRAFFIC_COUNTS[1:])
+            if total != counts["offered"]:
+                err(f"traffic row breaks the accounting invariant: "
+                    f"served+degraded+failed+rejected = {total} != offered "
+                    f"= {counts['offered']}", sym)
+        for f in _TRAFFIC_METRICS:
+            v = row.get(f)
+            # percentile metrics are null when nothing completed (pure shed)
+            if v is None and f in ("p50_token_s", "p99_token_s",
+                                   "tokens_per_s"):
+                continue
+            if not _finite_num(v) or v < 0:
+                err(f"traffic row {f!r} must be a non-negative finite "
+                    f"number (or null for empty percentiles), got {v!r}",
+                    sym)
+    return []
 
 
 # ----------------------------------------------------------------------------

@@ -194,7 +194,11 @@ def _build_families() -> List[Family]:
         "full": [dict(B=8, L=3, G=16, V=16, O=256, group=2, bits=2,
                       itemsize=4),
                  dict(B=1, L=4, G=64, V=16, O=512, group=2, bits=2,
-                      itemsize=2)],
+                      itemsize=2),
+                 # batch-R serving regime: the R-aware row-tile sweep emits
+                 # Bb sub-tiles (8/16/32) here — verify each one fits
+                 dict(B=64, L=3, G=32, V=16, O=256, group=2, bits=2,
+                      itemsize=4)],
     }
 
     def stacked_cands(s, budget):
@@ -259,7 +263,10 @@ def _build_families() -> List[Family]:
         "full": [dict(B=8, L=2, G=8, V=256, O=128, group=2, bits=2,
                       itemsize=4),
                  dict(B=1, L=4, G=16, V=16, O=128, group=1, bits=2,
-                      itemsize=2)],
+                      itemsize=2),
+                 # batch-R serving regime (row-tile sub-tiles of Bb=64)
+                 dict(B=64, L=2, G=8, V=256, O=128, group=2, bits=2,
+                      itemsize=4)],
     }
 
     def paired_stacked_cands(s, budget):

@@ -555,18 +555,35 @@ class PCILTMambaDecode:
         self._hoist()
 
     def _hoist(self) -> None:
-        self._step = jax.jit(
-            lambda p, c, t, ok, hok: self.model.decode_step(
-                p, c, t, self.ctx, pcilt=self.pcilt, layer_ok=ok,
-                head_ok=hok))
+        # One jitted executor **per decode batch** (slot count): the batch
+        # dimension R is a first-class tuned axis of the stacked kernels
+        # (``fused_gemv_stacked`` keys carry R), so an engine serving R=8
+        # slots and a sibling serving R=32 dispatch distinct compiled steps
+        # — each closing over the same resident table stack — instead of
+        # sharing one retraced-on-shape-change function.
+        self._execs: Dict[int, object] = {}
+
+    def executor(self, rows: int):
+        """The hoisted jitted step for a decode batch of ``rows`` slots
+        (built on first use, then cached — serving loops at a fixed slot
+        count pay tracing exactly once)."""
+        f = self._execs.get(rows)
+        if f is None:
+            f = jax.jit(
+                lambda p, c, t, ok, hok: self.model.decode_step(
+                    p, c, t, self.ctx, pcilt=self.pcilt, layer_ok=ok,
+                    head_ok=hok))
+            self._execs[rows] = f
+        return f
 
     def rehoist(self) -> None:
-        """Rebuild the jitted executor after the bundle's table arrays were
+        """Rebuild the jitted executors after the bundle's table arrays were
         *replaced* (jit closes over the array values — swapping a dict entry
-        has no effect on the compiled step until re-hoisted).  Deliberately
-        does NOT re-verify integrity: detecting bad bytes at serving time is
-        the health monitor's job, and the chaos suite exercises exactly that
-        path."""
+        has no effect on the compiled step until re-hoisted).  Drops every
+        per-slot-count executor; each is rebuilt lazily on its next step.
+        Deliberately does NOT re-verify integrity: detecting bad bytes at
+        serving time is the health monitor's job, and the chaos suite
+        exercises exactly that path."""
         self._hoist()
 
     def step(self, params, cache, tokens, layer_ok=None, head_ok=None):
@@ -579,8 +596,9 @@ class PCILTMambaDecode:
             layer_ok = jnp.ones((self.model.cfg.n_layers,), bool)
         if head_ok is None:
             head_ok = jnp.asarray(True)
-        return self._step(params, cache, tokens, jnp.asarray(layer_ok, bool),
-                          jnp.asarray(head_ok, bool))
+        fn = self.executor(int(tokens.shape[0]))
+        return fn(params, cache, tokens, jnp.asarray(layer_ok, bool),
+                  jnp.asarray(head_ok, bool))
 
     __call__ = step
 
@@ -638,23 +656,30 @@ class PCILTMambaDecode:
                          for a in proj["tables"].values())
         return total
 
-    def tune(self, batch: int = 1) -> None:
+    def tune(self, batch=1) -> None:
         """Eagerly autotune each projection's stacked kernel at this decode
         batch size (layer 0 is representative: the per-layer staged slice is
         what the kernel tiles, and the shape key is layer-independent), plus
         the conv frontend's fused dwconv key on the assembled ``[B, k, C]``
         decode window.  Paired bundles tune the paired stacked kernel on the
         seg-major ``[G/2, L, V^2, O]`` stack.  Under a mesh, tuning runs on
-        the local shard — the problem each device's kernel dispatches."""
+        the local shard — the problem each device's kernel dispatches.
+
+        ``batch`` may be an int or an iterable of ints — the stacked keys
+        carry the decode batch ``R``, so an engine that serves several slot
+        counts (8-64) tunes each R's row-tile sweep once up front:
+        ``decode.tune(batch=(8, 32, 64))``."""
         from repro.core.lut_layers import mesh_shard_count
         from repro.kernels import ops  # local import: kernels are optional
 
+        batches = (batch,) if isinstance(batch, int) else tuple(batch)
         conv_t = self.pcilt["tables"]  # [L, C, V]
         k = self.model.cfg.ssm.conv_kernel
-        win = jnp.zeros((batch, k, conv_t.shape[1]), jnp.float32)
-        ops.pcilt_fused_dwconv1d(win, conv_t[0], self.pcilt["spec"],
-                                 self.pcilt["scale"], k, padding="VALID",
-                                 autotune=True)
+        for b in batches:
+            win = jnp.zeros((b, k, conv_t.shape[1]), jnp.float32)
+            ops.pcilt_fused_dwconv1d(win, conv_t[0], self.pcilt["spec"],
+                                     self.pcilt["scale"], k, padding="VALID",
+                                     autotune=True)
         proj = self.pcilt.get("proj")
         if proj is None or proj.get("path") != "fused":
             return
@@ -665,16 +690,17 @@ class PCILTMambaDecode:
             D = mesh_shard_count(proj.get("mesh"),
                                  proj.get("mesh_axis", "model"), G)
             Gl = G // D
-            if paired:
-                x = jnp.zeros((batch, Gl * 2 * group), jnp.float32)
-                ops.pcilt_fused_gemv_paired_stacked(
-                    x, t[:Gl], 0, proj["spec"], proj["scales"][name][0],
-                    group, autotune=True)
-            else:
-                x = jnp.zeros((batch, Gl * group), jnp.float32)
-                ops.pcilt_fused_gemv_stacked(
-                    x, t[:, :Gl], 0, proj["spec"], proj["scales"][name][0],
-                    group, autotune=True)
+            for b in batches:
+                if paired:
+                    x = jnp.zeros((b, Gl * 2 * group), jnp.float32)
+                    ops.pcilt_fused_gemv_paired_stacked(
+                        x, t[:Gl], 0, proj["spec"], proj["scales"][name][0],
+                        group, autotune=True)
+                else:
+                    x = jnp.zeros((b, Gl * group), jnp.float32)
+                    ops.pcilt_fused_gemv_stacked(
+                        x, t[:, :Gl], 0, proj["spec"],
+                        proj["scales"][name][0], group, autotune=True)
 
 
 class HealthMonitor:

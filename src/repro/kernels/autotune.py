@@ -415,6 +415,27 @@ def gemv_candidates(B: int, G: int, V: int, O: int, itemsize: int = 4,
     return out[:6]
 
 
+def _row_tiles(R: int) -> List[int]:
+    """R-aware row tiles for the stacked decode sweeps.
+
+    ``R`` is the decode batch — the number of serving slots stepping
+    together.  The first tile is the classic padded sublane tile (one grid
+    row covers the whole batch); the rest are power-of-two sub-tiles that
+    divide it, splitting the batch across grid rows.  Sub-tiles re-stage the
+    layer's table tile once per row step but shrink the per-step one-hot
+    scratch ``R``-fold — at R=32-64 with wide stagings that trade starts to
+    matter, which is exactly what the sweep measures instead of guessing.
+    """
+    Bb = min(128, _round_up(max(R, 1), 8))
+    out = [Bb]
+    t = 8
+    while t < Bb:
+        if Bb % t == 0:
+            out.append(t)
+        t *= 2
+    return out
+
+
 def stacked_gemv_candidates(B: int, L: int, G: int, V: int, O: int,
                             itemsize: int = 4,
                             scratch_budget: float = SCRATCH_BUDGET
@@ -427,12 +448,32 @@ def stacked_gemv_candidates(B: int, L: int, G: int, V: int, O: int,
     at the same ``(Gb, Ob)``, and the in-kernel ``[Bb, Gb*V]`` one-hot
     scratch is unchanged, so both the staged-table budget (:func:`_fit_gb`)
     and the analytic scratch bound (:func:`_fit_scratch_gb`) carry over to
-    the per-layer slice verbatim and the dense sweep is reused.  ``L``
+    the per-layer slice verbatim and the dense sweep is reused as the
+    **prefix** (candidate 0 stays the no-tune heuristic fallback).  ``L``
     affects the shape key (a different stack is a different HBM-resident
     problem), never the candidate tiling space.
+
+    The decode batch ``R`` (== ``B`` at dispatch: the serving slot count) is
+    a tuned axis: after the dense sweep, :func:`_row_tiles` sub-tile
+    variants split the batch across grid rows at the two lead stagings —
+    each ``Gb`` re-clamped by the scratch bound at the *smaller* row count,
+    which can admit stagings the full-batch tile could not.
     """
     del L  # enters the shape key, not the tiling space (per-layer staging)
-    return gemv_candidates(B, G, V, O, itemsize, scratch_budget=scratch_budget)
+    base = gemv_candidates(B, G, V, O, itemsize, scratch_budget=scratch_budget)
+    out = list(base)
+    seen = {(c.Bb, c.Gb, c.Ob) for c in base}
+    for bb in _row_tiles(B)[1:]:
+        for lead in base[:2]:  # heuristic + stage-everything stagings
+            gb = min(lead.Gb,
+                     _fit_scratch_gb(G, bb, V, itemsize,
+                                     budget=scratch_budget))
+            while G % gb:
+                gb -= 1
+            if (bb, gb, lead.Ob) not in seen:
+                seen.add((bb, gb, lead.Ob))
+                out.append(TileConfig(Bb=bb, Gb=gb, Ob=lead.Ob))
+    return out[:8]
 
 
 def _fit_paired_gb(G: int, R: int, Ob: int,
@@ -514,6 +555,12 @@ def paired_stacked_gemv_candidates(B: int, L: int, G: int, V: int, O: int,
     cardinality ``L*V``.  The gather scratch bound is L-independent
     (the fetched ``[Gb, Bb, Ob]`` rows and ``[Bb, Gb]`` indices don't
     grow with the stack), so :func:`_fit_paired_gb` carries over verbatim.
+
+    Like the dense stacked sweep, the decode batch ``R`` (== ``B``: the
+    serving slot count) is a tuned axis: :func:`_row_tiles` sub-tile
+    variants ride along after the classic candidates, shrinking the
+    per-step gather scratch ``R``-fold at the cost of re-staging the
+    seg-major ``[Gb, L, V, Ob]`` block per row step.
     """
     Bb = min(128, _round_up(max(B, 1), 8))
     B_exact = max(1, min(B, 128))
@@ -536,7 +583,11 @@ def paired_stacked_gemv_candidates(B: int, L: int, G: int, V: int, O: int,
         if Ob > O_full:
             continue
         add(Bb, _fit_gb(G, L * V, Ob, itemsize), Ob)
-    return out[:6]
+    for bb in _row_tiles(B)[1:]:  # R sub-tiles: split the batch across rows
+        add(bb, G, O_full)
+        add(bb, _fit_gb(G, L * V, min(128, O_full), itemsize),
+            min(128, O_full))
+    return out[:8]
 
 
 def conv2d_candidates(Ho: int, G: int, V: int, O: int, itemsize: int = 4,

@@ -400,8 +400,12 @@ def pcilt_fused_gemv_stacked(
     HBM.  ``scale`` is this layer's per-tensor activation scale (callers
     slice it from their ``[L]`` calibration vector; a traced scalar is
     fine).  Tiles dispatch through ``fused_gemv_stacked`` shape keys, which
-    carry ``L`` and — under a mesh, where this wrapper sees one device's
-    ``[L, G/D, V, O]`` shard — the *local* ``G``.
+    carry ``L``, the decode-batch row count ``R`` (== ``B`` here: the
+    serving slot count whose row-tile sweep the recorded winner came from —
+    keyed explicitly so a future row-packing dispatch can tune at
+    ``R != B`` without a key-grammar change), and — under a mesh, where
+    this wrapper sees one device's ``[L, G/D, V, O]`` shard — the *local*
+    ``G``.
     """
     B, n = x.shape
     L, G, V, O = tables.shape
@@ -412,7 +416,8 @@ def pcilt_fused_gemv_stacked(
             f"rejected upstream at the core.lut_layers dispatch boundary)")
     key = atn.shape_key("fused_gemv_stacked", dtype=tables.dtype,
                         backend=jax.default_backend(),
-                        B=B, L=L, G=G, V=V, O=O, g=group, bits=spec.bits)
+                        B=B, R=B, L=L, G=G, V=V, O=O, g=group,
+                        bits=spec.bits)
     s2 = _scale_2d(scale, x.dtype)
     l1 = jnp.asarray(layer, jnp.int32).reshape(1)
     kw = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
@@ -531,9 +536,11 @@ def pcilt_fused_gemv_paired_stacked(
     and the scan's layer index rides the fetch's value coordinate (the
     kernel folds L into the gathered row), so staging is layer-independent
     and the traced layer costs nothing.  Keys record under
-    ``fused_gemv_paired_stacked`` with paired-space ``G``/``V`` plus ``L``;
-    under a mesh the wrapper sees one device's ``[G2/D, L, V2, O]`` shard
-    and keys carry the local ``G``.
+    ``fused_gemv_paired_stacked`` with paired-space ``G``/``V`` plus ``L``
+    and the decode-batch row count ``R`` (== ``B``: the serving slot count
+    the row-tile sweep anchors on, keyed explicitly like the dense stacked
+    family); under a mesh the wrapper sees one device's ``[G2/D, L, V2, O]``
+    shard and keys carry the local ``G``.
     """
     B, n = x.shape
     G2, L, V2, O = tables.shape
@@ -544,7 +551,8 @@ def pcilt_fused_gemv_paired_stacked(
             f"core.lut_layers does this for you)")
     key = atn.shape_key("fused_gemv_paired_stacked", dtype=tables.dtype,
                         backend=jax.default_backend(),
-                        B=B, L=L, G=G2, V=V2, O=O, g=group, bits=spec.bits)
+                        B=B, R=B, L=L, G=G2, V=V2, O=O, g=group,
+                        bits=spec.bits)
     s2 = _scale_2d(scale, x.dtype)
     l1 = jnp.asarray(layer, jnp.int32).reshape(1)
     kw = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,

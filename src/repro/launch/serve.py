@@ -1,9 +1,11 @@
 """Serving launcher: batched prefill + decode with continuous batching,
-hardened for faults.
+hardened for faults *and* load.
 
 ``python -m repro.launch.serve --arch qwen3-0.6b --requests 8`` runs a small
 request stream through the engine on CPU (smoke config); on a pod the same
 engine serves the full config with the production mesh.
+``--traffic poisson`` drives the same engine open-loop on a virtual clock
+(seeded arrivals, analytic capacity) — the overload-control smoke.
 
 Engine: fixed decode batch of slots; requests queue in, prefill fills a
 slot's state, decode steps the whole batch every tick, finished slots are
@@ -16,9 +18,10 @@ fake-quant oracle — serving continues, degraded and logged, never wrong.
 Resilience contract (``docs/resilience.md`` has the full matrix):
 
 * **tick-level try/restore** — every committed tick checkpoints the full
-  engine state (cache, tokens, slots, queue, request fields) into a bounded
-  ring; any step fault restores the latest checkpoint and replays, up to
-  ``max_restarts`` (``Supervisor`` semantics, applied to serving);
+  engine state (cache, tokens, slots, queue, pending arrivals, request
+  fields) into a bounded ring; any step fault restores the latest
+  checkpoint and replays, up to ``max_restarts`` (``Supervisor`` semantics,
+  applied to serving);
 * **never wrong** — a table-corruption breach detected at tick ``k`` may
   have poisoned commits back to the breached layer's ``last_verified``
   tick, so the engine rolls back *to that tick* and replays with the layer
@@ -31,23 +34,51 @@ Resilience contract (``docs/resilience.md`` has the full matrix):
 * **watchdog** — decode tick wall times feed a
   :class:`repro.runtime.StepWatchdog`; straggler ticks land in the stats;
 * **accounting** — every request ends in exactly one outcome
-  (``served`` / ``degraded`` / ``failed``), derived from request state at
-  the end so checkpoint replays can never double-count.
+  (``served`` / ``degraded`` / ``failed`` / ``rejected``), derived from
+  request state at the end so checkpoint replays can never double-count.
+
+Overload contract (``docs/serving.md`` has the full matrix):
+
+* **bounded admission** — ``queue_limit`` caps the queue; a request
+  arriving at a full queue is shed *at admission* with the typed
+  ``rejected`` outcome (never a timeout discovered minutes later), and the
+  estimated-service-time test additionally rejects requests whose deadline
+  is already unmeetable given the backlog (doomed work is refused, not
+  half-served);
+* **EDF scheduling** — free slots take the eligible queued request with
+  the earliest deadline (no-deadline requests sort last, FIFO tie-break),
+  minimizing deadline misses under load;
+* **queue-side deadline eviction** — a request that exceeds its deadline
+  *while still queued* is evicted there (counted in
+  ``queue_evictions``) instead of burning prefill ticks on a doomed
+  attempt;
+* **backpressure telemetry** — every tick appends a structured record
+  (queue depth, slot occupancy, eviction counters, tick seconds) to
+  ``stats["telemetry"]``; ``stats`` also carries the shed rate and the
+  resident table bytes.
+
+All time flows through an injectable ``clock`` (``Engine(clock=...)``,
+default :class:`repro.runtime.WallClock`); a
+:class:`repro.runtime.VirtualClock` plus ``step_cost_s`` makes every
+deadline/backoff/arrival path deterministic — the CI traffic smoke runs
+thousands of virtual seconds in milliseconds.
 
 ``--chaos`` drives the engine through every injected fault class
 (scheduled tick fault, NaN-poisoned state, corrupted projection stack,
 flipped head ``seg_idx`` pointers, garbled autotune cache) and exits
 non-zero if any request is lost or the served tokens diverge from a
 fault-free reference run — the CI smoke for the resilience layer.
+``--chaos --traffic ...`` composes the two: faults injected mid-burst must
+uphold both contracts at once.
 """
 
 from __future__ import annotations
 
 import argparse
 import logging
-import time
+import math
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,9 +88,12 @@ from repro.configs import get_config, get_smoke_config
 from repro.models import build_model
 from repro.nn.module import materialize, shape_structs
 from repro.launch.steps import make_decode_step, make_prefill_step, make_ctx
-from repro.runtime import StepWatchdog
+from repro.runtime import StepWatchdog, WallClock
 
 log = logging.getLogger("repro.serve")
+
+#: every request ends in exactly one of these
+OUTCOMES = ("served", "degraded", "failed", "rejected")
 
 
 class _Degraded(Exception):
@@ -81,28 +115,43 @@ class Request:
         self.max_retries = max_retries
         self.out: List[int] = []
         self.done = False
-        #: queued | active | served | degraded | failed
+        #: queued | active | served | degraded | failed | rejected
         self.outcome = "queued"
         self.retries = 0
         #: True when any committed token was produced under demotion
         self.degraded = False
-        self.t_admit = 0.0
+        self.t_arrive = 0.0  # when the request hit the engine (clock domain)
+        self.t_enqueue = 0.0  # start of the current queued attempt
+        self.t_admit = 0.0  # when the current attempt's prefill began
+        self.t_done = 0.0  # when a terminal outcome was assigned
         self.not_before = 0.0  # backoff gate for requeued requests
 
 
 class Engine:
-    """Slot-based continuous batching with checkpointed fault recovery."""
+    """Slot-based continuous batching with checkpointed fault recovery and
+    bounded-admission overload control."""
 
     def __init__(self, cfg, max_len: int = 256, slots: int = 4, mesh=None, *,
                  pcilt: bool = False, pcilt_bundle: Optional[Dict] = None,
                  oracle_every: int = 4, max_restarts: int = 8,
-                 ckpt_keep: Optional[int] = None, chaos: Optional[Dict] = None):
+                 ckpt_keep: Optional[int] = None, chaos: Optional[Dict] = None,
+                 clock=None, queue_limit: Optional[int] = None,
+                 step_cost_s: Optional[float] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.max_len = max_len
         self.slots = slots
         self.mesh = mesh
         self.max_restarts = max_restarts
+        #: injectable time source (`.time()` / `.sleep(s)`); the default is
+        #: the wall clock — tests and the traffic bench pass a VirtualClock
+        self.clock = clock if clock is not None else WallClock()
+        #: bounded admission queue: None = unbounded (the closed-loop
+        #: `run()` semantics), an int caps the queue and sheds beyond it
+        self.queue_limit = queue_limit
+        #: simulated per-step service time: each engine step advances the
+        #: clock by this much (VirtualClock benches/CI); None = real time
+        self.step_cost_s = step_cost_s
         self.params = materialize(self.model.param_specs(), jax.random.PRNGKey(0))
         cspecs = self.model.cache_specs(slots, max_len)
         self.cache = materialize(cspecs, jax.random.PRNGKey(1))
@@ -119,11 +168,16 @@ class Engine:
             maxlen=ckpt_keep or (int(cfg.n_layers) + 4))
         self.queue: List[Request] = []
         self._requests: List[Request] = []
+        self._pending: List[Tuple[float, Request]] = []
         self.tick = 0
         self.steps = 0  # monotone prefill+decode step count (chaos clock)
         self.prefill_ticks = 0
         self.restarts = 0
         self.rollbacks = 0
+        self.queue_evictions = 0
+        self.slot_evictions = 0
+        self.telemetry: List[Dict] = []
+        self._tick_ema: Optional[float] = None
 
         self.pdecode = None
         self.monitor = None
@@ -170,6 +224,8 @@ class Engine:
             for act in self.chaos.pop(k):
                 act(self)
         self.steps += 1
+        if self.step_cost_s is not None:
+            self.clock.sleep(self.step_cost_s)  # simulated service time
         logits, new_cache = self._raw_step()
         # finite gate BEFORE committing: NaN/Inf outputs (poisoned state,
         # numerical blowup) trigger restore-and-replay, never a sampled token.
@@ -198,7 +254,7 @@ class Engine:
         sampled while a neighbor prefilled).  The step that consumes the
         final prompt token emits the request's first generated token."""
         req.outcome = "active"
-        req.t_admit = time.time()
+        req.t_admit = self.clock.time()
         # an idle slot still steps with the batch (its outputs dropped), so
         # its recurrent state is garbage by now — start from a clean slate or
         # the request's tokens depend on what the slot did while unowned
@@ -232,6 +288,7 @@ class Engine:
         if req is not None and len(req.out) >= req.max_new:
             req.done = True
             req.outcome = "degraded" if req.degraded else "served"
+            req.t_done = self.clock.time()
             self.active[s] = None
             self._reset_slot(s)
 
@@ -257,8 +314,12 @@ class Engine:
             "tokens": self.tokens.copy(),
             "active": list(self.active),
             "queue": list(self.queue),
+            "pending": list(self._pending),
+            "queue_evictions": self.queue_evictions,
+            "slot_evictions": self.slot_evictions,
             "reqs": {r.rid: (list(r.out), r.done, r.outcome, r.retries,
-                             r.degraded, r.t_admit, r.not_before)
+                             r.degraded, r.t_admit, r.not_before,
+                             r.t_arrive, r.t_enqueue, r.t_done)
                      for r in self._requests},
         })
 
@@ -277,13 +338,19 @@ class Engine:
         self.tokens = snap["tokens"].copy()
         self.active = list(snap["active"])
         self.queue = list(snap["queue"])
+        self._pending = list(snap["pending"])
+        self.queue_evictions = snap["queue_evictions"]
+        self.slot_evictions = snap["slot_evictions"]
         for r in self._requests:
-            out, done, outcome, retries, degraded, t_admit, nb = \
-                snap["reqs"][r.rid]
+            (out, done, outcome, retries, degraded, t_admit, nb,
+             t_arrive, t_enqueue, t_done) = snap["reqs"][r.rid]
             r.out, r.done, r.outcome = list(out), done, outcome
             r.retries, r.degraded, r.t_admit, r.not_before = \
                 retries, degraded, t_admit, nb
+            r.t_arrive, r.t_enqueue, r.t_done = t_arrive, t_enqueue, t_done
         self.tick = snap["tick"]
+        # telemetry for replayed ticks will be re-recorded
+        self.telemetry = [e for e in self.telemetry if e["tick"] < self.tick]
         if self.monitor is not None:
             # a verification recorded at a now-rewound tick no longer vouches
             # for any committed token — clamp so a later breach rolls back
@@ -294,10 +361,84 @@ class Engine:
                 self.monitor.head_last_verified, self.tick)
         log.warning("restored engine state at tick %d", self.tick)
 
+    # -- admission / scheduling ----------------------------------------------
+
+    def _est_ticks(self, req: Request) -> int:
+        """Engine steps one attempt of ``req`` costs end to end (prefill
+        replays the prompt through the decode path, then one step per
+        generated token)."""
+        return len(req.prompt) + req.max_new
+
+    def _est_turnaround_s(self, req: Request) -> Optional[float]:
+        """Crude service-time estimate for an arriving request: the backlog
+        ahead of it (active remainders + queued attempts, spread over the
+        slots) plus its own attempt, priced at the observed per-tick EMA.
+        ``None`` until a tick has been measured (never reject blind)."""
+        if self._tick_ema is None:
+            return None
+        backlog = sum(self._est_ticks(r) for r in self.queue)
+        backlog += sum(max(0, r.max_new - len(r.out))
+                       for r in self.active if r is not None)
+        return (backlog / self.slots + self._est_ticks(req)) * self._tick_ema
+
+    def _submit(self, req: Request, now: float) -> bool:
+        """Admission control: enqueue or shed with the typed ``rejected``
+        outcome.  Two tests, both cheap and both *at the door*:
+
+        * **queue depth** — a full bounded queue sheds immediately;
+        * **estimated service time** — a deadline the backlog already makes
+          unmeetable is refused rather than admitted, prefillled, and
+          evicted later (doomed work is the most expensive kind under
+          overload).
+        """
+        req.t_arrive = req.t_enqueue = now
+        if self.queue_limit is not None and len(self.queue) >= self.queue_limit:
+            req.done = True
+            req.outcome = "rejected"
+            req.t_done = now
+            log.warning("req %d rejected: queue full (%d >= %d)",
+                        req.rid, len(self.queue), self.queue_limit)
+            return False
+        if req.deadline_s is not None:
+            est = self._est_turnaround_s(req)
+            if est is not None and est > req.deadline_s:
+                req.done = True
+                req.outcome = "rejected"
+                req.t_done = now
+                log.warning("req %d rejected: estimated turnaround %.3fs > "
+                            "deadline %.3fs", req.rid, est, req.deadline_s)
+                return False
+        req.outcome = "queued"
+        self.queue.append(req)
+        return True
+
+    def _admit_arrivals(self, now: float):
+        due = [p for p in self._pending if p[0] <= now]
+        if due:
+            self._pending = [p for p in self._pending if p[0] > now]
+            for _, req in due:
+                self._submit(req, now)
+
+    def _edf_pick(self, now: float) -> Optional[int]:
+        """Earliest-deadline-first: the eligible (not backing off) queued
+        request with the soonest absolute deadline for its current attempt;
+        no-deadline requests sort last, FIFO breaks ties."""
+        best = None
+        best_key = None
+        for i, r in enumerate(self.queue):
+            if r.not_before > now:
+                continue
+            d = (r.t_enqueue + r.deadline_s if r.deadline_s is not None
+                 else math.inf)
+            key = (d, i)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
     # -- deadlines -----------------------------------------------------------
 
     def _enforce_deadlines(self):
-        now = time.time()
+        now = self.clock.time()
         for s, req in enumerate(self.active):
             if req is None or req.deadline_s is None:
                 continue
@@ -305,49 +446,113 @@ class Engine:
                 continue
             self.active[s] = None
             self._reset_slot(s)
+            self.slot_evictions += 1
             req.out = []
             req.degraded = False
             req.retries += 1
             if req.retries > req.max_retries:
                 req.done = True
                 req.outcome = "failed"
+                req.t_done = now
                 log.error("req %d failed: deadline %.3fs exceeded %d times",
                           req.rid, req.deadline_s, req.retries)
             else:
                 req.not_before = now + 0.05 * (2 ** (req.retries - 1))
                 req.outcome = "queued"
+                # the fresh attempt's deadline window opens when the backoff
+                # expires — clocking it from the requeue instant would let a
+                # backoff longer than the deadline evict the request forever
+                req.t_enqueue = req.not_before
                 self.queue.append(req)
                 log.warning("req %d missed deadline; requeued (retry %d/%d, "
                             "backoff %.3fs)", req.rid, req.retries,
                             req.max_retries, req.not_before - now)
+        # queue-side enforcement: a request past its attempt deadline while
+        # *still queued* is evicted here — before it burns prefill ticks on
+        # an attempt that cannot meet its deadline anyway
+        still: List[Request] = []
+        for req in self.queue:
+            if req.deadline_s is None or now - req.t_enqueue <= req.deadline_s:
+                still.append(req)
+                continue
+            self.queue_evictions += 1
+            req.retries += 1
+            if req.retries > req.max_retries:
+                req.done = True
+                req.outcome = "failed"
+                req.t_done = now
+                log.error("req %d failed: deadline %.3fs expired in queue "
+                          "(%d attempts)", req.rid, req.deadline_s,
+                          req.retries)
+            else:
+                req.not_before = now + 0.05 * (2 ** (req.retries - 1))
+                req.t_enqueue = req.not_before  # window opens post-backoff
+                still.append(req)
+                log.warning("req %d deadline expired while queued; attempt "
+                            "window reset (retry %d/%d)", req.rid,
+                            req.retries, req.max_retries)
+        self.queue = still
 
     # -- main loop -----------------------------------------------------------
 
     def run(self, requests: List[Request], greedy: bool = True):
-        self.queue = list(requests)
-        self._requests = list(requests)
-        for r in requests:
+        """Closed-loop serving: every request is offered at once (the
+        pre-traffic semantics — what the chaos smoke and the resilience
+        tests drive)."""
+        now = self.clock.time()
+        return self._serve([(now, r) for r in requests])
+
+    def run_traffic(self, requests: List[Request],
+                    arrivals: Sequence[float]):
+        """Open-loop serving: ``requests[i]`` becomes visible at absolute
+        clock time ``arrivals[i]`` (see ``runtime.traffic``).  The engine
+        never sees a request before its arrival, and the arrival process
+        never waits for the engine — offered load is fixed, which is what
+        makes shed rate and tail latency honest under overload."""
+        if len(requests) != len(arrivals):
+            raise ValueError(
+                f"{len(requests)} requests but {len(arrivals)} arrival "
+                f"times — the traffic trace must cover every request")
+        pending = sorted(zip((float(t) for t in arrivals), requests),
+                         key=lambda p: p[0])
+        return self._serve(pending)
+
+    def _serve(self, pending: List[Tuple[float, Request]]):
+        self._requests = [r for _, r in pending]
+        self._pending = list(pending)
+        self.queue = []
+        for r in self._requests:
             r.outcome = "queued"
-        t0 = time.time()
+        t0 = self.clock.time()
         self.tick = 0
         self.prefill_ticks = 0
+        self.queue_evictions = 0
+        self.slot_evictions = 0
+        self.telemetry = []
+        self._tick_ema = None
         self.ckpts.clear()
         self._checkpoint()
         watchdog = StepWatchdog()
-        while self.queue or any(r is not None for r in self.active):
+        while (self._pending or self.queue
+               or any(r is not None for r in self.active)):
             try:
-                t_tick = time.time()
-                now = time.time()
+                t_tick = self.clock.time()
+                now = t_tick
+                self._admit_arrivals(now)
                 for s in range(self.slots):
                     if self.active[s] is not None or not self.queue:
                         continue
-                    i = next((i for i, r in enumerate(self.queue)
-                              if r.not_before <= now), None)
+                    i = self._edf_pick(now)
                     if i is None:
                         break  # every queued request is backing off
                     self._prefill_into_slot(s, self.queue.pop(i))
                 if not any(r is not None for r in self.active):
-                    time.sleep(0.005)  # wait out the shortest backoff
+                    if self.queue:
+                        self.clock.sleep(0.005)  # wait out shortest backoff
+                        self._enforce_deadlines()  # backoff may outlive one
+                    elif self._pending:
+                        nxt = min(t for t, _ in self._pending)
+                        self.clock.sleep(max(nxt - now, 1e-9))
                     continue
                 nxt = self._step()
                 if self.monitor is not None:
@@ -362,7 +567,22 @@ class Engine:
                         raise _Degraded(max(min(lv), 0), breaches)
                 self._commit_tokens(nxt)
                 self._enforce_deadlines()
-                watchdog.observe(self.tick, time.time() - t_tick)
+                dt = self.clock.time() - t_tick
+                watchdog.observe(self.tick, dt)
+                self._tick_ema = (dt if self._tick_ema is None
+                                  else 0.9 * self._tick_ema + 0.1 * dt)
+                occupied = sum(r is not None for r in self.active)
+                self.telemetry.append({
+                    "tick": self.tick,
+                    "t": self.clock.time(),
+                    "queue_depth": len(self.queue),
+                    "pending": len(self._pending),
+                    "active_slots": occupied,
+                    "occupancy": occupied / self.slots,
+                    "queue_evictions": self.queue_evictions,
+                    "slot_evictions": self.slot_evictions,
+                    "tick_s": dt,
+                })
                 self.tick += 1
                 self._checkpoint()
             except _Degraded as d:
@@ -377,26 +597,68 @@ class Engine:
                 if self.restarts > self.max_restarts:
                     raise
                 self._restore(self.tick)
-        dt = time.time() - t0
+        dt = self.clock.time() - t0
         # outcome accounting from final request state — replays through the
         # checkpoint ring can never double-count
         outcomes = {r.rid: r.outcome for r in self._requests}
+        offered = len(self._requests)
+        rejected = sum(o == "rejected" for o in outcomes.values())
         stats = {
             "decode_ticks": self.tick,
             "prefill_ticks": self.prefill_ticks,
             "wall_s": dt,
+            "offered": offered,
             "served": sum(o == "served" for o in outcomes.values()),
             "degraded": sum(o == "degraded" for o in outcomes.values()),
             "failed": sum(o == "failed" for o in outcomes.values()),
+            "rejected": rejected,
+            "shed_rate": rejected / offered if offered else 0.0,
             "retried": sum(r.retries > 0 for r in self._requests),
             "restarts": self.restarts,
             "rollbacks": self.rollbacks,
+            "queue_evictions": self.queue_evictions,
+            "slot_evictions": self.slot_evictions,
             "straggler_ticks": list(watchdog.flagged),
             "outcomes": outcomes,
+            "telemetry": list(self.telemetry),
+            "table_bytes": (self.pdecode.table_bytes()
+                            if self.pdecode is not None else 0),
         }
         if self.monitor is not None:
             stats["health_events"] = list(self.monitor.events)
         return stats
+
+
+def token_latencies(requests: Sequence[Request]) -> List[float]:
+    """Per-token latency (seconds/token, arrival to completion) of every
+    *completed* request — the tail the overload contract bounds."""
+    out = []
+    for r in requests:
+        if r.outcome in ("served", "degraded") and r.out:
+            out.append((r.t_done - r.t_arrive) / len(r.out))
+    return out
+
+
+def verify_accounting(requests: Sequence[Request], stats: Dict) -> None:
+    """The overload-accounting invariant: every request ends in exactly one
+    typed outcome and the outcome counts partition the offered set — no
+    admitted request is ever silently dropped.  Raises ``SystemExit`` on
+    violation (the CI traffic smoke's non-zero exit)."""
+    bad = [r.rid for r in requests if r.outcome not in OUTCOMES]
+    if bad:
+        raise SystemExit(
+            f"accounting violated: requests {bad} ended without a terminal "
+            f"outcome (allowed: {OUTCOMES})")
+    total = sum(stats[k] for k in OUTCOMES)
+    if total != stats["offered"] or stats["offered"] != len(requests):
+        raise SystemExit(
+            f"accounting violated: served+degraded+failed+rejected = {total} "
+            f"!= offered = {stats['offered']} (requests: {len(requests)})")
+    undone = [r.rid for r in requests if not r.done]
+    if undone:
+        raise SystemExit(
+            f"accounting violated: requests {undone} have a terminal outcome "
+            f"but done=False")
 
 
 def _chaos_plan(eng: Engine, injector):
@@ -463,6 +725,23 @@ def main(argv=None):
     p.add_argument("--deadline", type=float, default=None,
                    help="per-request deadline in seconds")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--traffic", choices=("poisson", "burst", "ramp"),
+                   default=None,
+                   help="open-loop arrival profile on a virtual clock (the "
+                        "overload-control smoke); verifies the outcome-"
+                        "accounting invariant and exits non-zero on a break")
+    p.add_argument("--load", type=float, default=1.0,
+                   help="offered load as a multiple of analytic capacity "
+                        "(--traffic only; 2.0 = overload)")
+    p.add_argument("--rate", type=float, default=None,
+                   help="explicit arrival rate in requests/s (overrides "
+                        "--load)")
+    p.add_argument("--queue-limit", type=int, default=None,
+                   help="bounded admission queue depth (default: 2*slots "
+                        "under --traffic, unbounded otherwise)")
+    p.add_argument("--step-cost", type=float, default=1e-3,
+                   help="simulated seconds per engine step on the virtual "
+                        "clock (--traffic only)")
     args = p.parse_args(argv)
 
     logging.basicConfig(level=logging.WARNING)
@@ -491,8 +770,32 @@ def main(argv=None):
     reqs = _make_requests(cfg, args.requests, args.max_new, args.deadline,
                           args.seed)
 
+    engine_kw = {}
+    arrivals = None
+    if args.traffic:
+        from repro.runtime import VirtualClock, make_arrivals
+
+        engine_kw = dict(clock=VirtualClock(), step_cost_s=args.step_cost,
+                         queue_limit=args.queue_limit
+                         if args.queue_limit is not None else 2 * args.slots)
+        # analytic capacity on the virtual clock: prefill ticks serialize
+        # (one slot replays its prompt at a time) while decode ticks are
+        # shared by every active slot, so one request costs about
+        # (mean prompt + max_new/slots) steps of step_cost seconds each
+        steps_per_req = 7.5 + args.max_new / args.slots  # prompts are 4..11
+        capacity = 1.0 / (steps_per_req * args.step_cost)
+        rate = args.rate if args.rate is not None else args.load * capacity
+        arrivals = make_arrivals(args.traffic, args.requests, rate,
+                                 seed=args.seed)
+        print(f"traffic: {args.traffic} arrivals at {rate:.1f} req/s "
+              f"({args.load:.2f}x capacity {capacity:.1f} req/s), "
+              f"queue_limit={engine_kw['queue_limit']}")
+    elif args.queue_limit is not None:
+        engine_kw = dict(queue_limit=args.queue_limit)
+
     injector = None
-    eng = Engine(cfg, max_len=256, slots=args.slots, pcilt=args.pcilt)
+    eng = Engine(cfg, max_len=256, slots=args.slots, pcilt=args.pcilt,
+                 **engine_kw)
     if args.chaos:
         from repro.runtime.faults import FaultInjector
 
@@ -502,7 +805,10 @@ def main(argv=None):
         else:
             eng.chaos = {4: [lambda e: injector.maybe_fail(7)]}
 
-    stats = eng.run(reqs)
+    if arrivals is not None:
+        stats = eng.run_traffic(reqs, arrivals)
+    else:
+        stats = eng.run(reqs)
     for r in reqs:
         print(f"req {r.rid}: prompt {len(r.prompt)} toks -> {r.out[:8]}... "
               f"[{r.outcome}]")
@@ -514,8 +820,26 @@ def main(argv=None):
               f"retried={stats['retried']} failed={stats['failed']} "
               f"restarts={stats['restarts']} rollbacks={stats['rollbacks']}")
 
+    if arrivals is not None:
+        verify_accounting(reqs, stats)
+        lats = token_latencies(reqs)
+        p50 = float(np.percentile(lats, 50)) if lats else float("nan")
+        p99 = float(np.percentile(lats, 99)) if lats else float("nan")
+        print(f"overload: rejected={stats['rejected']} "
+              f"(shed {100 * stats['shed_rate']:.1f}%) "
+              f"queue_evictions={stats['queue_evictions']} "
+              f"slot_evictions={stats['slot_evictions']} "
+              f"p50/p99 token latency {p50:.4f}/{p99:.4f}s")
+        print("accounting invariant verified: "
+              f"{stats['served']}+{stats['degraded']}+{stats['failed']}"
+              f"+{stats['rejected']} == {stats['offered']} offered")
+
     if args.chaos:
-        _verify_chaos_contract(cfg, args, eng, reqs, stats, injector)
+        if arrivals is not None:
+            _verify_chaos_traffic_contract(cfg, args, eng, reqs, stats,
+                                           injector, arrivals, engine_kw)
+        else:
+            _verify_chaos_contract(cfg, args, eng, reqs, stats, injector)
 
 
 def _verify_chaos_contract(cfg, args, eng, reqs, stats, injector):
@@ -577,6 +901,40 @@ def _verify_chaos_contract(cfg, args, eng, reqs, stats, injector):
           f"{len(injector.events)} faults injected, "
           f"{stats['restarts']} restarts, {stats['rollbacks']} rollbacks, "
           f"{stats['degraded']} degraded)")
+
+
+def _verify_chaos_traffic_contract(cfg, args, eng, reqs, stats, injector,
+                                   arrivals, engine_kw):
+    """Chaos under traffic: the overload contract and the resilience
+    contract must hold *at once* — every outcome typed and accounted, no
+    admitted request silently dropped, and every request served undegraded
+    in both the chaos run and a fault-free reference run of the same
+    arrival trace must be token-identical."""
+    from repro.runtime import VirtualClock
+
+    verify_accounting(reqs, stats)  # raises SystemExit on violation
+    if not injector.events:
+        raise SystemExit("chaos-under-traffic smoke injected no faults — "
+                         "schedule never fired")
+    ref_kw = dict(engine_kw, clock=VirtualClock())
+    ref_eng = Engine(cfg, max_len=256, slots=args.slots, pcilt=args.pcilt,
+                     **ref_kw)
+    ref = _make_requests(cfg, args.requests, args.max_new, args.deadline,
+                         args.seed)
+    ref_stats = ref_eng.run_traffic(ref, arrivals)
+    verify_accounting(ref, ref_stats)
+    mismatched = [r.rid for r, q in zip(reqs, ref)
+                  if r.outcome == "served" and q.outcome == "served"
+                  and r.out != q.out]
+    if mismatched:
+        raise SystemExit(
+            f"chaos-under-traffic contract violated: undegraded tokens "
+            f"diverge from the fault-free run for requests {mismatched}")
+    print(f"chaos-under-traffic contract verified: {stats['offered']} "
+          f"offered -> {stats['served']} served / {stats['degraded']} "
+          f"degraded / {stats['failed']} failed / {stats['rejected']} "
+          f"rejected; {len(injector.events)} faults injected, "
+          f"{stats['restarts']} restarts, {stats['rollbacks']} rollbacks")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,133 @@
+"""Open-loop traffic generation for the serving engine.
+
+Closed-loop benchmarks (feed the next request when a slot frees) hide
+overload: the harness self-throttles to the engine's capacity and latency
+looks flat no matter how slow the engine is.  An **open-loop** arrival
+process fixes the *offered* load independently of the engine's progress —
+the only honest way to measure shed rate and tail latency under 2x
+capacity.  This module provides:
+
+* seeded arrival processes (:func:`poisson_arrivals`,
+  :func:`burst_arrivals`, :func:`ramp_arrivals`, dispatched through
+  :func:`make_arrivals`) — absolute arrival timestamps, deterministic for a
+  seed, so a CI run and a local repro see the identical request stream;
+* clocks the engine injects (``Engine(clock=...)``): :class:`WallClock`
+  (production default) and :class:`VirtualClock` (tests/benchmarks —
+  ``sleep`` *advances* virtual time instead of blocking, so deadline and
+  backoff paths run deterministically at full speed instead of flaking on a
+  loaded CI runner).
+
+The virtual clock pairs with ``Engine(step_cost_s=...)``: each engine step
+advances the clock by a fixed simulated service time, which makes capacity
+analytic (``slots / (steps_per_request * step_cost_s)`` requests/s) and the
+0.5x/1x/2x load points of ``benchmarks/traffic_bench.py`` exact.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "WallClock",
+    "VirtualClock",
+    "poisson_arrivals",
+    "burst_arrivals",
+    "ramp_arrivals",
+    "make_arrivals",
+    "PROFILES",
+]
+
+
+class WallClock:
+    """The production clock: real time, real sleeps."""
+
+    def time(self) -> float:
+        return _time.time()
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            _time.sleep(seconds)
+
+
+class VirtualClock:
+    """A deterministic clock: ``sleep`` advances virtual time, never blocks.
+
+    The engine's deadline, backoff, and arrival logic all read
+    ``clock.time()`` and wait via ``clock.sleep()``, so swapping this in
+    makes every time-dependent serving path a pure function of the seed —
+    the CI traffic smoke runs thousands of virtual seconds in milliseconds.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def time(self) -> float:
+        return self._t
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            self._t += float(seconds)
+
+    advance = sleep
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0,
+                     t0: float = 0.0) -> np.ndarray:
+    """``n`` absolute arrival times of a homogeneous Poisson process at
+    ``rate`` requests/s starting at ``t0`` (exponential inter-arrivals)."""
+    if rate <= 0:
+        raise ValueError(f"rate must be positive, got {rate}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return t0 + np.cumsum(gaps)
+
+
+def burst_arrivals(n: int, rate: float, burst: int = 4, seed: int = 0,
+                   t0: float = 0.0) -> np.ndarray:
+    """Bursty arrivals at the same *average* ``rate``: requests land in
+    groups of ``burst`` simultaneous arrivals, with exponential gaps between
+    groups stretched by ``burst`` so the long-run offered load matches the
+    Poisson profile — the worst case for a bounded admission queue."""
+    if burst < 1:
+        raise ValueError(f"burst must be >= 1, got {burst}")
+    rng = np.random.default_rng(seed)
+    n_groups = -(-n // burst)
+    gaps = rng.exponential(burst / rate, size=n_groups)
+    group_t = t0 + np.cumsum(gaps)
+    return np.repeat(group_t, burst)[:n]
+
+
+def ramp_arrivals(n: int, rate: float, rate_end: Optional[float] = None,
+                  seed: int = 0, t0: float = 0.0) -> np.ndarray:
+    """Arrivals whose instantaneous rate ramps linearly from ``rate`` to
+    ``rate_end`` (default ``2 * rate``) across the stream — the overload
+    onset profile: the engine starts under capacity and ends past it, so
+    admission control has to *transition* into shedding rather than start
+    there."""
+    if rate_end is None:
+        rate_end = 2.0 * rate
+    if rate <= 0 or rate_end <= 0:
+        raise ValueError(f"rates must be positive, got {rate}, {rate_end}")
+    rng = np.random.default_rng(seed)
+    rates = np.linspace(rate, rate_end, n)
+    gaps = rng.exponential(1.0, size=n) / rates
+    return t0 + np.cumsum(gaps)
+
+
+PROFILES = ("poisson", "burst", "ramp")
+
+
+def make_arrivals(profile: str, n: int, rate: float, seed: int = 0,
+                  t0: float = 0.0, **kw) -> np.ndarray:
+    """Dispatch by profile name (the ``--traffic`` CLI surface)."""
+    if profile == "poisson":
+        return poisson_arrivals(n, rate, seed=seed, t0=t0, **kw)
+    if profile == "burst":
+        return burst_arrivals(n, rate, seed=seed, t0=t0, **kw)
+    if profile == "ramp":
+        return ramp_arrivals(n, rate, seed=seed, t0=t0, **kw)
+    raise ValueError(f"unknown traffic profile {profile!r} "
+                     f"(known: {PROFILES})")

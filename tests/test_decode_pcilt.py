@@ -256,13 +256,46 @@ def test_stacked_failed_tune_records_null(tune_cache, monkeypatch):
 
 def test_stacked_candidates_mirror_dense_sweep():
     """The staged per-layer slice is byte-identical to the unstacked tile,
-    so the stacked sweep must be the dense sweep (L never enters)."""
+    so the stacked sweep starts with the dense sweep as a prefix (L never
+    enters) — candidate 0 is still the heuristic no-tune fallback.  The
+    batch-R extension may append row-split variants after the prefix, and
+    those differ from the dense candidates only in (Bb, Gb) — R is a tuned
+    axis, not a new staging strategy."""
     from repro.kernels import autotune as atn
 
-    for B, G, V, O in [(1, 32, 16, 128), (8, 512, 16, 1024)]:
+    for B, G, V, O in [(1, 32, 16, 128), (8, 512, 16, 1024), (64, 32, 16, 256)]:
         for L in (2, 24):
-            assert atn.stacked_gemv_candidates(B, L, G, V, O) == \
-                atn.gemv_candidates(B, G, V, O)
+            dense = atn.gemv_candidates(B, G, V, O)
+            stacked = atn.stacked_gemv_candidates(B, L, G, V, O)
+            assert stacked[:len(dense)] == dense
+            assert stacked[0] == dense[0]  # heuristic fallback unchanged
+            extra = stacked[len(dense):]
+            dense_obs = {c.Ob for c in dense}
+            for c in extra:
+                assert c.Bb < dense[0].Bb and c.Bb % 8 == 0
+                assert c.Ob in dense_obs
+
+
+def test_stacked_candidates_sweep_row_tiles_at_large_B():
+    """At serving batch sizes the R-aware sweep must offer genuine Bb
+    sub-tiles (splitting the batch across grid rows), deduplicated and
+    capped."""
+    from repro.kernels import autotune as atn
+
+    cands = atn.stacked_gemv_candidates(64, 3, 32, 16, 256)
+    bbs = {c.Bb for c in cands}
+    assert 64 in bbs  # full-batch tiles still present
+    assert any(b < 64 for b in bbs), f"no row sub-tiles in {sorted(bbs)}"
+    assert len(cands) == len(set(cands)) <= 8
+    # B=1 stays minimal: the padded row tile is already the floor (8), so
+    # the R sweep adds nothing
+    small = atn.stacked_gemv_candidates(1, 3, 32, 16, 256)
+    assert small == atn.gemv_candidates(1, 32, 16, 256)
+
+    paired = atn.paired_stacked_gemv_candidates(64, 2, 8, 256, 128)
+    pbbs = {c.Bb for c in paired}
+    assert any(b < max(pbbs) for b in pbbs)
+    assert len(paired) == len(set(paired)) <= 8
 
 
 # ----------------------------------------------------------------------------

@@ -374,3 +374,68 @@ def test_engine_deadline_requeues_then_fails_bounded():
     assert fine.outcome == "served" and len(fine.out) == 3
     assert stats["failed"] == 1 and stats["retried"] == 1
     assert stats["outcomes"] == {0: "failed", 1: "served"}
+
+
+def test_deadline_eviction_races_checkpoint_restore(donor):
+    """A step fault forces a restore to a checkpoint taken *before* a
+    deadline eviction: the replay must re-run the eviction from restored
+    state — the evicted request fails exactly once (retries never
+    double-counted) and its slot state is never resurrected."""
+    inj = FaultInjector(fail_at=(5,), seed=2)
+    doomed = Request(0, np.asarray([5, 6, 7]), max_new=64, deadline_s=1e-4,
+                     max_retries=0)
+    fine = Request(1, np.asarray([3, 4]), max_new=4)
+    # prefills cover steps 0..4, so the fault hits the first decode tick —
+    # the restore target predates the eviction the same tick would commit
+    eng = _pcilt_engine(donor, chaos={5: [lambda e: inj.maybe_fail(5)]})
+    stats = eng.run([doomed, fine])
+    assert not eng.chaos and stats["restarts"] == 1
+    assert doomed.outcome == "failed"
+    assert doomed.retries == doomed.max_retries + 1  # once, not per replay
+    assert doomed.out == []  # evicted state never resurrected by the replay
+    assert fine.outcome == "served" and len(fine.out) == 4
+    assert all(r is None for r in eng.active) and eng.queue == []
+    assert stats["outcomes"] == {0: "failed", 1: "served"}
+    assert stats["slot_evictions"] == 1
+
+
+def test_monitor_demotion_with_two_slots_mid_request(donor):
+    """Table corruption lands while BOTH slots are mid-request: the breach
+    rolls every slot back to the last verified tick and replays demoted —
+    each request ends degraded with exactly its max_new tokens (no token
+    lost or duplicated across the multi-slot rollback)."""
+    inj = FaultInjector(seed=6)
+    seen = {}
+
+    def corrupt(e):
+        seen["active"] = sum(r is not None for r in e.active)
+        seen["partial"] = [len(r.out) for r in e.active if r is not None]
+        tabs = e.pdecode.pcilt["proj"]["tables"]
+        tabs["wx"] = inj.corrupt_table(tabs["wx"], n_flips=1)
+        e.pdecode.rehoist()
+
+    reqs = [Request(0, np.asarray([5, 6, 7]), max_new=8),
+            Request(1, np.asarray([3, 4, 9]), max_new=8)]
+    eng = _pcilt_engine(donor, chaos={7: [corrupt]})
+    stats = eng.run(reqs)
+    assert not eng.chaos
+    assert seen["active"] == 2  # the breach hit with both slots mid-request
+    assert all(n >= 1 for n in seen["partial"])
+    assert [r.outcome for r in reqs] == ["degraded", "degraded"]
+    assert [len(r.out) for r in reqs] == [8, 8]
+    assert stats["rollbacks"] >= 1 and stats["degraded"] == 2
+    assert eng.monitor.layer_ok.sum() == eng.monitor.n_layers - 1
+
+
+def test_per_slot_count_executors_cached_and_dropped_on_rehoist(donor):
+    """The decode engine hoists one jitted executor per slot count (R is a
+    tuned, keyed axis): repeat lookups hit the cache, distinct row counts
+    get distinct executors, and rehoist drops them all for lazy rebuild."""
+    pd = donor.pdecode
+    e1, e2 = pd.executor(1), pd.executor(2)
+    assert pd.executor(1) is e1 and pd.executor(2) is e2
+    assert e1 is not e2
+    assert set(pd._execs) == {1, 2}
+    pd.rehoist()
+    assert pd._execs == {}  # stale closures dropped, rebuilt on next step
+    assert pd.executor(2) is not e2
