@@ -64,6 +64,14 @@ KNOWN_KERNELS: Dict[str, Tuple[str, ...]] = {
     "fused_gemv_paired": ("B", "G", "V", "O", "g", "bits"),
     "fused_gemv_paired_stacked": ("B", "R", "L", "G", "V", "O", "g", "bits"),
     "fused_gemv_plan": ("B", "G", "V", "O", "g", "bits"),
+    # monitored (in-kernel saturation counter) variants: same tiled problem,
+    # extra scalar outputs — they key identically to their base family but
+    # cache separately (the counter reduction changes the winning tile)
+    "fused_gemv_stacked_sat": ("B", "R", "L", "G", "V", "O", "g", "bits"),
+    "fused_gemv_paired_sat": ("B", "G", "V", "O", "g", "bits"),
+    "fused_gemv_paired_stacked_sat": ("B", "R", "L", "G", "V", "O", "g",
+                                      "bits"),
+    "fused_dwconv1d_sat": ("B", "T", "C", "V", "k", "bits"),
     "fused_conv2d": ("B", "Ho", "W", "C", "k", "s", "G", "V", "O", "g",
                      "bits"),
     "fused_dwconv1d": ("B", "T", "C", "V", "k", "bits"),
@@ -274,7 +282,64 @@ def validate_bench(obj, path: str = "<bench>") -> List[Finding]:
     traffic = obj.get("traffic")
     if traffic is not None:
         out.extend(_validate_traffic(traffic, err))
+    # drift block (BENCH_pr10+): sentinel overhead + chaos-drift counts.
+    drift = obj.get("drift")
+    if drift is not None:
+        _validate_drift(drift, err)
     return out
+
+
+_DRIFT_CHAOS_COUNTS = ("demotions", "recalibrations", "sticky")
+
+
+def _validate_drift(drift, err) -> None:
+    """Validate a BENCH 'drift' block: the sentinel-overhead measurement
+    (monitored vs unmonitored decode) and the chaos-drift event counts.
+    The overhead ratio must actually be the quotient of the two timings —
+    a hand-edited ratio cannot claim an overhead the timings don't show."""
+    if not isinstance(drift, dict):
+        err(f"top-level 'drift' must be an object, got "
+            f"{type(drift).__name__}")
+        return
+    so = drift.get("sentinel_overhead")
+    if not isinstance(so, dict):
+        err(f"drift 'sentinel_overhead' must be an object with "
+            f"monitored_us/unmonitored_us/ratio, got {so!r}",
+            "drift.sentinel_overhead")
+    else:
+        vals = {}
+        for f in ("monitored_us", "unmonitored_us", "ratio"):
+            v = so.get(f)
+            if not _finite_num(v) or v <= 0:
+                err(f"drift sentinel_overhead.{f} must be a positive finite "
+                    f"number, got {v!r}", "drift.sentinel_overhead")
+            else:
+                vals[f] = v
+        if len(vals) == 3:
+            q = vals["monitored_us"] / vals["unmonitored_us"]
+            if abs(vals["ratio"] - q) > 0.01 * q:
+                err(f"drift sentinel_overhead.ratio = {vals['ratio']:.4f} "
+                    f"is not monitored_us/unmonitored_us = {q:.4f}",
+                    "drift.sentinel_overhead")
+    chaos = drift.get("chaos")
+    if chaos is not None:
+        if not isinstance(chaos, dict):
+            err(f"drift 'chaos' must be an object, got "
+                f"{type(chaos).__name__}", "drift.chaos")
+        else:
+            for f in _DRIFT_CHAOS_COUNTS:
+                v = chaos.get(f)
+                if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                    err(f"drift chaos.{f} must be a non-negative int, "
+                        f"got {v!r}", "drift.chaos")
+            rp = chaos.get("repromoted")
+            if not isinstance(rp, bool):
+                err(f"drift chaos.repromoted must be a bool, got {rp!r}",
+                    "drift.chaos")
+    extra = set(drift) - {"sentinel_overhead", "chaos"}
+    if extra:
+        err(f"drift block carries unknown fields {sorted(extra)} "
+            f"(schema v{BENCH_SCHEMA_VERSION})", "drift")
 
 
 _TRAFFIC_COUNTS = ("offered", "served", "degraded", "failed", "rejected")

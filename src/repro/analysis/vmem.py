@@ -206,7 +206,7 @@ def _build_families() -> List[Family]:
                                            s["O"], s["itemsize"],
                                            scratch_budget=budget)
 
-    def stacked_trace(s, c):
+    def stacked_trace(s, c, counters=False):
         tiles = ops._fit_tiles((c.Bb, c.Gb, c.Ob), s["B"], s["G"], s["O"])
         Bp = _round_up(s["B"], tiles[0])
         Op = _padded_O(s["O"], tiles[2])
@@ -216,7 +216,8 @@ def _build_families() -> List[Family]:
                sds((1, 1), jnp.float32),
                sds((s["L"], s["G"], s["V"], Op), tdt(s)),
                bits=s["bits"], zero_point=(1 << s["bits"]) // 2,
-               group=s["group"], tiles=tiles, interpret=True)
+               group=s["group"], tiles=tiles, counters=counters,
+               interpret=True)
         return j, tiles
 
     # -- paired (TL1-style) gemv + seg-major stack -------------------------
@@ -245,7 +246,7 @@ def _build_families() -> List[Family]:
         # the take_along_axis row-fetch intermediate [Gb, Bb, Ob]
         return [(eff[1], eff[0], eff[2])]
 
-    def paired_trace(s, c):
+    def paired_trace(s, c, counters=False):
         tiles = ops._fit_tiles((c.Bb, c.Gb, c.Ob), s["B"], s["G"], s["O"])
         Bp = _round_up(s["B"], tiles[0])
         Op = _padded_O(s["O"], tiles[2])
@@ -254,7 +255,8 @@ def _build_families() -> List[Family]:
                sds((1, 1), jnp.float32),
                sds((s["G"], s["V"], Op), tdt(s)),
                bits=s["bits"], zero_point=(1 << s["bits"]) // 2,
-               group=s["group"], tiles=tiles, interpret=True)
+               group=s["group"], tiles=tiles, counters=counters,
+               interpret=True)
         return j, tiles
 
     PAIRED_STACKED_SWEEP = {
@@ -274,7 +276,7 @@ def _build_families() -> List[Family]:
             s["B"], s["L"], s["G"], s["V"], s["O"], s["itemsize"],
             scratch_budget=budget)
 
-    def paired_stacked_trace(s, c):
+    def paired_stacked_trace(s, c, counters=False):
         tiles = ops._fit_tiles((c.Bb, c.Gb, c.Ob), s["B"], s["G"], s["O"])
         Bp = _round_up(s["B"], tiles[0])
         Op = _padded_O(s["O"], tiles[2])
@@ -284,7 +286,8 @@ def _build_families() -> List[Family]:
                sds((1, 1), jnp.float32),
                sds((s["G"], s["L"], s["V"], Op), tdt(s)),
                bits=s["bits"], zero_point=(1 << s["bits"]) // 2,
-               group=s["group"], tiles=tiles, interpret=True)
+               group=s["group"], tiles=tiles, counters=counters,
+               interpret=True)
         return j, tiles
 
     # -- plan-gather gemv (generalized SegmentPlans on the fused path) -----
@@ -471,7 +474,7 @@ def _build_families() -> List[Family]:
         fixed = (s["To"] + s["k"] - 1) * Cb * 4 + Cb * V * s["itemsize"]
         return Tb * Cb * (Vl + 2 * Vh) * 4 + fixed
 
-    def dw_trace(s, c):
+    def dw_trace(s, c, counters=False):
         Tb, Cb = dw_eff(s, c)
         Tp = s["To"] + s["k"] - 1
         j = mk(pcilt_fused_dwconv1d_pallas,
@@ -479,7 +482,7 @@ def _build_families() -> List[Family]:
                sds((1, 1), jnp.float32),
                sds((s["C"], dw_V(s)), tdt(s)),
                bits=s["bits"], zero_point=(1 << s["bits"]) // 2,
-               k=s["k"], tiles=(Tb, Cb), interpret=True)
+               k=s["k"], tiles=(Tb, Cb), counters=counters, interpret=True)
         return j, (Tb, Cb)
 
     def dw_witness(s, eff):
@@ -520,6 +523,25 @@ def _build_families() -> List[Family]:
                shared_conv_trace),
         Family("fused_dwconv1d", _kpath("pcilt_dwconv1d.py"), DW_SWEEP,
                dw_cands, dw_scratch, dw_witness, dw_trace),
+        # monitored (_sat) variants: same candidate generators, scratch
+        # models, and one-hot witnesses as their base families — the trace
+        # compiles with counters=True, so the verifier proves the counter
+        # reduction adds no modeled scratch and the [1,1] counter outputs'
+        # constant index maps stay in-bounds over the full grid
+        Family("fused_gemv_stacked_sat", _kpath("pcilt_fused.py"),
+               STACKED_SWEEP, stacked_cands, gemv_scratch,
+               fused_gemv_witness,
+               lambda s, c: stacked_trace(s, c, counters=True)),
+        Family("fused_gemv_paired_sat", _kpath("pcilt_fused.py"),
+               PAIRED_SWEEP, paired_cands, paired_scratch, paired_witness,
+               lambda s, c: paired_trace(s, c, counters=True)),
+        Family("fused_gemv_paired_stacked_sat", _kpath("pcilt_fused.py"),
+               PAIRED_STACKED_SWEEP, paired_stacked_cands, paired_scratch,
+               paired_witness,
+               lambda s, c: paired_stacked_trace(s, c, counters=True)),
+        Family("fused_dwconv1d_sat", _kpath("pcilt_dwconv1d.py"), DW_SWEEP,
+               dw_cands, dw_scratch, dw_witness,
+               lambda s, c: dw_trace(s, c, counters=True)),
     ]
 
 

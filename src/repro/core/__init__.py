@@ -14,6 +14,7 @@ from .quantization import (
     calibrate,
     scale_from_amax,
     quantize,
+    quantize_with_stats,
     dequantize,
     fake_quant,
     code_values,

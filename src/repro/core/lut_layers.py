@@ -63,7 +63,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .quantization import QuantSpec, quantize
+from .quantization import QuantSpec, quantize, quantize_with_stats
 from .offsets import SegmentPlan, pack_offsets
 from .pcilt import (SharedTables, SharedGroupedTables, ShardedSharedPool,
                     build_grouped_tables, shard_shared_grouped_tables)
@@ -310,7 +310,7 @@ def _pcilt_linear_paired_stacked_sharded(x, tables, layer, spec, scale,
 
 
 def _pcilt_linear_paired(x, tables, spec, scale, group, path, mesh,
-                         mesh_axis, stacked) -> jax.Array:
+                         mesh_axis, stacked, return_stats=False):
     """The paired (TL1-style multi-scalar) routes of :func:`pcilt_linear`.
 
     ``tables`` is a paired ``[G2, V2, out]`` array
@@ -332,11 +332,20 @@ def _pcilt_linear_paired(x, tables, spec, scale, group, path, mesh,
         x = _pad_paired_phantom(x, G2, group)
         if path == "fused":
             if mesh_shard_count(mesh, mesh_axis, G2) > 1:
-                return _pcilt_linear_paired_stacked_sharded(
+                out = _pcilt_linear_paired_stacked_sharded(
                     x, tables, stacked, spec, scale, group, mesh, mesh_axis)
+                if return_stats:
+                    _, count, ratio = quantize_with_stats(x, spec, scale)
+                    return out, count, ratio
+                return out
             from repro.kernels import ops  # local import: kernels optional
 
             flat = x.reshape(-1, x.shape[-1])
+            if return_stats:
+                out, count, ratio = ops.pcilt_fused_gemv_paired_stacked(
+                    flat, tables, stacked, spec, scale, group,
+                    with_stats=True)
+                return out.reshape(*x.shape[:-1], O), count, ratio
             out = ops.pcilt_fused_gemv_paired_stacked(
                 flat, tables, stacked, spec, scale, group)
             return out.reshape(*x.shape[:-1], O)
@@ -345,7 +354,8 @@ def _pcilt_linear_paired(x, tables, spec, scale, group, path, mesh,
         # the doubled group width.
         tab_l = jax.lax.dynamic_index_in_dim(
             tables, jnp.asarray(stacked, jnp.int32), 1, keepdims=False)
-        return pcilt_linear(x, tab_l, spec, scale, pair, path=path)
+        return pcilt_linear(x, tab_l, spec, scale, pair, path=path,
+                            return_stats=return_stats)
     if tables.ndim != 3:
         raise ValueError(
             f"paired tables are [G2, V2, O] (build_paired_tables), got "
@@ -354,17 +364,25 @@ def _pcilt_linear_paired(x, tables, spec, scale, group, path, mesh,
     x = _pad_paired_phantom(x, G2, group)
     if path == "fused":
         if mesh_shard_count(mesh, mesh_axis, G2) > 1:
-            return _pcilt_linear_sharded(x, tables, spec, scale, group,
-                                         path, mesh, mesh_axis, paired=True)
+            out = _pcilt_linear_sharded(x, tables, spec, scale, group,
+                                        path, mesh, mesh_axis, paired=True)
+            if return_stats:
+                _, count, ratio = quantize_with_stats(x, spec, scale)
+                return out, count, ratio
+            return out
         from repro.kernels import ops  # local import: kernels are optional
 
         flat = x.reshape(-1, x.shape[-1])
+        if return_stats:
+            out, count, ratio = ops.pcilt_fused_gemv_paired(
+                flat, tables, spec, scale, group, with_stats=True)
+            return out.reshape(*x.shape[:-1], O), count, ratio
         out = ops.pcilt_fused_gemv_paired(flat, tables, spec, scale, group)
         return out.reshape(*x.shape[:-1], O)
     # gather/onehot/kernel reference (and their sharded forms): a paired
     # table is exactly a grouped table of width 2*group.
     return pcilt_linear(x, tables, spec, scale, pair, path=path, mesh=mesh,
-                        mesh_axis=mesh_axis)
+                        mesh_axis=mesh_axis, return_stats=return_stats)
 
 
 def pcilt_linear(
@@ -379,7 +397,8 @@ def pcilt_linear(
     mesh_axis: str = "model",
     stacked=None,
     paired: bool = False,
-) -> jax.Array:
+    return_stats: bool = False,
+):
     """Quantize -> pack offsets -> fetch -> sum.   ``x: [..., n] -> [..., out]``.
 
     ``tables`` is the dense grouped ``[G, V, out]`` array, a
@@ -427,6 +446,18 @@ def pcilt_linear(
     single-device reference.  A generalized ``SegmentPlan`` cannot shard
     (its positions are arbitrary): combining ``plan=`` with a mesh that
     would shard raises rather than silently replicating.
+
+    With ``return_stats=True`` the call returns ``(out, count, ratio)``:
+    the saturation statistics of the quantizer feeding the fetch —
+    ``count`` (int32) elements whose pre-clip code left ``[0, K)`` and
+    ``ratio`` (f32) ``max(|x|)/scale`` — exactly
+    :func:`~repro.core.quantization.quantize_with_stats`'s definition.
+    ``out`` is bit-identical to the ``return_stats=False`` result.  On the
+    unsharded fused stacked/paired routes the counters are reduced inside
+    the fetch kernel's grid (no second pass over ``x``); every other route
+    derives the same stats host-side.  Zero-padding (group alignment,
+    paired phantom segments) never perturbs the stats: padded slots
+    quantize to ``zero_point``, which is in range.
     """
     if isinstance(tables, SharedTables):
         if paired:
@@ -453,7 +484,8 @@ def pcilt_linear(
                 "path='fused' (row-gather kernels) or the host-packed "
                 "reference paths")
         return _pcilt_linear_paired(x, tables, spec, scale, group, path,
-                                    mesh, mesh_axis, stacked)
+                                    mesh, mesh_axis, stacked,
+                                    return_stats=return_stats)
     if stacked is not None:
         if isinstance(tables, (SharedGroupedTables, ShardedSharedPool)):
             raise ValueError(
@@ -474,11 +506,20 @@ def pcilt_linear(
         if path == "fused":
             _check_contiguous_segments(path, None, x.shape[-1], G, group)
             if mesh_shard_count(mesh, mesh_axis, G) > 1:
-                return _pcilt_linear_stacked_sharded(
+                out = _pcilt_linear_stacked_sharded(
                     x, tables, stacked, spec, scale, group, mesh, mesh_axis)
+                if return_stats:
+                    _, count, ratio = quantize_with_stats(x, spec, scale)
+                    return out, count, ratio
+                return out
             from repro.kernels import ops  # local import: kernels optional
 
             flat = x.reshape(-1, x.shape[-1])
+            if return_stats:
+                out, count, ratio = ops.pcilt_fused_gemv_stacked(
+                    flat, tables, stacked, spec, scale, group,
+                    with_stats=True)
+                return out.reshape(*x.shape[:-1], O), count, ratio
             out = ops.pcilt_fused_gemv_stacked(flat, tables, stacked, spec,
                                                scale, group)
             return out.reshape(*x.shape[:-1], O)
@@ -486,6 +527,15 @@ def pcilt_linear(
         # the stacked fused kernel exists to avoid) and fall through.
         tables = jax.lax.dynamic_index_in_dim(
             tables, jnp.asarray(stacked, jnp.int32), 0, keepdims=False)
+    if return_stats:
+        # Counter-less routes (host-packed references, shared pools, plans,
+        # unstacked fused, sharded fallbacks): identical stats, computed
+        # host-side from the same pre-clip codes (XLA drops the duplicate
+        # quantize against the fetch's own).
+        _, count, ratio = quantize_with_stats(x, spec, scale)
+        out = pcilt_linear(x, tables, spec, scale, group, plan=plan,
+                           path=path, mesh=mesh, mesh_axis=mesh_axis)
+        return out, count, ratio
     shared = tables if isinstance(tables, SharedGroupedTables) else None
     if isinstance(tables, ShardedSharedPool):
         if path not in ("shared", "gather"):
@@ -817,7 +867,8 @@ def pcilt_depthwise_conv1d(
     tables: Optional[jax.Array] = None,
     path: str = "gather",
     padding: str = "CAUSAL",
-) -> jax.Array:
+    return_stats: bool = False,
+):
     """Depthwise conv1d where *one fetch produces one output element*.
 
     x: ``[B, T, C]``; filters: ``[k, C]`` (k taps per channel).  The k taps of
@@ -832,6 +883,13 @@ def pcilt_depthwise_conv1d(
     in one Pallas call (``repro.kernels.pcilt_fused_dwconv1d``) so the
     ``[B, T, C]`` offset tensor never exists in HBM; the host-packed paths
     (``gather``/``onehot``/``kernel``) build it explicitly.
+
+    ``return_stats=True`` additionally returns the saturation ``(count,
+    ratio)`` of the quantized signal (the :func:`quantize_with_stats`
+    definition over the full ``[B, T, C]`` input — causal/SAME pad zeros
+    quantize in range, so the count is the same for every padding mode).
+    The fused path reduces the counters inside the kernel grid; the
+    host-packed paths reuse the codes they quantize anyway.
     """
     k, C = filters.shape
     B, T, _ = x.shape
@@ -840,9 +898,15 @@ def pcilt_depthwise_conv1d(
     if path == "fused":
         from repro.kernels import ops  # local import: kernels are optional
 
+        if return_stats:
+            return ops.pcilt_fused_dwconv1d(x, tables, spec, scale, k,
+                                            padding=padding, with_stats=True)
         return ops.pcilt_fused_dwconv1d(x, tables, spec, scale, k,
                                         padding=padding)
-    codes = quantize(x, spec, scale)  # [B, T, C]
+    if return_stats:
+        codes, count, ratio = quantize_with_stats(x, spec, scale)  # [B,T,C]
+    else:
+        codes = quantize(x, spec, scale)  # [B, T, C]
     lo, hi = _dwconv_pads(k, padding)
     padded = jnp.pad(codes, ((0, 0), (lo, hi), (0, 0)))
     To = padded.shape[1] - k + 1
@@ -853,17 +917,21 @@ def pcilt_depthwise_conv1d(
         jnp.left_shift(taps.astype(jnp.int32), shifts[None, None, None]), axis=-1
     )  # [B, To, C]
     if path == "gather":
-        return jnp.take_along_axis(
+        out = jnp.take_along_axis(
             jnp.broadcast_to(tables, (B, To) + tables.shape),
             offsets[..., None],
             axis=-1,
         )[..., 0]
-    if path == "onehot":
+    elif path == "onehot":
         V = tables.shape[-1]
         oh = jax.nn.one_hot(offsets, V, dtype=tables.dtype)  # [B,To,C,V]
-        return jnp.einsum("btcv,cv->btc", oh, tables)
-    if path == "kernel":
+        out = jnp.einsum("btcv,cv->btc", oh, tables)
+    elif path == "kernel":
         from repro.kernels import ops
 
-        return ops.pcilt_dwconv1d(offsets, tables)
-    raise ValueError(f"unknown path {path!r}")
+        out = ops.pcilt_dwconv1d(offsets, tables)
+    else:
+        raise ValueError(f"unknown path {path!r}")
+    if return_stats:
+        return out, count, ratio
+    return out

@@ -32,6 +32,7 @@ __all__ = [
     "calibrate",
     "scale_from_amax",
     "quantize",
+    "quantize_with_stats",
     "dequantize",
     "fake_quant",
     "code_values",
@@ -115,6 +116,36 @@ def quantize(x: jax.Array, spec: QuantSpec, scale) -> jax.Array:
     q = jnp.round(x / scale) + spec.zero_point
     q = jnp.clip(q, 0, spec.cardinality - 1)
     return q.astype(spec.storage_dtype)
+
+
+def quantize_with_stats(x: jax.Array, spec: QuantSpec, scale):
+    """:func:`quantize` plus the saturation statistics the clip discards.
+
+    Returns ``(codes, count, ratio)``: ``codes`` exactly as :func:`quantize`
+    produces them, ``count`` the int32 number of elements whose *pre-clip*
+    code ``round(x / scale) + zero_point`` fell outside ``[0, K)`` (i.e. the
+    elements silently clamped to the table edge), and ``ratio`` the f32
+    ``max(|x|) / scale`` — how far the observed range overshoots (``> 1``
+    once activations exceed the calibrated absmax on a symmetric grid).
+
+    This is the host-reference oracle for the in-kernel saturation counters
+    of the fused fetch kernels: an element is *saturated* iff its rounded
+    code leaves the grid, so a value landing exactly on the clip edge is in
+    range.  Calibration drift (longer prompts, new domains, drifting
+    recurrent state) shows up here long before outputs visibly degrade —
+    the clip in :func:`quantize` is silent by design, and these stats are
+    the only signal it emits.
+    """
+    # Identical arithmetic (dtype included) to quantize: the pre-clip code is
+    # the same value quantize clamps, so codes here are bit-identical to
+    # quantize's and the saturation predicate is exact, not approximate.
+    q = jnp.round(x / scale) + spec.zero_point
+    sat = (q < 0) | (q > spec.cardinality - 1)
+    codes = jnp.clip(q, 0, spec.cardinality - 1).astype(spec.storage_dtype)
+    count = jnp.sum(sat, dtype=jnp.int32)
+    ratio = (jnp.max(jnp.abs(x)) / jnp.asarray(scale, x.dtype)).astype(
+        jnp.float32)
+    return codes, count, ratio
 
 
 def dequantize(codes: jax.Array, spec: QuantSpec, scale, dtype=jnp.float32) -> jax.Array:

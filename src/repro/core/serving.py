@@ -555,39 +555,59 @@ class PCILTMambaDecode:
         self._hoist()
 
     def _hoist(self) -> None:
-        # One jitted executor **per decode batch** (slot count): the batch
+        # One jitted executor **per (decode batch, stats) pair**: the batch
         # dimension R is a first-class tuned axis of the stacked kernels
         # (``fused_gemv_stacked`` keys carry R), so an engine serving R=8
         # slots and a sibling serving R=32 dispatch distinct compiled steps
         # — each closing over the same resident table stack — instead of
-        # sharing one retraced-on-shape-change function.
-        self._execs: Dict[int, object] = {}
+        # sharing one retraced-on-shape-change function.  The stats flag is
+        # a static trace property (counter outputs change the step's
+        # result pytree), so monitored and unmonitored steps likewise hold
+        # separate compiled executors.
+        self._execs: Dict[Tuple[int, bool], object] = {}
 
-    def executor(self, rows: int):
+    def executor(self, rows: int, stats: bool = False):
         """The hoisted jitted step for a decode batch of ``rows`` slots
         (built on first use, then cached — serving loops at a fixed slot
-        count pay tracing exactly once)."""
-        f = self._execs.get(rows)
+        count pay tracing exactly once).  ``stats=True`` builds the
+        drift-monitored variant: the step additionally returns the
+        per-layer saturation counters (``decode_step(with_stats=True)``)."""
+        key = (rows, stats)
+        f = self._execs.get(key)
         if f is None:
             f = jax.jit(
                 lambda p, c, t, ok, hok: self.model.decode_step(
                     p, c, t, self.ctx, pcilt=self.pcilt, layer_ok=ok,
-                    head_ok=hok))
-            self._execs[rows] = f
+                    head_ok=hok, with_stats=stats))
+            self._execs[key] = f
         return f
 
-    def rehoist(self) -> None:
+    def rehoist(self, verify: bool = False) -> None:
         """Rebuild the jitted executors after the bundle's table arrays were
         *replaced* (jit closes over the array values — swapping a dict entry
         has no effect on the compiled step until re-hoisted).  Drops every
-        per-slot-count executor; each is rebuilt lazily on its next step.
-        Deliberately does NOT re-verify integrity: detecting bad bytes at
+        cached executor; each is rebuilt lazily on its next step.
+
+        By default this does NOT re-verify integrity: detecting bad bytes at
         serving time is the health monitor's job, and the chaos suite
-        exercises exactly that path."""
+        exercises exactly that path.  ``verify=True`` opts in — the
+        recalibration hot-swap path uses it so a rebuild whose re-recorded
+        checksums don't match the freshly-swapped bytes fails loudly at the
+        swap, not silently at some later amortized check."""
+        if verify:
+            bad = self.verify_integrity()
+            if bad:
+                raise RuntimeError(
+                    f"PCILT bundle failed integrity verification at rehoist "
+                    f"(corrupted tables): {bad}")
         self._hoist()
 
-    def step(self, params, cache, tokens, layer_ok=None, head_ok=None):
-        """One converted decode step: ``(logits, new_cache)``.
+    def step(self, params, cache, tokens, layer_ok=None, head_ok=None,
+             with_stats: bool = False):
+        """One converted decode step: ``(logits, new_cache)`` — or, with
+        ``with_stats=True``, ``(logits, new_cache, sat)`` where ``sat`` is
+        the per-layer saturation-counter pytree of
+        ``MambaLM.decode_step(with_stats=True)``.
 
         ``layer_ok`` (``[L]`` bool) / ``head_ok`` (bool) demote unhealthy
         layers' fetches (and the PCILT logits head) to their exact dense
@@ -596,7 +616,7 @@ class PCILTMambaDecode:
             layer_ok = jnp.ones((self.model.cfg.n_layers,), bool)
         if head_ok is None:
             head_ok = jnp.asarray(True)
-        fn = self.executor(int(tokens.shape[0]))
+        fn = self.executor(int(tokens.shape[0]), stats=with_stats)
         return fn(params, cache, tokens, jnp.asarray(layer_ok, bool),
                   jnp.asarray(head_ok, bool))
 
@@ -668,7 +688,13 @@ class PCILTMambaDecode:
         ``batch`` may be an int or an iterable of ints — the stacked keys
         carry the decode batch ``R``, so an engine that serves several slot
         counts (8-64) tunes each R's row-tile sweep once up front:
-        ``decode.tune(batch=(8, 32, 64))``."""
+        ``decode.tune(batch=(8, 32, 64))``.
+
+        Each kernel is tuned in both the uncounted and the counter-carrying
+        (``with_stats=True``) variant: monitored serving is the engine
+        default, and the ``*_sat`` key families never share entries with
+        the base ones, so skipping them would leave the sentinel's hot
+        path on heuristic tiles."""
         from repro.core.lut_layers import mesh_shard_count
         from repro.kernels import ops  # local import: kernels are optional
 
@@ -677,9 +703,11 @@ class PCILTMambaDecode:
         k = self.model.cfg.ssm.conv_kernel
         for b in batches:
             win = jnp.zeros((b, k, conv_t.shape[1]), jnp.float32)
-            ops.pcilt_fused_dwconv1d(win, conv_t[0], self.pcilt["spec"],
-                                     self.pcilt["scale"], k, padding="VALID",
-                                     autotune=True)
+            for stats in (False, True):
+                ops.pcilt_fused_dwconv1d(win, conv_t[0], self.pcilt["spec"],
+                                         self.pcilt["scale"], k,
+                                         padding="VALID", autotune=True,
+                                         with_stats=stats)
         proj = self.pcilt.get("proj")
         if proj is None or proj.get("path") != "fused":
             return
@@ -691,16 +719,19 @@ class PCILTMambaDecode:
                                  proj.get("mesh_axis", "model"), G)
             Gl = G // D
             for b in batches:
-                if paired:
-                    x = jnp.zeros((b, Gl * 2 * group), jnp.float32)
-                    ops.pcilt_fused_gemv_paired_stacked(
-                        x, t[:Gl], 0, proj["spec"], proj["scales"][name][0],
-                        group, autotune=True)
-                else:
-                    x = jnp.zeros((b, Gl * group), jnp.float32)
-                    ops.pcilt_fused_gemv_stacked(
-                        x, t[:, :Gl], 0, proj["spec"],
-                        proj["scales"][name][0], group, autotune=True)
+                for stats in (False, True):
+                    if paired:
+                        x = jnp.zeros((b, Gl * 2 * group), jnp.float32)
+                        ops.pcilt_fused_gemv_paired_stacked(
+                            x, t[:Gl], 0, proj["spec"],
+                            proj["scales"][name][0], group, autotune=True,
+                            with_stats=stats)
+                    else:
+                        x = jnp.zeros((b, Gl * group), jnp.float32)
+                        ops.pcilt_fused_gemv_stacked(
+                            x, t[:, :Gl], 0, proj["spec"],
+                            proj["scales"][name][0], group, autotune=True,
+                            with_stats=stats)
 
 
 class HealthMonitor:
@@ -730,11 +761,41 @@ class HealthMonitor:
     oracle while every healthy layer keeps fetching — serving continues,
     degraded and logged, never wrong.  ``last_verified`` records the newest
     tick each layer passed at, bounding how far a rollback must rewind.
+
+    Calibration-drift sentinel (PR 10): the CRC/oracle checks above cover
+    *table* corruption, but PCILT is only correct while runtime activations
+    stay inside the absmax range captured at calibration — ``quantize``
+    silently clips anything outside, yielding wrong-but-finite outputs no
+    checksum can see.  :meth:`observe_saturation` closes that hole from the
+    in-kernel saturation counters of the monitored decode step
+    (``step(with_stats=True)``): per (layer, quantizer-grid) saturation
+    *rates* feed an EWMA, classified against two thresholds —
+    ``sat_hard`` (instant ``"saturated"``: this step's outputs are already
+    suspect) and ``sat_drift`` on the EWMA (``"drifting"``: sustained mild
+    clipping).  Either breach demotes the drifting layer through the same
+    typed ``layer_ok`` path as a CRC breach (event ``kind="drift"``) and
+    queues it on :attr:`drift_pending`; the serving loop then calls
+    :meth:`recalibrate_layer` between ticks — tables are cheap to rebuild
+    (the paper's point), so the layer's grid is re-scaled to the observed
+    peak ``|x|/scale`` ratio (× ``headroom``), its stacked tables are
+    hot-swapped with checksums re-recorded, and the layer repromotes.
+    ``max_recalibrations`` bounds thrash: a layer that keeps drifting past
+    its budget stays demoted on the exact dense oracle (sticky).  The first
+    recalibration sets :attr:`tainted` — outputs now come from a different
+    (better-calibrated) grid than conversion time, so token streams are no
+    longer comparable to a pre-drift reference.
     """
+
+    #: the distinct quantizer grids a monitored decode step reports, in
+    #: the order ``mamba_decode`` emits them
+    SAT_GRIDS = ("in", "conv", "out")
 
     def __init__(self, decode: PCILTMambaDecode, params, *,
                  oracle_every: int = 4, oracle_batch: int = 1,
-                 oracle_tol: float = 5e-3, seed: int = 0):
+                 oracle_tol: float = 5e-3, seed: int = 0,
+                 sat_hard: float = 0.25, sat_drift: float = 0.02,
+                 sat_alpha: float = 0.2, headroom: float = 1.05,
+                 max_recalibrations: int = 2):
         cfg = decode.model.cfg
         self.decode = decode
         self.params = params
@@ -749,8 +810,37 @@ class HealthMonitor:
         self.checks = 0
         self.events: List[Dict] = []
         rng = np.random.default_rng(seed)
+        d_inner = cfg.ssm.expand * cfg.d_model
+        conv_ch = d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
         self._probe = (0.3 * rng.normal(
             size=(oracle_batch, cfg.d_model))).astype(np.float32)
+        # wo consumes the post-norm gated inner stream, not the block input
+        # — the rotating oracle probe needs both widths.
+        self._probe_out = (0.3 * rng.normal(
+            size=(oracle_batch, d_inner))).astype(np.float32)
+        self._oracle_rr = 0
+        # -- drift sentinel state ------------------------------------------
+        self.sat_hard = float(sat_hard)
+        self.sat_drift = float(sat_drift)
+        self.sat_alpha = float(sat_alpha)
+        self.headroom = float(headroom)
+        self.max_recalibrations = int(max_recalibrations)
+        #: saturable elements per decode row per grid — the denominator
+        #: turning the kernels' raw counts into rates
+        self._sat_elems = {"in": int(cfg.d_model),
+                           "conv": int(cfg.ssm.conv_kernel * conv_ch),
+                           "out": int(d_inner)}
+        self.sat_last = {g: np.zeros(self.n_layers) for g in self.SAT_GRIDS}
+        self.sat_ewma = {g: np.zeros(self.n_layers) for g in self.SAT_GRIDS}
+        #: running peak |x|/scale per (grid, layer) since last recalibration
+        #: — the observed absmax the rebuild re-scales to
+        self.sat_peak = {g: np.zeros(self.n_layers) for g in self.SAT_GRIDS}
+        #: (layer, grid) pairs demoted for drift, awaiting recalibration
+        self.drift_pending: List[Tuple[int, str]] = []
+        self.recalibrations = np.zeros(self.n_layers, np.int64)
+        #: True once any recalibration swapped tables: outputs thereafter
+        #: come from a different quantization grid than conversion time
+        self.tainted = False
 
     # -- masks / state -------------------------------------------------------
 
@@ -783,34 +873,57 @@ class HealthMonitor:
         """NaN/Inf gate on the step's logits (True = healthy)."""
         return bool(jnp.all(jnp.isfinite(logits)))
 
-    def _oracle_check(self, layer: int) -> bool:
-        """Probe one layer's ``wx`` table fetch against the fake-quant dense
-        matmul — exact on the grid, so any mismatch beyond float-sum
-        reassociation noise is corruption."""
+    def _oracle_check(self, layer: int, name: str = "wx") -> bool:
+        """Probe one layer's ``name`` table fetch against the fake-quant
+        dense matmul — exact on the grid, so any mismatch beyond float-sum
+        reassociation noise is corruption.  ``on_tick`` rotates ``name``
+        across every converted projection (``nn.ssm.PROJ_NAMES``) so a
+        corrupt ``wo`` or ``wdt`` is probed directly, not only via CRC."""
         proj = self.decode.pcilt.get("proj")
-        if proj is None or "wx" not in proj["tables"]:
+        if proj is None or name not in proj["tables"]:
             return True
-        t = proj["tables"]["wx"]  # [L, G, V, O] (paired: [G/2, L, V^2, O])
+        t = proj["tables"][name]  # [L, G, V, O] (paired: [G/2, L, V^2, O])
         spec, group = proj["spec"], proj["group"]
         paired = bool(proj.get("paired"))
-        scale = proj["scales"]["wx"][layer]
-        x = self._probe
+        scale = proj["scales"][name][layer]
+        x = self._probe_out if name == "wo" else self._probe
         n = t.shape[0] * 2 * group if paired else t.shape[1] * group
         pad = n - x.shape[-1]
         xx = np.concatenate(
             [x, np.zeros((x.shape[0], pad), x.dtype)], -1) if pad else x
         got = pcilt_linear(jnp.asarray(xx), t, spec, scale, group,
                            path="gather", stacked=int(layer), paired=paired)
-        k = self.params["blocks"]["mixer"]["wx"]["kernel"][layer]
+        k = self.params["blocks"]["mixer"][name]["kernel"][layer]
         want = fake_quant(jnp.asarray(x), spec, scale) @ k.astype(jnp.float32)
         return bool(np.allclose(np.asarray(got), np.asarray(want),
                                 rtol=self.oracle_tol, atol=self.oracle_tol))
 
-    def on_tick(self, tick: int) -> List[Dict]:
+    def _next_probe_name(self) -> str:
+        """Round-robin over the converted projections for the dense-oracle
+        spot-check (falls back to ``wx`` when no projections converted)."""
+        from repro.nn.ssm import PROJ_NAMES
+
+        proj = self.decode.pcilt.get("proj")
+        names = tuple(n for n in PROJ_NAMES
+                      if proj is not None and n in proj["tables"]) or ("wx",)
+        name = names[self._oracle_rr % len(names)]
+        self._oracle_rr += 1
+        return name
+
+    def on_tick(self, tick: int, sat=None, rows: int = 1) -> List[Dict]:
         """Amortized health pass for one decode tick; returns the breach
-        events raised (empty = all checked slices clean)."""
+        events raised (empty = all checked slices clean).
+
+        ``sat`` (optional) is the saturation-counter pytree of a monitored
+        step (``PCILTMambaDecode.step(with_stats=True)``'s third result) and
+        ``rows`` its decode batch; when given, the drift sentinel runs
+        (:meth:`observe_saturation`) *before* the amortized CRC pass, so an
+        instant ``"saturated"`` classification demotes on the very tick
+        whose outputs it indicts."""
         tick = int(tick)
         breaches: List[Dict] = []
+        if sat is not None:
+            breaches.extend(self.observe_saturation(tick, sat, rows))
         candidates = [l for l in range(self.n_layers) if self.layer_ok[l]]
         if candidates:
             l = candidates[tick % len(candidates)]
@@ -821,10 +934,12 @@ class HealthMonitor:
             else:
                 self.checks += 1
                 if self.oracle_every and \
-                        self.checks % self.oracle_every == 0 and \
-                        not self._oracle_check(l):
-                    breaches.append(self.demote(
-                        "layer", l, tick, "dense-oracle divergence"))
+                        self.checks % self.oracle_every == 0:
+                    name = self._next_probe_name()
+                    if not self._oracle_check(l, name):
+                        breaches.append(self.demote(
+                            "layer", l, tick,
+                            f"dense-oracle divergence ({name})"))
             if self.layer_ok[l]:
                 self.last_verified[l] = tick
         if self.head_ok and self.decode.pcilt.get("head") is not None and \
@@ -836,6 +951,189 @@ class HealthMonitor:
             else:
                 self.head_last_verified = tick
         return breaches
+
+    # -- calibration-drift sentinel ------------------------------------------
+
+    def saturation_state(self, grid: str, layer: int) -> str:
+        """Classify one (grid, layer) quantizer: ``"healthy"`` /
+        ``"drifting"`` (EWMA past ``sat_drift``) / ``"saturated"`` (last
+        observed rate past ``sat_hard``)."""
+        if self.sat_last[grid][layer] >= self.sat_hard:
+            return "saturated"
+        if self.sat_ewma[grid][layer] >= self.sat_drift:
+            return "drifting"
+        return "healthy"
+
+    def observe_saturation(self, tick: int, sat, rows: int) -> List[Dict]:
+        """Feed one monitored step's saturation counters into the sentinel.
+
+        ``sat`` is ``{"in"|"conv"|"out": {"count" [L], "ratio" [L]}}`` from
+        ``decode_step(with_stats=True)``; counts normalize to per-element
+        rates by ``rows ×`` the grid's element count.  A layer whose rate
+        breaches ``sat_hard`` (instant) or whose EWMA breaches ``sat_drift``
+        (sustained) is demoted — typed event ``kind="drift"`` carrying the
+        grid, classification, and observed peak ``|x|/scale`` — and queued
+        on :attr:`drift_pending` for :meth:`recalibrate_layer`.  Demoted
+        layers keep contributing (the oracle branch computes the same stats
+        host-side), so the recalibration re-scale always sees the freshest
+        peak ratio."""
+        tick = int(tick)
+        breaches: List[Dict] = []
+        # one batched device->host pull for the whole stats pytree (six
+        # per-array np.asarray syncs add measurable per-tick latency).
+        sat = jax.device_get(sat)
+        for grid, st in sat.items():
+            counts = np.asarray(st["count"], np.int64)
+            ratios = np.asarray(st["ratio"], np.float64)
+            rates = counts / float(max(int(rows), 1) * self._sat_elems[grid])
+            a = self.sat_alpha
+            self.sat_last[grid] = rates
+            self.sat_ewma[grid] = (1.0 - a) * self.sat_ewma[grid] + a * rates
+            self.sat_peak[grid] = np.maximum(self.sat_peak[grid], ratios)
+            for l in range(self.n_layers):
+                if not self.layer_ok[l]:
+                    continue
+                state = self.saturation_state(grid, l)
+                if state == "healthy":
+                    continue
+                if state == "saturated":
+                    reason = (f"saturation {grid} rate={rates[l]:.4f} >= "
+                              f"sat_hard={self.sat_hard}")
+                else:
+                    reason = (f"saturation {grid} "
+                              f"ewma={self.sat_ewma[grid][l]:.4f} >= "
+                              f"sat_drift={self.sat_drift}")
+                ev = self.demote("drift", l, tick, reason)
+                ev.update(grid=grid, state=state, rate=float(rates[l]),
+                          ewma=float(self.sat_ewma[grid][l]),
+                          ratio=float(self.sat_peak[grid][l]))
+                self.drift_pending.append((l, grid))
+                breaches.append(ev)
+        return breaches
+
+    def recalibrate_layer(self, layer: int, grid: str, tick: int) -> Dict:
+        """Online table rebuild for one drift-demoted layer, then repromote.
+
+        The observed peak ``|x|/scale`` ratio pins the post-drift absmax
+        (``ratio × old_scale``); ``headroom`` pads it so an activation just
+        past the old edge doesn't immediately re-saturate.  The drifted
+        grid's projections (``"in"``: the five block-input projections;
+        ``"out"``: ``wo``) are rebuilt at the new scale with the *same*
+        arithmetic as conversion, hot-swapped into the stacked arrays,
+        their per-layer checksums re-recorded, and the executors re-hoisted
+        with ``verify=True`` — so ``last_verified`` keeps meaning "checked
+        against a record that matches the deployed bytes".  The ``"conv"``
+        grid shares one global scale across all layers and stays demoted
+        instead (sticky — rebuilding every layer's conv tables mid-serve is
+        a full reconversion, not a hot-swap).  A layer past its
+        ``max_recalibrations`` budget also stays demoted: the exact dense
+        oracle is degraded-but-correct, and thrash means the workload, not
+        the tables, moved."""
+        l, tick = int(layer), int(tick)
+
+        def _sticky(reason: str) -> Dict:
+            ev = {"kind": "drift_sticky", "layer": l, "tick": tick,
+                  "grid": grid, "reason": reason}
+            self.events.append(ev)
+            log.warning("drift at layer %d stays demoted: %s", l, reason)
+            return ev
+
+        proj = self.decode.pcilt.get("proj")
+        if grid == "conv":
+            return _sticky("conv grid shares one global scale across layers "
+                           "— per-layer hot-swap impossible; demoted to the "
+                           "dense oracle")
+        if proj is None:
+            return _sticky("no converted projections to rebuild")
+        if self.recalibrations[l] >= self.max_recalibrations:
+            return _sticky(
+                f"recalibration budget exhausted "
+                f"({int(self.recalibrations[l])}/{self.max_recalibrations})")
+        spec, group = proj["spec"], proj["group"]
+        paired = bool(proj.get("paired"))
+        integ = self.decode.pcilt["integrity"]["proj"]
+        names = ("wo",) if grid == "out" else tuple(
+            n for n in proj["tables"] if n != "wo")
+        new_amax = float(self.sat_peak[grid][l]) * self.headroom
+        new_scales: Dict[str, float] = {}
+        for name in names:
+            old_scale = float(np.asarray(proj["scales"][name][l]))
+            new_scale = scale_from_amax(
+                jnp.asarray(new_amax * old_scale, jnp.float32), spec)
+            wf = jnp.asarray(
+                self.params["blocks"]["mixer"][name]["kernel"][l],
+                jnp.float32)
+            t = proj["tables"][name]
+            if paired:
+                # seg-major [G2, L, V2, O]: rebuild the one layer through
+                # the same per-layer-vmapped builder as conversion
+                from .pcilt import build_paired_stacked_tables
+
+                t_new = build_paired_stacked_tables(
+                    wf[None], spec, jnp.reshape(new_scale, (1,)),
+                    group)[:, 0]
+                t = t.at[:, l].set(t_new.astype(t.dtype))
+                proj["tables"][name] = t
+                integ[name][l] = table_checksum(np.asarray(t)[:, l])
+            else:
+                pad_n = (-wf.shape[0]) % group
+                if pad_n:  # group-alignment slots, exactly as conversion
+                    wf = jnp.concatenate(
+                        [wf, jnp.zeros((pad_n, wf.shape[1]), wf.dtype)], 0)
+                t_new = build_grouped_tables(wf, spec, new_scale, group)
+                t = t.at[l].set(t_new.astype(t.dtype))
+                proj["tables"][name] = t
+                integ[name][l] = table_checksum(np.asarray(t)[l])
+            proj["scales"][name] = proj["scales"][name].at[l].set(
+                jnp.asarray(new_scale, jnp.float32))
+            new_scales[name] = float(np.asarray(new_scale))
+        # executors close over the swapped arrays — rebuild them, verifying
+        # the re-recorded checksums against the deployed bytes (satellite:
+        # rehoist(verify=True))
+        self.decode.rehoist(verify=True)
+        self.recalibrations[l] += 1
+        self.tainted = True
+        self.layer_ok[l] = True
+        self.last_verified[l] = tick
+        self.sat_ewma[grid][l] = 0.0
+        self.sat_last[grid][l] = 0.0
+        self.sat_peak[grid][l] = 0.0
+        ev = {"kind": "recalibrate", "layer": l, "tick": tick, "grid": grid,
+              "amax_ratio": new_amax, "scales": new_scales,
+              "attempt": int(self.recalibrations[l])}
+        self.events.append(ev)
+        log.warning("recalibrated layer %d grid %r at tick %d: new scales "
+                    "%s — repromoted", l, grid, tick, new_scales)
+        return ev
+
+    def recalibrate_pending(self, tick: int) -> List[Dict]:
+        """Drain :attr:`drift_pending` (the between-ticks hook the serving
+        loop calls): one :meth:`recalibrate_layer` per queued (layer, grid),
+        deduplicated."""
+        events: List[Dict] = []
+        seen = set()
+        pending, self.drift_pending = self.drift_pending, []
+        for l, grid in pending:
+            if (l, grid) in seen:
+                continue
+            seen.add((l, grid))
+            events.append(self.recalibrate_layer(l, grid, tick))
+        return events
+
+    def saturation_summary(self) -> Dict:
+        """Compact per-tick telemetry block: worst rate/EWMA per grid, total
+        recalibrations, pending drift responses, taint flag."""
+        return {
+            "rate": {g: float(self.sat_last[g].max(initial=0.0))
+                     for g in self.SAT_GRIDS},
+            "ewma": {g: float(self.sat_ewma[g].max(initial=0.0))
+                     for g in self.SAT_GRIDS},
+            "peak_ratio": {g: float(self.sat_peak[g].max(initial=0.0))
+                           for g in self.SAT_GRIDS},
+            "recalibrations": int(self.recalibrations.sum()),
+            "pending": len(self.drift_pending),
+            "tainted": bool(self.tainted),
+        }
 
 
 def convert_mamba_decode(model, params, calib_tokens, ctx=None, *,

@@ -122,26 +122,61 @@ _DEFAULT_CACHE = os.path.join(
 )
 
 
+#: quarantined cache files kept per path — repeated corruption (flaky disk,
+#: crashing writer) must not grow unbounded ``.corrupt`` litter
+QUARANTINE_KEEP = 3
+
+
+def _quarantine_path(path: str) -> str:
+    """Timestamp-suffixed quarantine name: ``<path>.corrupt-<ns>``.  Distinct
+    per incident, so a second corruption never overwrites the post-mortem
+    bytes of the first (the fixed ``.corrupt`` suffix did exactly that)."""
+    return f"{path}.corrupt-{time.time_ns()}"
+
+
+def _prune_quarantine(path: str, keep: int = QUARANTINE_KEEP) -> None:
+    """Drop all but the ``keep`` newest quarantined copies of ``path``.
+    Sorted by the name's timestamp suffix, not mtime — quarantine renames
+    preserve the corrupt file's original mtime, which says when it was
+    *written*, not when it was caught."""
+    base = os.path.basename(path) + ".corrupt-"
+    d = os.path.dirname(path) or "."
+    try:
+        names = [n for n in os.listdir(d) if n.startswith(base)
+                 and n[len(base):].isdigit()]
+    except OSError:
+        return
+    for stale in sorted(names, key=lambda n: int(n[len(base):]))[:-keep]:
+        try:
+            os.remove(os.path.join(d, stale))
+        except OSError:
+            pass
+
+
 def _read_json(path: str, quarantine: bool = True) -> Dict[str, dict]:
     """Read a cache file, tolerating absence silently but never *silently*
     resetting on corruption: an unreadable/unparseable file is loudly
-    warned about and (when ``quarantine``) renamed to ``<path>.corrupt`` so
-    the bytes survive for post-mortem while tuning restarts empty."""
+    warned about and (when ``quarantine``) renamed to a timestamped
+    ``<path>.corrupt-<ns>`` so the bytes survive for post-mortem while
+    tuning restarts empty.  Only the newest :data:`QUARANTINE_KEEP`
+    quarantined copies are retained."""
     try:
         with open(path) as f:
             return json.load(f)
     except FileNotFoundError:
         return {}
     except (OSError, ValueError) as e:
+        qpath = _quarantine_path(path)
         log.warning(
             "autotune cache %s is unreadable (%s: %s); starting empty — "
-            "corrupt file preserved at %s.corrupt",
-            path, type(e).__name__, e, path)
+            "corrupt file preserved at %s",
+            path, type(e).__name__, e, qpath)
         if quarantine:
             try:
-                os.replace(path, path + ".corrupt")
+                os.replace(path, qpath)
             except OSError:
                 pass  # read-only fs etc.: keep serving, just without quarantine
+            _prune_quarantine(path)
         return {}
 
 

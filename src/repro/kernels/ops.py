@@ -258,7 +258,8 @@ def pcilt_fused_dwconv1d(
     padding: str = "CAUSAL",
     tiles=None,
     autotune: Optional[bool] = None,
-) -> jax.Array:
+    with_stats: bool = False,
+):
     """x [B, T, C] float, tables [C, V] (``V = 2**(bits*k)``) -> [B, To, C].
 
     The fused depthwise pipeline: the only host-side work is the time
@@ -269,6 +270,12 @@ def pcilt_fused_dwconv1d(
     ``"CAUSAL"`` (``To = T``, taps ``t-k+1..t`` — the Mamba/SSM decode
     frontend), ``"SAME"`` (centered), or ``"VALID"`` (``To = T - k + 1`` —
     e.g. a pre-assembled ``[B, k, C]`` decode window yielding one output).
+
+    ``with_stats=True`` runs the counter-carrying kernel variant and
+    returns ``(out, count, ratio)`` saturation stats (the count covers the
+    raw ``[B, T, C]`` signal exactly — time/channel pads quantize in
+    range).  Counted and uncounted timings never share an autotune entry:
+    stats dispatch records under the ``fused_dwconv1d_sat`` key family.
     """
     B, T, C = x.shape
     C2, V = tables.shape
@@ -278,12 +285,13 @@ def pcilt_fused_dwconv1d(
             f"(x {x.shape}, tables {tables.shape})")
     x = jnp.pad(x, ((0, 0), _dwconv_pads(k, padding), (0, 0)))
     To = x.shape[1] - k + 1
-    key = atn.shape_key("fused_dwconv1d", dtype=tables.dtype,
+    kname = "fused_dwconv1d_sat" if with_stats else "fused_dwconv1d"
+    key = atn.shape_key(kname, dtype=tables.dtype,
                         backend=jax.default_backend(),
                         B=B, T=To, C=C, V=V, k=k, bits=spec.bits)
     s2 = _scale_2d(scale, x.dtype)
     kw = dict(bits=spec.bits, zero_point=spec.zero_point, k=k,
-              interpret=not on_tpu())
+              counters=with_stats, interpret=not on_tpu())
     xp, _ = _pad_axis(x, 2, 128 if C >= 128 else 1)
     tp, _ = _pad_axis(tables, 0, 128 if C >= 128 else 1)
     Cp = xp.shape[-1]
@@ -302,6 +310,10 @@ def pcilt_fused_dwconv1d(
         tiles = (cfg.Bb, cfg.Ob)
     tiles = (atn._div_down(To, max(1, tiles[0])),
              atn._div_down(Cp, max(1, tiles[1])))
+    if with_stats:
+        out, cnt, ratio = pcilt_fused_dwconv1d_pallas(xp, s2, tp,
+                                                      tiles=tiles, **kw)
+        return out[..., :C], cnt, ratio
     out = pcilt_fused_dwconv1d_pallas(xp, s2, tp, tiles=tiles, **kw)
     return out[..., :C]
 
@@ -309,9 +321,9 @@ def pcilt_fused_dwconv1d(
 def _fused_dwconv1d_bench(xp, s2, tp, cfg, kw, To):
     tiles = (atn._div_down(To, max(1, cfg.Bb)),
              atn._div_down(xp.shape[-1], max(1, cfg.Ob)))
-    return lambda: pcilt_fused_dwconv1d_pallas(
+    return lambda: jax.block_until_ready(pcilt_fused_dwconv1d_pallas(
         xp, s2, tp, tiles=tiles, **kw
-    ).block_until_ready()
+    ))
 
 
 # ----------------------------------------------------------------------------
@@ -388,7 +400,8 @@ def pcilt_fused_gemv_stacked(
     group: int,
     tiles=None,
     autotune: Optional[bool] = None,
-) -> jax.Array:
+    with_stats: bool = False,
+):
     """x [B, n] float, tables [L, G, V, O] (``n == G * group``), layer a
     (possibly traced) int scalar -> [B, O].
 
@@ -406,6 +419,12 @@ def pcilt_fused_gemv_stacked(
     ``R != B`` without a key-grammar change), and — under a mesh, where
     this wrapper sees one device's ``[L, G/D, V, O]`` shard — the *local*
     ``G``.
+
+    ``with_stats=True`` runs the counter-carrying kernel variant and
+    returns ``(out, count, ratio)`` — the int32 saturation count and the
+    f32 ``max(|x|)/scale`` overshoot of this call's quantization.  Stats
+    dispatch records under the ``fused_gemv_stacked_sat`` key family (same
+    dims), so counted and uncounted timings never share a cache entry.
     """
     B, n = x.shape
     L, G, V, O = tables.shape
@@ -414,14 +433,15 @@ def pcilt_fused_gemv_stacked(
             f"x trailing dim {n} != G*group = {G}*{group} (the stacked fused "
             f"kernel packs contiguous segments; generalized SegmentPlans are "
             f"rejected upstream at the core.lut_layers dispatch boundary)")
-    key = atn.shape_key("fused_gemv_stacked", dtype=tables.dtype,
+    kname = "fused_gemv_stacked_sat" if with_stats else "fused_gemv_stacked"
+    key = atn.shape_key(kname, dtype=tables.dtype,
                         backend=jax.default_backend(),
                         B=B, R=B, L=L, G=G, V=V, O=O, g=group,
                         bits=spec.bits)
     s2 = _scale_2d(scale, x.dtype)
     l1 = jnp.asarray(layer, jnp.int32).reshape(1)
     kw = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
-              interpret=not on_tpu())
+              counters=with_stats, interpret=not on_tpu())
     if tiles is None:
         cfg = atn.lookup(key)
         if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
@@ -439,6 +459,10 @@ def pcilt_fused_gemv_stacked(
     tiles = _fit_tiles(tiles, B, G, O)
     xp, _ = _pad_axis(x, 0, tiles[0])  # zero rows quantize harmlessly
     tp, _ = _pad_axis(tables, 3, tiles[2] if O >= 128 else 1)
+    if with_stats:
+        out, cnt, ratio = pcilt_fused_gemv_stacked_pallas(l1, xp, s2, tp,
+                                                          tiles=tiles, **kw)
+        return out[:B, :O], cnt, ratio
     out = pcilt_fused_gemv_stacked_pallas(l1, xp, s2, tp, tiles=tiles, **kw)
     return out[:B, :O]
 
@@ -448,9 +472,9 @@ def _fused_gemv_stacked_bench(l1, x, s2, tables, cfg, kw):
     tiles = _fit_tiles((cfg.Bb, cfg.Gb, cfg.Ob), B, G, O)
     xp, _ = _pad_axis(x, 0, tiles[0])
     tp, _ = _pad_axis(tables, 3, tiles[2] if O >= 128 else 1)
-    return lambda: pcilt_fused_gemv_stacked_pallas(
+    return lambda: jax.block_until_ready(pcilt_fused_gemv_stacked_pallas(
         l1, xp, s2, tp, tiles=tiles, **kw
-    ).block_until_ready()
+    ))
 
 
 def pcilt_fused_gemv_paired(
@@ -461,7 +485,8 @@ def pcilt_fused_gemv_paired(
     group: int,
     tiles=None,
     autotune: Optional[bool] = None,
-) -> jax.Array:
+    with_stats: bool = False,
+):
     """x [B, n] float, paired tables [G2, V2, O] (``n == G2 * 2 * group``,
     ``V2 = (2**(bits*group))**2``) -> [B, O].
 
@@ -470,6 +495,10 @@ def pcilt_fused_gemv_paired(
     the fetch count and adder-tree depth.  Keys record under
     ``fused_gemv_paired`` with **paired-space** ``G``/``V`` — the shapes
     the kernel actually stages.
+
+    ``with_stats=True`` returns ``(out, count, ratio)`` saturation stats
+    (see :func:`pcilt_fused_gemv_stacked`); keys record under
+    ``fused_gemv_paired_sat``.
     """
     B, n = x.shape
     G2, V2, O = tables.shape
@@ -478,12 +507,13 @@ def pcilt_fused_gemv_paired(
             f"x trailing dim {n} != G2*2*group = {G2}*2*{group} (pad x over "
             f"the phantom segment when the unpaired G was odd — "
             f"core.lut_layers does this for you)")
-    key = atn.shape_key("fused_gemv_paired", dtype=tables.dtype,
+    kname = "fused_gemv_paired_sat" if with_stats else "fused_gemv_paired"
+    key = atn.shape_key(kname, dtype=tables.dtype,
                         backend=jax.default_backend(),
                         B=B, G=G2, V=V2, O=O, g=group, bits=spec.bits)
     s2 = _scale_2d(scale, x.dtype)
     kw = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
-              interpret=not on_tpu())
+              counters=with_stats, interpret=not on_tpu())
     if tiles is None:
         cfg = atn.lookup(key)
         if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
@@ -503,6 +533,10 @@ def pcilt_fused_gemv_paired(
     tiles = _fit_tiles(tiles, B, G2, O)
     xp, _ = _pad_axis(x, 0, tiles[0])  # zero rows quantize harmlessly
     tp, _ = _pad_axis(tables, 2, tiles[2] if O >= 128 else 1)
+    if with_stats:
+        out, cnt, ratio = pcilt_fused_gemv_paired_pallas(xp, s2, tp,
+                                                         tiles=tiles, **kw)
+        return out[:B, :O], cnt, ratio
     out = pcilt_fused_gemv_paired_pallas(xp, s2, tp, tiles=tiles, **kw)
     return out[:B, :O]
 
@@ -512,9 +546,9 @@ def _fused_gemv_paired_bench(x, s2, tables, cfg, kw):
     tiles = _fit_tiles((cfg.Bb, cfg.Gb, cfg.Ob), B, G2, O)
     xp, _ = _pad_axis(x, 0, tiles[0])
     tp, _ = _pad_axis(tables, 2, tiles[2] if O >= 128 else 1)
-    return lambda: pcilt_fused_gemv_paired_pallas(
+    return lambda: jax.block_until_ready(pcilt_fused_gemv_paired_pallas(
         xp, s2, tp, tiles=tiles, **kw
-    ).block_until_ready()
+    ))
 
 
 def pcilt_fused_gemv_paired_stacked(
@@ -526,7 +560,8 @@ def pcilt_fused_gemv_paired_stacked(
     group: int,
     tiles=None,
     autotune: Optional[bool] = None,
-) -> jax.Array:
+    with_stats: bool = False,
+):
     """x [B, n] float, **segment-major** paired tables [G2, L, V2, O]
     (``n == G2 * 2 * group``), layer a (possibly traced) int scalar
     -> [B, O].
@@ -541,6 +576,10 @@ def pcilt_fused_gemv_paired_stacked(
     the row-tile sweep anchors on, keyed explicitly like the dense stacked
     family); under a mesh the wrapper sees one device's ``[G2/D, L, V2, O]``
     shard and keys carry the local ``G``.
+
+    ``with_stats=True`` returns ``(out, count, ratio)`` saturation stats
+    (see :func:`pcilt_fused_gemv_stacked`); keys record under
+    ``fused_gemv_paired_stacked_sat``.
     """
     B, n = x.shape
     G2, L, V2, O = tables.shape
@@ -549,14 +588,16 @@ def pcilt_fused_gemv_paired_stacked(
             f"x trailing dim {n} != G2*2*group = {G2}*2*{group} (pad x over "
             f"the phantom segment when the unpaired G was odd — "
             f"core.lut_layers does this for you)")
-    key = atn.shape_key("fused_gemv_paired_stacked", dtype=tables.dtype,
+    kname = ("fused_gemv_paired_stacked_sat" if with_stats
+             else "fused_gemv_paired_stacked")
+    key = atn.shape_key(kname, dtype=tables.dtype,
                         backend=jax.default_backend(),
                         B=B, R=B, L=L, G=G2, V=V2, O=O, g=group,
                         bits=spec.bits)
     s2 = _scale_2d(scale, x.dtype)
     l1 = jnp.asarray(layer, jnp.int32).reshape(1)
     kw = dict(bits=spec.bits, zero_point=spec.zero_point, group=group,
-              interpret=not on_tpu())
+              counters=with_stats, interpret=not on_tpu())
     if tiles is None:
         cfg = atn.lookup(key)
         if cfg is None and atn.autotune_enabled(autotune) and _is_concrete(
@@ -578,6 +619,10 @@ def pcilt_fused_gemv_paired_stacked(
     tiles = _fit_tiles(tiles, B, G2, O)
     xp, _ = _pad_axis(x, 0, tiles[0])  # zero rows quantize harmlessly
     tp, _ = _pad_axis(tables, 3, tiles[2] if O >= 128 else 1)
+    if with_stats:
+        out, cnt, ratio = pcilt_fused_gemv_paired_stacked_pallas(
+            l1, xp, s2, tp, tiles=tiles, **kw)
+        return out[:B, :O], cnt, ratio
     out = pcilt_fused_gemv_paired_stacked_pallas(l1, xp, s2, tp, tiles=tiles,
                                                  **kw)
     return out[:B, :O]
@@ -588,9 +633,10 @@ def _fused_gemv_paired_stacked_bench(l1, x, s2, tables, cfg, kw):
     tiles = _fit_tiles((cfg.Bb, cfg.Gb, cfg.Ob), B, G2, O)
     xp, _ = _pad_axis(x, 0, tiles[0])
     tp, _ = _pad_axis(tables, 3, tiles[2] if O >= 128 else 1)
-    return lambda: pcilt_fused_gemv_paired_stacked_pallas(
-        l1, xp, s2, tp, tiles=tiles, **kw
-    ).block_until_ready()
+    return lambda: jax.block_until_ready(
+        pcilt_fused_gemv_paired_stacked_pallas(
+            l1, xp, s2, tp, tiles=tiles, **kw
+        ))
 
 
 def pcilt_fused_gemv_plan(

@@ -96,30 +96,30 @@ def pcilt_dwconv1d_pallas(
 # ----------------------------------------------------------------------------
 
 
-def _fused_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
-                  bits: int, zero_point: int, k: int, V: int, Tb: int):
-    _, _, Cb = x_ref.shape
-    # Quantize this time tile's strip (Tb outputs need Tb + k - 1 padded
-    # inputs — the caller left-pads the raw signal, so tap j of output t is
-    # padded row t + j) and tap-stack/pack via a static k-slice loop: the
-    # little-endian shift-or of core.offsets.pack_offsets, built without the
-    # [B, T, C, k] tap tensor ever existing.
-    t0 = pl.program_id(1) * Tb
-    strip = x_ref[0, pl.ds(t0, Tb + k - 1), :]  # [Tb+k-1, Cb] from VMEM
-    codes = _quantize(strip, scale_ref[0, 0], bits=bits, zero_point=zero_point)
+def _pack_taps(codes, *, bits: int, k: int, Tb: int):
+    """``[Tb+k-1, Cb]`` strip codes -> ``[Tb, Cb]`` packed tap offsets via a
+    static k-slice loop: the little-endian shift-or of
+    ``core.offsets.pack_offsets``, built without the ``[B, T, C, k]`` tap
+    tensor ever existing."""
     off = codes[0:Tb]
     for j in range(1, k):
         off = off + (codes[j:j + Tb] << (j * bits))  # [Tb, Cb] int32
+    return off
 
-    # Factored two-level one-hot fetch.  A flat [Tb, Cb, V] one-hot costs V
-    # compares per output and a V-wide intermediate; splitting the offset
-    # into hi/lo halves (V = Vh * Vl) exploits
-    # ``1[off==v] = 1[off_hi==vh] * 1[off_lo==vl]``: the one-hots shrink to
-    # Vl + Vh lanes and the fetch becomes two small per-channel
-    # contractions, with the largest intermediate only [Cb, Vh, Tb].  Every
-    # product chain still has exactly one nonzero term per output, so f32
-    # accumulation returns the table cell bit-exactly (bf16 tables
-    # included — same contract as the host-packed kernel's fori_loop).
+
+def _factored_fetch(off, tab_ref, *, bits: int, k: int, V: int, Tb: int,
+                    Cb: int):
+    """Factored two-level one-hot fetch: ``off [Tb, Cb]`` -> f32 ``[Tb, Cb]``.
+
+    A flat [Tb, Cb, V] one-hot costs V compares per output and a V-wide
+    intermediate; splitting the offset into hi/lo halves (V = Vh * Vl)
+    exploits ``1[off==v] = 1[off_hi==vh] * 1[off_lo==vl]``: the one-hots
+    shrink to Vl + Vh lanes and the fetch becomes two small per-channel
+    contractions, with the largest intermediate only [Cb, Vh, Tb].  Every
+    product chain still has exactly one nonzero term per output, so f32
+    accumulation returns the table cell bit-exactly (bf16 tables included —
+    same contract as the host-packed kernel's fori_loop).
+    """
     h = (bits * k) // 2
     Vl, Vh = 1 << h, V >> h
     off_t = jnp.transpose(off)  # [Cb, Tb]
@@ -133,11 +133,62 @@ def _fused_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
         tab3, ohl, (((2,), (2,)), ((0,), (0,))),
         preferred_element_type=jnp.float32)  # [Cb, Vh, Tb]
     acc = jnp.sum(m * jnp.transpose(ohh, (0, 2, 1)), axis=1)  # [Cb, Tb]
-    out_ref[0] = jnp.transpose(acc).astype(out_ref.dtype)
+    return jnp.transpose(acc)  # [Tb, Cb]
+
+
+def _fused_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
+                  bits: int, zero_point: int, k: int, V: int, Tb: int):
+    _, _, Cb = x_ref.shape
+    # Quantize this time tile's strip (Tb outputs need Tb + k - 1 padded
+    # inputs — the caller left-pads the raw signal, so tap j of output t is
+    # padded row t + j) and tap-stack/pack in VMEM.
+    t0 = pl.program_id(1) * Tb
+    strip = x_ref[0, pl.ds(t0, Tb + k - 1), :]  # [Tb+k-1, Cb] from VMEM
+    codes = _quantize(strip, scale_ref[0, 0], bits=bits, zero_point=zero_point)
+    off = _pack_taps(codes, bits=bits, k=k, Tb=Tb)
+    acc = _factored_fetch(off, tab_ref, bits=bits, k=k, V=V, Tb=Tb, Cb=Cb)
+    out_ref[0] = acc.astype(out_ref.dtype)
+
+
+def _fused_sat_kernel(x_ref, scale_ref, tab_ref, out_ref, cnt_ref, ratio_ref,
+                      *, bits: int, zero_point: int, k: int, V: int, Tb: int):
+    """Counter-carrying :func:`_fused_kernel`: two extra ``[1, 1]`` outputs
+    (int32 saturation count, f32 running ``max(|x|)/scale``) reduced across
+    the grid, block-resident via constant index maps.
+
+    Adjacent time tiles overlap by ``k - 1`` strip rows, so the count keeps
+    the overlap rows only on the first time tile — every row of the padded
+    signal is counted exactly once (the caller's zero time/channel pads
+    quantize to the in-range zero_point and contribute nothing, so the
+    total equals the host count over the unpadded signal).  ``max`` is
+    idempotent; the ratio accumulates every step.
+    """
+    _, _, Cb = x_ref.shape
+    b, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((b == 0) & (i == 0) & (j == 0))
+    def _zero_stats():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        ratio_ref[...] = jnp.zeros_like(ratio_ref)
+
+    t0 = i * Tb
+    strip = x_ref[0, pl.ds(t0, Tb + k - 1), :]  # [Tb+k-1, Cb] from VMEM
+    q = jnp.round(strip / scale_ref[0, 0]) + zero_point
+    sat = ((q < 0) | (q > (1 << bits) - 1)).astype(jnp.int32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, sat.shape, 0)
+    keep = (rows >= k - 1) | (i == 0)
+    cnt_ref[0, 0] += jnp.sum(jnp.where(keep, sat, 0))
+    ratio_ref[0, 0] = jnp.maximum(
+        ratio_ref[0, 0],
+        (jnp.max(jnp.abs(strip)) / scale_ref[0, 0]).astype(jnp.float32))
+    codes = jnp.clip(q, 0, (1 << bits) - 1).astype(jnp.int32)
+    off = _pack_taps(codes, bits=bits, k=k, Tb=Tb)
+    acc = _factored_fetch(off, tab_ref, bits=bits, k=k, V=V, Tb=Tb, Cb=Cb)
+    out_ref[0] = acc.astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "zero_point", "k",
-                                             "tiles", "interpret"))
+                                             "tiles", "counters", "interpret"))
 def pcilt_fused_dwconv1d_pallas(
     x: jax.Array,
     scale: jax.Array,
@@ -147,8 +198,9 @@ def pcilt_fused_dwconv1d_pallas(
     zero_point: int,
     k: int,
     tiles,
+    counters: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     """x ``[B, Tp, C]`` float (already time-padded: ``Tp = To + k - 1``),
     scale ``[1, 1]``, tables ``[C, V]`` (``V = 2**(bits*k)``) -> ``[B, To, C]``.
 
@@ -156,6 +208,11 @@ def pcilt_fused_dwconv1d_pallas(
     time tiles; each grid step quantizes its strip, packs the k causal taps,
     and fetches — offsets never exist outside VMEM.  ``tiles`` is a
     ``(Tb, Cb)`` tuple with ``Tb | To`` and ``Cb | C``.
+
+    ``counters=True`` (a static opt-in: the default trace is unchanged)
+    returns ``(out, count, ratio)`` — the int32 number of signal elements
+    the quantizer clipped and the f32 ``max(|x|)/scale`` overshoot, reduced
+    in VMEM by :func:`_fused_sat_kernel`.
     """
     B, Tp, C = x.shape
     C2, V = tables.shape
@@ -166,16 +223,37 @@ def pcilt_fused_dwconv1d_pallas(
     To = Tp - k + 1
     Tb, Cb = tiles
     grid = (B, To // Tb, C // Cb)
+    in_specs = [
+        pl.BlockSpec((1, Tp, Cb), lambda b, i, j: (b, 0, j)),
+        pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
+        pl.BlockSpec((Cb, V), lambda b, i, j: (j, 0)),
+    ]
+    out_spec = pl.BlockSpec((1, Tb, Cb), lambda b, i, j: (b, i, j))
+    if counters:
+        out, cnt, ratio = pl.pallas_call(
+            functools.partial(_fused_sat_kernel, bits=bits,
+                              zero_point=zero_point, k=k, V=V, Tb=Tb),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=(
+                out_spec,
+                pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
+                pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
+            ),
+            out_shape=(
+                jax.ShapeDtypeStruct((B, To, C), tables.dtype),
+                jax.ShapeDtypeStruct((1, 1), jnp.int32),
+                jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            ),
+            interpret=interpret,
+        )(x, scale, tables)
+        return out, cnt[0, 0], ratio[0, 0]
     return pl.pallas_call(
         functools.partial(_fused_kernel, bits=bits, zero_point=zero_point,
                           k=k, V=V, Tb=Tb),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, Tp, Cb), lambda b, i, j: (b, 0, j)),
-            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
-            pl.BlockSpec((Cb, V), lambda b, i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, Tb, Cb), lambda b, i, j: (b, i, j)),
+        in_specs=in_specs,
+        out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((B, To, C), tables.dtype),
         interpret=interpret,
     )(x, scale, tables)

@@ -53,6 +53,25 @@ def _quantize(x, scale, *, bits: int, zero_point: int):
     return jnp.clip(q, 0, (1 << bits) - 1).astype(jnp.int32)
 
 
+def _quantize_sat(x, scale, *, bits: int, zero_point: int):
+    """:func:`_quantize` plus the block's saturation stats the clip discards.
+
+    In-kernel mirror of ``core.quantization.quantize_with_stats``: returns
+    ``(codes, count, ratio)`` where ``count`` is the int32 number of elements
+    whose *pre-clip* code ``round(x/scale) + zero_point`` fell outside
+    ``[0, K)`` and ``ratio`` is f32 ``max(|x|)/scale``.  Same arithmetic,
+    same dtype, so the count is exact (elements landing on the clip edge are
+    in range) — this is the calibration-drift signal the serving sentinel
+    reduces in VMEM alongside the adder tree.
+    """
+    q = jnp.round(x / scale) + zero_point
+    sat = (q < 0) | (q > (1 << bits) - 1)
+    codes = jnp.clip(q, 0, (1 << bits) - 1).astype(jnp.int32)
+    count = jnp.sum(sat.astype(jnp.int32))
+    ratio = (jnp.max(jnp.abs(x)) / scale).astype(jnp.float32)
+    return codes, count, ratio
+
+
 def _pack_flat(codes, *, bits: int, group: int, Gseg: int):
     """``[R, Gseg*group]`` codes -> ``[R, Gseg]`` little-endian offsets."""
     R = codes.shape[0]
@@ -176,9 +195,38 @@ def _gemv_paired_kernel(x_ref, scale_ref, tab_ref, out_ref, *,
     out_ref[...] += _take_rows(off, tab_ref[...])
 
 
+def _gemv_paired_sat_kernel(x_ref, scale_ref, tab_ref,
+                            out_ref, cnt_ref, ratio_ref, *,
+                            bits: int, zero_point: int, group: int, Gb: int):
+    """Counter-carrying :func:`_gemv_paired_kernel` (see
+    :func:`_gemv_stacked_sat_kernel` for the dedup/zeroing discipline)."""
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0) & (k == 0))
+    def _zero_stats():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        ratio_ref[...] = jnp.zeros_like(ratio_ref)
+
+    @pl.when(k == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes, cnt, ratio = _quantize_sat(x_ref[...], scale_ref[0, 0],
+                                      bits=bits, zero_point=zero_point)
+
+    @pl.when(j == 0)
+    def _count():
+        cnt_ref[0, 0] += cnt
+
+    ratio_ref[0, 0] = jnp.maximum(ratio_ref[0, 0], ratio)
+    off = _pack_flat(codes, bits=bits, group=2 * group, Gseg=Gb)  # [Bb, Gb]
+    out_ref[...] += _take_rows(off, tab_ref[...])
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "zero_point", "group", "tiles", "interpret"),
+    static_argnames=("bits", "zero_point", "group", "tiles", "counters",
+                     "interpret"),
 )
 def pcilt_fused_gemv_paired_pallas(
     x: jax.Array,
@@ -189,8 +237,9 @@ def pcilt_fused_gemv_paired_pallas(
     zero_point: int,
     group: int,
     tiles,
+    counters: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     """x ``[B, n]`` float, scale ``[1, 1]``, paired tables ``[G2, V2, O]``
     (``V2 = (2**(bits*group))**2``) -> ``[B, O]``.
 
@@ -201,6 +250,11 @@ def pcilt_fused_gemv_paired_pallas(
     zero).  Half the fetches, half the adder-tree depth; the fetch itself is
     a batched row-gather (see :func:`_take_rows`), not a one-hot
     contraction.  ``tiles`` is ``(Bb, Gb, Ob)`` with ``Gb | G2``.
+
+    ``counters=True`` (static opt-in) returns ``(out, count, ratio)``
+    saturation stats — see :func:`pcilt_fused_gemv_stacked_pallas`.  The
+    phantom-segment zero pad quantizes in range, so the count covers exactly
+    the real activations.
     """
     B, n = x.shape
     G2, V2, O = tables.shape
@@ -215,16 +269,37 @@ def pcilt_fused_gemv_paired_pallas(
             f"group={group})")
     Bb, Gb, Ob = tiles
     grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G2 // Gb)
+    in_specs = [
+        pl.BlockSpec((Bb, Gb * 2 * group), lambda i, j, k: (i, k)),
+        pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        pl.BlockSpec((Gb, V2, Ob), lambda i, j, k: (k, 0, j)),
+    ]
+    out_spec = pl.BlockSpec((Bb, Ob), lambda i, j, k: (i, j))
+    if counters:
+        out, cnt, ratio = pl.pallas_call(
+            functools.partial(_gemv_paired_sat_kernel, bits=bits,
+                              zero_point=zero_point, group=group, Gb=Gb),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=(
+                out_spec,
+                pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+                pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            ),
+            out_shape=(
+                jax.ShapeDtypeStruct((B, O), jnp.float32),
+                jax.ShapeDtypeStruct((1, 1), jnp.int32),
+                jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            ),
+            interpret=interpret,
+        )(x, scale, tables)
+        return out.astype(tables.dtype), cnt[0, 0], ratio[0, 0]
     return pl.pallas_call(
         functools.partial(_gemv_paired_kernel, bits=bits,
                           zero_point=zero_point, group=group, Gb=Gb),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((Bb, Gb * 2 * group), lambda i, j, k: (i, k)),
-            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
-            pl.BlockSpec((Gb, V2, Ob), lambda i, j, k: (k, 0, j)),
-        ],
-        out_specs=pl.BlockSpec((Bb, Ob), lambda i, j, k: (i, j)),
+        in_specs=in_specs,
+        out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
         interpret=interpret,
     )(x, scale, tables).astype(tables.dtype)
@@ -252,9 +327,47 @@ def _gemv_stacked_kernel(layer_ref, x_ref, scale_ref, tab_ref, out_ref, *,
     out_ref[...] += _flat_onehot_dot(off, tab_ref[0], V=V)
 
 
+def _gemv_stacked_sat_kernel(layer_ref, x_ref, scale_ref, tab_ref,
+                             out_ref, cnt_ref, ratio_ref, *,
+                             bits: int, zero_point: int, group: int,
+                             Gb: int, V: int):
+    """The counter-carrying variant of :func:`_gemv_stacked_kernel`.
+
+    Two extra ``[1, 1]`` outputs ride the call, block-resident across the
+    whole grid (constant index maps): the int32 saturation count and the f32
+    running ``max(|x|)/scale`` ratio.  The x block at ``(i, k)`` is revisited
+    once per output tile ``j``, so the count accumulates only on ``j == 0``
+    — every activation element counted exactly once; ``max`` is idempotent,
+    so the ratio accumulates on every step.  Zero-padded rows (the batch
+    pad) quantize to the in-range zero_point and contribute nothing.
+    """
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0) & (k == 0))
+    def _zero_stats():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        ratio_ref[...] = jnp.zeros_like(ratio_ref)
+
+    @pl.when(k == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes, cnt, ratio = _quantize_sat(x_ref[...], scale_ref[0, 0],
+                                      bits=bits, zero_point=zero_point)
+
+    @pl.when(j == 0)
+    def _count():
+        cnt_ref[0, 0] += cnt
+
+    ratio_ref[0, 0] = jnp.maximum(ratio_ref[0, 0], ratio)
+    off = _pack_flat(codes, bits=bits, group=group, Gseg=Gb)  # [Bb, Gb]
+    out_ref[...] += _flat_onehot_dot(off, tab_ref[0], V=V)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "zero_point", "group", "tiles", "interpret"),
+    static_argnames=("bits", "zero_point", "group", "tiles", "counters",
+                     "interpret"),
 )
 def pcilt_fused_gemv_stacked_pallas(
     layer: jax.Array,
@@ -266,8 +379,9 @@ def pcilt_fused_gemv_stacked_pallas(
     zero_point: int,
     group: int,
     tiles,
+    counters: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     """layer ``[1]`` int32, x ``[B, n]`` float, scale ``[1, 1]``,
     tables ``[L, G, V, O]`` -> ``[B, O]``.
 
@@ -280,6 +394,12 @@ def pcilt_fused_gemv_stacked_pallas(
     HBM copy a per-iteration ``dynamic_slice`` of the stacked tables would
     materialize.  ``n == G * group``; ``tiles`` is ``(Bb, Gb, Ob)`` with
     ``Gb | G``.
+
+    With ``counters=True`` (a static opt-in: the default trace is
+    byte-identical to before the counters existed) the call returns
+    ``(out, count, ratio)`` — the int32 number of activations the quantizer
+    clipped and the f32 ``max(|x|)/scale`` overshoot, reduced in VMEM by
+    :func:`_gemv_stacked_sat_kernel`.
     """
     B, n = x.shape
     L, G, V, O = tables.shape
@@ -289,15 +409,40 @@ def pcilt_fused_gemv_stacked_pallas(
             f"(x {x.shape}, stacked tables {tables.shape})")
     Bb, Gb, Ob = tiles
     grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G // Gb)
+    in_specs = [
+        pl.BlockSpec((Bb, Gb * group), lambda i, j, k, l: (i, k)),
+        pl.BlockSpec((1, 1), lambda i, j, k, l: (0, 0)),
+        pl.BlockSpec((1, Gb, V, Ob), lambda i, j, k, l: (l[0], k, 0, j)),
+    ]
+    out_spec = pl.BlockSpec((Bb, Ob), lambda i, j, k, l: (i, j))
+    if counters:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=(
+                out_spec,
+                pl.BlockSpec((1, 1), lambda i, j, k, l: (0, 0)),
+                pl.BlockSpec((1, 1), lambda i, j, k, l: (0, 0)),
+            ),
+        )
+        out, cnt, ratio = pl.pallas_call(
+            functools.partial(_gemv_stacked_sat_kernel, bits=bits,
+                              zero_point=zero_point, group=group, Gb=Gb, V=V),
+            grid_spec=grid_spec,
+            out_shape=(
+                jax.ShapeDtypeStruct((B, O), jnp.float32),
+                jax.ShapeDtypeStruct((1, 1), jnp.int32),
+                jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            ),
+            interpret=interpret,
+        )(layer, x, scale, tables)
+        return out.astype(tables.dtype), cnt[0, 0], ratio[0, 0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((Bb, Gb * group), lambda i, j, k, l: (i, k)),
-            pl.BlockSpec((1, 1), lambda i, j, k, l: (0, 0)),
-            pl.BlockSpec((1, Gb, V, Ob), lambda i, j, k, l: (l[0], k, 0, j)),
-        ],
-        out_specs=pl.BlockSpec((Bb, Ob), lambda i, j, k, l: (i, j)),
+        in_specs=in_specs,
+        out_specs=out_spec,
     )
     return pl.pallas_call(
         functools.partial(_gemv_stacked_kernel, bits=bits,
@@ -334,9 +479,41 @@ def _gemv_paired_stacked_kernel(layer_ref, x_ref, scale_ref, tab_ref,
     out_ref[...] += _take_rows(off + layer_ref[0] * V2, tab)
 
 
+def _gemv_paired_stacked_sat_kernel(layer_ref, x_ref, scale_ref, tab_ref,
+                                    out_ref, cnt_ref, ratio_ref, *,
+                                    bits: int, zero_point: int,
+                                    group: int, Gb: int, V2: int):
+    """Counter-carrying :func:`_gemv_paired_stacked_kernel` (see
+    :func:`_gemv_stacked_sat_kernel` for the dedup/zeroing discipline)."""
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0) & (k == 0))
+    def _zero_stats():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        ratio_ref[...] = jnp.zeros_like(ratio_ref)
+
+    @pl.when(k == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes, cnt, ratio = _quantize_sat(x_ref[...], scale_ref[0, 0],
+                                      bits=bits, zero_point=zero_point)
+
+    @pl.when(j == 0)
+    def _count():
+        cnt_ref[0, 0] += cnt
+
+    ratio_ref[0, 0] = jnp.maximum(ratio_ref[0, 0], ratio)
+    off = _pack_flat(codes, bits=bits, group=2 * group, Gseg=Gb)  # [Bb, Gb]
+    Gb_, L, _, Ob = tab_ref.shape
+    tab = tab_ref[...].reshape(Gb_, L * V2, Ob)
+    out_ref[...] += _take_rows(off + layer_ref[0] * V2, tab)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "zero_point", "group", "tiles", "interpret"),
+    static_argnames=("bits", "zero_point", "group", "tiles", "counters",
+                     "interpret"),
 )
 def pcilt_fused_gemv_paired_stacked_pallas(
     layer: jax.Array,
@@ -348,8 +525,9 @@ def pcilt_fused_gemv_paired_stacked_pallas(
     zero_point: int,
     group: int,
     tiles,
+    counters: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     """layer ``[1]`` int32, x ``[B, n]`` float, scale ``[1, 1]``,
     **segment-major** paired tables ``[G2, L, V2, O]`` -> ``[B, O]``.
 
@@ -364,6 +542,9 @@ def pcilt_fused_gemv_paired_stacked_pallas(
     path, where a traced segment index would fall off onto the slow general
     gather.  ``n == G2 * 2 * group``; ``tiles`` is ``(Bb, Gb, Ob)`` with
     ``Gb | G2``.
+
+    ``counters=True`` (static opt-in) returns ``(out, count, ratio)``
+    saturation stats — see :func:`pcilt_fused_gemv_stacked_pallas`.
     """
     B, n = x.shape
     G2, L, V2, O = tables.shape
@@ -378,15 +559,41 @@ def pcilt_fused_gemv_paired_stacked_pallas(
             f"group={group})")
     Bb, Gb, Ob = tiles
     grid = (pl.cdiv(B, Bb), pl.cdiv(O, Ob), G2 // Gb)
+    in_specs = [
+        pl.BlockSpec((Bb, Gb * 2 * group), lambda i, j, k, l: (i, k)),
+        pl.BlockSpec((1, 1), lambda i, j, k, l: (0, 0)),
+        pl.BlockSpec((Gb, L, V2, Ob), lambda i, j, k, l: (k, 0, 0, j)),
+    ]
+    out_spec = pl.BlockSpec((Bb, Ob), lambda i, j, k, l: (i, j))
+    if counters:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=(
+                out_spec,
+                pl.BlockSpec((1, 1), lambda i, j, k, l: (0, 0)),
+                pl.BlockSpec((1, 1), lambda i, j, k, l: (0, 0)),
+            ),
+        )
+        out, cnt, ratio = pl.pallas_call(
+            functools.partial(_gemv_paired_stacked_sat_kernel, bits=bits,
+                              zero_point=zero_point, group=group, Gb=Gb,
+                              V2=V2),
+            grid_spec=grid_spec,
+            out_shape=(
+                jax.ShapeDtypeStruct((B, O), jnp.float32),
+                jax.ShapeDtypeStruct((1, 1), jnp.int32),
+                jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            ),
+            interpret=interpret,
+        )(layer, x, scale, tables)
+        return out.astype(tables.dtype), cnt[0, 0], ratio[0, 0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((Bb, Gb * 2 * group), lambda i, j, k, l: (i, k)),
-            pl.BlockSpec((1, 1), lambda i, j, k, l: (0, 0)),
-            pl.BlockSpec((Gb, L, V2, Ob), lambda i, j, k, l: (k, 0, 0, j)),
-        ],
-        out_specs=pl.BlockSpec((Bb, Ob), lambda i, j, k, l: (i, j)),
+        in_specs=in_specs,
+        out_specs=out_spec,
     )
     return pl.pallas_call(
         functools.partial(_gemv_paired_stacked_kernel, bits=bits,

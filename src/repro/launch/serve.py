@@ -70,6 +70,16 @@ non-zero if any request is lost or the served tokens diverge from a
 fault-free reference run — the CI smoke for the resilience layer.
 ``--chaos --traffic ...`` composes the two: faults injected mid-burst must
 uphold both contracts at once.
+
+``--chaos-drift`` exercises the calibration-drift sentinel: PCILT decode
+runs *monitored* (the fused kernels emit in-kernel saturation counters), a
+mid-serve parameter drift pushes one layer's activations out of the
+calibrated range without corrupting a single table byte, and the contract
+requires detect (typed ``drift`` demotion) -> rollback -> online
+recalibration (tables rebuilt at the observed range, checksums
+re-recorded, ``rehoist(verify=True)``) -> repromote, with undrifted tokens
+identical to a fault-free run.  ``--no-sentinel`` is the zero-overhead
+opt-out (executors compile without counter outputs).
 """
 
 from __future__ import annotations
@@ -136,7 +146,7 @@ class Engine:
                  oracle_every: int = 4, max_restarts: int = 8,
                  ckpt_keep: Optional[int] = None, chaos: Optional[Dict] = None,
                  clock=None, queue_limit: Optional[int] = None,
-                 step_cost_s: Optional[float] = None):
+                 step_cost_s: Optional[float] = None, sentinel: bool = True):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.max_len = max_len
@@ -181,6 +191,13 @@ class Engine:
 
         self.pdecode = None
         self.monitor = None
+        #: calibration-drift sentinel: decode steps run monitored
+        #: (``with_stats=True`` — in-kernel saturation counters) and feed the
+        #: monitor's per-layer drift EWMAs.  ``sentinel=False`` is the
+        #: zero-overhead opt-out: the unmonitored executor compiles without
+        #: counter outputs, bit-identical to pre-sentinel serving.
+        self.sentinel = bool(sentinel) and pcilt
+        self._last_sat = None
         if pcilt:
             from repro.core.serving import (HealthMonitor, PCILTMambaDecode,
                                             convert_mamba_decode)
@@ -207,8 +224,13 @@ class Engine:
         toks = jnp.asarray(self.tokens)
         if self.pdecode is not None:
             lmask, hmask = self.monitor.ok_masks()
-            logits, new_cache = self.pdecode.step(self.params, self.cache,
-                                                  toks, lmask, hmask)
+            if self.sentinel:
+                logits, new_cache, self._last_sat = self.pdecode.step(
+                    self.params, self.cache, toks, lmask, hmask,
+                    with_stats=True)
+            else:
+                logits, new_cache = self.pdecode.step(
+                    self.params, self.cache, toks, lmask, hmask)
             if self.cfg.padded_vocab > self.cfg.vocab:  # never sample padding
                 neg = jnp.full((self.cfg.padded_vocab - self.cfg.vocab,),
                                -1e30, logits.dtype)
@@ -272,7 +294,11 @@ class Engine:
         self._finish_if_done(slot)
 
     def _commit_tokens(self, nxt, skip: Optional[int] = None):
-        degraded_now = self.monitor is not None and self.monitor.degraded
+        # tainted = some layer was online-recalibrated: tokens are correct
+        # under the *new* tables but no longer bit-comparable to the original
+        # conversion, so they carry the degraded marking too
+        degraded_now = self.monitor is not None and (
+            self.monitor.degraded or self.monitor.tainted)
         for s, req in enumerate(self.active):
             if req is None or s == skip:
                 continue
@@ -556,14 +582,23 @@ class Engine:
                     continue
                 nxt = self._step()
                 if self.monitor is not None:
-                    breaches = self.monitor.on_tick(self.tick)
+                    breaches = self.monitor.on_tick(
+                        self.tick, sat=self._last_sat, rows=self.slots)
                     if breaches:
                         # commits since the breached layer was last verified
-                        # may be corrupt — rewind there and replay demoted
+                        # may be corrupt — rewind there and replay demoted.
+                        # Drift is different: committed tokens were produced
+                        # inside the calibrated range (the counters fired on
+                        # *this* tick's activations), so it indicts only the
+                        # current, not-yet-committed tick.
                         lv = [int(self.monitor.last_verified[e["layer"]])
-                              for e in breaches if e["layer"] is not None]
+                              for e in breaches
+                              if e["layer"] is not None
+                              and e["kind"] != "drift"]
                         lv += [int(self.monitor.head_last_verified)
                                for e in breaches if e["kind"] == "head"]
+                        lv += [self.tick for e in breaches
+                               if e["kind"] == "drift"]
                         raise _Degraded(max(min(lv), 0), breaches)
                 self._commit_tokens(nxt)
                 self._enforce_deadlines()
@@ -572,7 +607,7 @@ class Engine:
                 self._tick_ema = (dt if self._tick_ema is None
                                   else 0.9 * self._tick_ema + 0.1 * dt)
                 occupied = sum(r is not None for r in self.active)
-                self.telemetry.append({
+                entry = {
                     "tick": self.tick,
                     "t": self.clock.time(),
                     "queue_depth": len(self.queue),
@@ -582,7 +617,10 @@ class Engine:
                     "queue_evictions": self.queue_evictions,
                     "slot_evictions": self.slot_evictions,
                     "tick_s": dt,
-                })
+                }
+                if self.sentinel and self.monitor is not None:
+                    entry["saturation"] = self.monitor.saturation_summary()
+                self.telemetry.append(entry)
                 self.tick += 1
                 self._checkpoint()
             except _Degraded as d:
@@ -590,6 +628,11 @@ class Engine:
                 log.warning("rolling back to tick <= %d after %d breach(es)",
                             d.target_tick, len(d.events))
                 self._restore(d.target_tick)
+                if self.monitor is not None and self.monitor.drift_pending:
+                    # online recalibration between ticks: rebuild the drifted
+                    # layer's tables at the observed range and repromote (or
+                    # record the typed sticky event), then replay
+                    self.monitor.recalibrate_pending(self.tick)
             except Exception as e:  # noqa: BLE001 — any tick fault
                 self.restarts += 1
                 log.error("decode tick %d failed (%s); restart %d/%d",
@@ -626,6 +669,10 @@ class Engine:
         }
         if self.monitor is not None:
             stats["health_events"] = list(self.monitor.events)
+            if self.sentinel:
+                stats["saturation"] = self.monitor.saturation_summary()
+                stats["recalibrations"] = int(
+                    self.monitor.recalibrations.sum())
         return stats
 
 
@@ -702,6 +749,35 @@ def _chaos_plan(eng: Engine, injector):
     }
 
 
+#: the drift smoke's injection site: one layer's mixer norm gain, amplified
+#: hard enough that the very first monitored tick classifies "saturated"
+DRIFT_LAYER = 1
+DRIFT_GAMMA = 64.0
+DRIFT_STEP = 10
+
+
+def _chaos_drift_plan(eng: Engine, injector):
+    """The ``--chaos-drift`` schedule: amplify one layer's mixer norm gain
+    so its ``wo`` activations walk out of the calibrated range.  No table
+    byte changes — checksums pass, the dense oracle agrees — only the
+    in-kernel saturation counters can catch it."""
+
+    def drift_norm(e):
+        blocks = dict(e.params["blocks"])
+        mixer = dict(blocks["mixer"])
+        norm = dict(mixer["norm"])
+        norm["scale"] = injector.drift_scale(norm["scale"], DRIFT_GAMMA,
+                                             rows=[DRIFT_LAYER])
+        mixer["norm"] = norm
+        blocks["mixer"] = mixer
+        # params are a step *argument* (not closed over like tables), so no
+        # rehoist — and they are deliberately outside the checkpoint ring:
+        # a rollback must NOT undo the drift, the workload really moved
+        e.params = dict(e.params, blocks=blocks)
+
+    return {DRIFT_STEP: [drift_norm]}
+
+
 def _make_requests(cfg, n: int, max_new: int, deadline: Optional[float],
                    seed: int) -> List[Request]:
     rng = np.random.default_rng(seed)
@@ -722,6 +798,13 @@ def main(argv=None):
     p.add_argument("--chaos", action="store_true",
                    help="drive the fault-injection schedule and verify the "
                         "resilience contract (implies a reference run)")
+    p.add_argument("--chaos-drift", action="store_true",
+                   help="inject calibration drift (no corrupted bytes) and "
+                        "verify the sentinel contract: detect -> demote -> "
+                        "recalibrate -> repromote (requires --pcilt)")
+    p.add_argument("--no-sentinel", action="store_true",
+                   help="serve unmonitored (no in-kernel saturation "
+                        "counters) — the zero-overhead opt-out")
     p.add_argument("--deadline", type=float, default=None,
                    help="per-request deadline in seconds")
     p.add_argument("--seed", type=int, default=0)
@@ -745,6 +828,15 @@ def main(argv=None):
     args = p.parse_args(argv)
 
     logging.basicConfig(level=logging.WARNING)
+    if args.chaos_drift and args.chaos:
+        raise SystemExit("--chaos-drift and --chaos are separate smokes — "
+                         "run them as two invocations")
+    if args.chaos_drift and not args.pcilt:
+        raise SystemExit("--chaos-drift exercises the PCILT drift sentinel; "
+                         "add --pcilt")
+    if args.chaos_drift and args.no_sentinel:
+        raise SystemExit("--chaos-drift needs the sentinel; drop "
+                         "--no-sentinel")
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     if cfg.n_img_tokens or cfg.encoder_layers:
         raise SystemExit("serve demo targets text decoder archs")
@@ -795,7 +887,7 @@ def main(argv=None):
 
     injector = None
     eng = Engine(cfg, max_len=256, slots=args.slots, pcilt=args.pcilt,
-                 **engine_kw)
+                 sentinel=not args.no_sentinel, **engine_kw)
     if args.chaos:
         from repro.runtime.faults import FaultInjector
 
@@ -804,6 +896,11 @@ def main(argv=None):
             eng.chaos = _chaos_plan(eng, injector)
         else:
             eng.chaos = {4: [lambda e: injector.maybe_fail(7)]}
+    elif args.chaos_drift:
+        from repro.runtime.faults import FaultInjector
+
+        injector = FaultInjector(seed=args.seed)
+        eng.chaos = _chaos_drift_plan(eng, injector)
 
     if arrivals is not None:
         stats = eng.run_traffic(reqs, arrivals)
@@ -840,6 +937,8 @@ def main(argv=None):
                                            injector, arrivals, engine_kw)
         else:
             _verify_chaos_contract(cfg, args, eng, reqs, stats, injector)
+    elif args.chaos_drift:
+        _verify_chaos_drift_contract(cfg, args, eng, reqs, stats, injector)
 
 
 def _verify_chaos_contract(cfg, args, eng, reqs, stats, injector):
@@ -901,6 +1000,94 @@ def _verify_chaos_contract(cfg, args, eng, reqs, stats, injector):
           f"{len(injector.events)} faults injected, "
           f"{stats['restarts']} restarts, {stats['rollbacks']} rollbacks, "
           f"{stats['degraded']} degraded)")
+
+
+def _verify_chaos_drift_contract(cfg, args, eng, reqs, stats, injector):
+    """The drift-sentinel CI gate: injected calibration drift (no corrupted
+    bytes — checksums pass, the oracle agrees) must be caught by the
+    saturation counters, the drifting layer demoted, its tables
+    recalibrated online at the observed range and repromoted, with no
+    request lost; requests that finished undegraded must be token-identical
+    to a fault-free reference run, and the hot-swapped tables bit-equal to
+    a fresh conversion-arithmetic build at the recorded new scale.  Exits
+    non-zero on any violation."""
+    from repro.core.pcilt import (build_grouped_tables,
+                                  build_paired_stacked_tables)
+
+    lost = [r.rid for r in reqs if r.outcome not in ("served", "degraded")]
+    if lost:
+        raise SystemExit(f"drift contract violated: requests lost: {lost}")
+    drifts = [e for e in injector.events if e["kind"] == "calibration_drift"]
+    if not drifts:
+        raise SystemExit("drift smoke never injected — schedule never fired "
+                         f"(engine ran only {eng.steps} steps)")
+    events = stats["health_events"]
+    demotions = [e for e in events if e["kind"] == "drift"]
+    recals = [e for e in events if e["kind"] == "recalibrate"]
+    if not demotions:
+        raise SystemExit("drift contract violated: sentinel never fired "
+                         f"(saturation: {stats.get('saturation')})")
+    if any(e["layer"] != DRIFT_LAYER for e in demotions):
+        raise SystemExit(f"drift contract violated: demotions fired off the "
+                         f"drifted layer {DRIFT_LAYER}: {demotions}")
+    if not recals:
+        raise SystemExit("drift contract violated: no online recalibration "
+                         f"(events: {[e['kind'] for e in events]})")
+    mon = eng.monitor
+    bad = [l for l in range(mon.n_layers) if not mon.layer_ok[l]]
+    if bad:
+        raise SystemExit(f"drift contract violated: layers {bad} not "
+                         "repromoted after recalibration")
+
+    # hot-swapped tables == fresh conversion-arithmetic build at the
+    # recorded post-drift scale, bitwise
+    proj = eng.pdecode.pcilt["proj"]
+    spec, group = proj["spec"], proj["group"]
+    paired = bool(proj.get("paired"))
+    for ev in recals:
+        l = ev["layer"]
+        for name, new_scale in ev["scales"].items():
+            if float(np.asarray(proj["scales"][name][l])) != new_scale:
+                continue  # a later recalibration superseded this one
+            wf = jnp.asarray(
+                eng.params["blocks"]["mixer"][name]["kernel"][l],
+                jnp.float32)
+            t = np.asarray(proj["tables"][name])
+            if paired:
+                ref = build_paired_stacked_tables(
+                    wf[None], spec, jnp.full((1,), new_scale, jnp.float32),
+                    group)[:, 0]
+                got = t[:, l]
+            else:
+                pad = (-wf.shape[0]) % group
+                if pad:
+                    wf = jnp.concatenate(
+                        [wf, jnp.zeros((pad, wf.shape[1]), wf.dtype)], 0)
+                ref = build_grouped_tables(wf, spec, new_scale, group)
+                got = t[l]
+            if not np.array_equal(got, np.asarray(ref).astype(got.dtype)):
+                raise SystemExit(
+                    f"drift contract violated: recalibrated table "
+                    f"{name}[{l}] != fresh build at scale {new_scale}")
+
+    # undrifted tokens: a fault-free reference run of the same stream —
+    # requests that finished undegraded (before the drift / the
+    # recalibration taint) must be token-identical
+    ref_eng = Engine(cfg, max_len=256, slots=args.slots, pcilt=args.pcilt)
+    ref = _make_requests(cfg, args.requests, args.max_new, args.deadline,
+                         args.seed)
+    ref_eng.run(ref)
+    mismatched = [r.rid for r, q in zip(reqs, ref)
+                  if r.outcome == "served" and r.out != q.out]
+    if mismatched:
+        raise SystemExit(
+            f"drift contract violated: undrifted tokens diverge from the "
+            f"fault-free run for requests {mismatched}")
+    print(f"drift contract verified: {len(reqs)} requests completed, "
+          f"sentinel fired {len(demotions)}x on layer {DRIFT_LAYER}, "
+          f"{len(recals)} recalibration(s), {stats['rollbacks']} "
+          f"rollback(s), {stats['degraded']} degraded; recalibrated tables "
+          f"bit-equal to fresh build at the new scale")
 
 
 def _verify_chaos_traffic_contract(cfg, args, eng, reqs, stats, injector,

@@ -328,7 +328,7 @@ class MambaLM:
                 "conv_in": jnp.max(stats["conv_in"]), "head_in": head_in}
 
     def decode_step(self, params, cache, tokens, ctx: Ctx, pcilt=None,
-                    layer_ok=None, head_ok=None):
+                    layer_ok=None, head_ok=None, with_stats: bool = False):
         """One decode step.  ``pcilt`` (from :meth:`build_pcilt`) routes every
         layer's conv frontend through the fused PCILT fetch; with a
         ``pcilt["proj"]`` bundle the projections execute as layer-stacked
@@ -341,12 +341,24 @@ class MambaLM:
         logits head to their exact dense fake-quant oracles under
         ``lax.cond``.  They are runtime *arguments* — flipping a bit never
         retraces — and an all-True mask executes the identical fetch
-        computation, so healthy serving is bitwise-unchanged."""
+        computation, so healthy serving is bitwise-unchanged.
+
+        Drift sentinel: ``with_stats=True`` returns a third value — the
+        per-layer saturation statistics of every distinct quantizer,
+        ``{"in"|"conv"|"out": {"count" [L] i32, "ratio" [L] f32}}``
+        (see :func:`repro.nn.ssm.mamba_decode`), stacked by the layer scan.
+        Logits and the cache are bit-identical either way; the counters ride
+        the fetch kernels' own grids, so the monitored step adds no second
+        pass over any activation."""
         cfg = self.cfg
         if pcilt is None and (layer_ok is not None or head_ok is not None):
             raise ValueError(
                 "layer_ok/head_ok demote PCILT fetches to their dense "
                 "oracles — they require a pcilt bundle (got pcilt=None)")
+        if with_stats and pcilt is None:
+            raise ValueError(
+                "with_stats reports the PCILT quantizers' saturation — it "
+                "requires a pcilt bundle (got pcilt=None)")
         pos = cache["pos"]
         x = self._embed(params, ctx, tokens)
         proj = None if pcilt is None else pcilt.get("proj")
@@ -369,9 +381,13 @@ class MambaLM:
                         "layer": per["layer"], "scale": per["scale"],
                         "paired": proj.get("paired", False),
                         "ok": per.get("ok")}
-            y, st2 = mamba_decode(p["mixer"], cfg, ctx,
-                                  rmsnorm(p["ln"], h, cfg.norm_eps), st,
-                                  pcilt=pc)
+            res = mamba_decode(p["mixer"], cfg, ctx,
+                               rmsnorm(p["ln"], h, cfg.norm_eps), st,
+                               pcilt=pc, with_stats=with_stats)
+            if with_stats:
+                y, st2, sat = res
+                return h + y, (st2, sat)
+            y, st2 = res
             return h + y, st2
 
         xs = (params["blocks"], cache["layers"])
@@ -385,11 +401,15 @@ class MambaLM:
                 per["ok"] = jnp.asarray(layer_ok, bool)
             if per:
                 xs = xs + (per,)
-        x, new_states = jax.lax.scan(body, x, xs)
+        x, ys = jax.lax.scan(body, x, xs)
+        new_states, sat = ys if with_stats else (ys, None)
         x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
         head = None if pcilt is None else pcilt.get("head")
         if head is None:
             logits = self._logits(params, x)[:, -1]
         else:
             logits = self._head_logits(head, x[:, -1], head_ok)
-        return logits, dict(cache, layers=new_states, pos=pos + 1)
+        new_cache = dict(cache, layers=new_states, pos=pos + 1)
+        if with_stats:
+            return logits, new_cache, sat
+        return logits, new_cache

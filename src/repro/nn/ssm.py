@@ -76,7 +76,7 @@ def build_pcilt_conv(params, cfg, scale):
     return {"tables": tables, "scale": scale, "spec": spec}
 
 
-def _proj(params, name, x, cfg, proj):
+def _proj(params, name, x, cfg, proj, with_stats: bool = False):
     """One decode projection: PCILT stacked fetch, host-packed baseline, the
     fake-quant dense reference, or the plain dense matmul.
 
@@ -98,17 +98,33 @@ def _proj(params, name, x, cfg, proj):
     layer whose tables failed their integrity/health check is demoted to the
     oracle branch without retracing (the bit is a runtime argument, not a
     closure constant), and the request keeps being served correctly.
+
+    Drift sentinel: ``with_stats=True`` returns ``(out, count, ratio)`` —
+    the saturation statistics of the quantizer feeding this projection
+    (``core.quantization.quantize_with_stats`` semantics).  The fused
+    stacked fetch reduces the counters inside the kernel grid; the *oracle*
+    branch computes the identical stats host-side on the same input, so a
+    demoted layer keeps reporting drift (the monitor can observe recovery /
+    recalibrate while the layer serves from the oracle) and both
+    ``lax.cond`` branches return matching pytrees.
     """
     if proj is None or name not in proj["tables"]:
-        return dense(params[name], x, cfg.dtype)
-    from repro.core import fake_quant, pcilt_linear
+        out = dense(params[name], x, cfg.dtype)
+        if with_stats:  # dense projections never saturate a quantizer
+            return out, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32)
+        return out
+    from repro.core import fake_quant, pcilt_linear, quantize_with_stats
 
     scale = proj["scale"][name]
     path = proj.get("path", "fused")
 
     def _oracle(xx):
         xq = fake_quant(xx.astype(jnp.float32), proj["spec"], scale)
-        return dense(params[name], xq, jnp.float32).astype(cfg.dtype)
+        out = dense(params[name], xq, jnp.float32).astype(cfg.dtype)
+        if with_stats:
+            _, count, ratio = quantize_with_stats(xx, proj["spec"], scale)
+            return out, count, ratio
+        return out
 
     if path == "dense_fq":
         return _oracle(x)
@@ -129,7 +145,10 @@ def _proj(params, name, x, cfg, proj):
                            path=path, stacked=proj["layer"],
                            mesh=proj.get("mesh"),
                            mesh_axis=proj.get("mesh_axis", "model"),
-                           paired=paired)
+                           paired=paired, return_stats=with_stats)
+        if with_stats:
+            out, count, ratio = out
+            return out.astype(cfg.dtype), count, ratio
         return out.astype(cfg.dtype)
 
     ok = proj.get("ok")
@@ -167,53 +186,83 @@ def mamba_spec(cfg, dtype=jnp.float32):
     }
 
 
-def _conv1d(params, cfg, x, conv_state=None, pcilt=None):
+def _conv1d(params, cfg, x, conv_state=None, pcilt=None,
+            with_stats: bool = False):
     """Causal depthwise conv over [B, T, C]; returns (y, new_state).
 
     With ``pcilt`` set (see :func:`build_pcilt_conv`) the tap-dot is a PCILT
     fetch through the fused Pallas pipeline: decode evaluates the assembled
     ``[B, k, C]`` window as a VALID conv (one fetch per channel), full
     sequences run the CAUSAL fused kernel over the whole signal.
+
+    ``with_stats=True`` appends the quantizer's saturation ``(count,
+    ratio)`` to the return tuple (``quantize_with_stats`` semantics over
+    the conv input; the demoted oracle branch computes the identical stats
+    host-side so a demoted layer keeps reporting drift).
     """
     k = cfg.ssm.conv_kernel
     w = params["conv_w"].astype(x.dtype)  # [k, C]
+    zero_stats = (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
     if conv_state is not None:  # decode: state [B, k-1, C]
         window = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # [B,k,C]
         if pcilt is not None:
-            from repro.core import fake_quant, pcilt_depthwise_conv1d
+            from repro.core import (fake_quant, pcilt_depthwise_conv1d,
+                                    quantize_with_stats)
 
             def _fetch(win):
-                return pcilt_depthwise_conv1d(
+                out = pcilt_depthwise_conv1d(
                     win, params["conv_w"], pcilt["spec"],
                     pcilt["scale"], tables=pcilt["tables"], path="fused",
-                    padding="VALID").astype(x.dtype)  # [B, 1, C]
+                    padding="VALID", return_stats=with_stats)  # [B, 1, C]
+                if with_stats:
+                    out, count, ratio = out
+                    return out.astype(x.dtype), count, ratio
+                return out.astype(x.dtype)
 
             def _oracle(win):
                 wq = fake_quant(win.astype(jnp.float32), pcilt["spec"],
                                 pcilt["scale"])
-                return jnp.einsum(
+                out = jnp.einsum(
                     "bkc,kc->bc", wq, params["conv_w"].astype(jnp.float32)
                 )[:, None].astype(x.dtype)
+                if with_stats:
+                    _, count, ratio = quantize_with_stats(
+                        win, pcilt["spec"], pcilt["scale"])
+                    return out, count, ratio
+                return out
 
             ok = pcilt.get("ok")
             win = window[:, -k:]
             y = _fetch(win) if ok is None else jax.lax.cond(
                 ok, _fetch, _oracle, win)
+            if with_stats:
+                y, count, ratio = y
         else:
             y = jnp.einsum("bkc,kc->bc", window[:, -k:], w)[:, None]
+            count, ratio = zero_stats
         new_state = window[:, -(k - 1):]
-        return y + params["conv_b"].astype(x.dtype), new_state
+        y = y + params["conv_b"].astype(x.dtype)
+        if with_stats:
+            return y, new_state, count, ratio
+        return y, new_state
     if pcilt is not None:
         from repro.core import pcilt_depthwise_conv1d
 
         y = pcilt_depthwise_conv1d(
             x, params["conv_w"], pcilt["spec"], pcilt["scale"],
-            tables=pcilt["tables"], path="fused",
-            padding="CAUSAL").astype(x.dtype)
-        return y + params["conv_b"].astype(x.dtype), None
+            tables=pcilt["tables"], path="fused", padding="CAUSAL",
+            return_stats=with_stats)
+        if with_stats:
+            y, count, ratio = y
+            return (y.astype(x.dtype) + params["conv_b"].astype(x.dtype),
+                    None, count, ratio)
+        return y.astype(x.dtype) + params["conv_b"].astype(x.dtype), None
     pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
     y = sum(pad[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
-    return y + params["conv_b"].astype(x.dtype), None
+    y = y + params["conv_b"].astype(x.dtype)
+    if with_stats:
+        return y, None, *zero_stats
+    return y, None
 
 
 def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
@@ -295,15 +344,20 @@ def _split_heads(cfg, ctx, x_in, B_in, C_in, dt_in):
     return xh, Bm, Cm
 
 
-def _finish(params, cfg, ctx, y, xh, z, proj=None, return_inner=False):
+def _finish(params, cfg, ctx, y, xh, z, proj=None, return_inner=False,
+            with_stats: bool = False):
     d_inner, H, _ = _dims(cfg)
     Bsz, T = y.shape[:2]
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(Bsz, T, d_inner)
     y = y * jax.nn.silu(z.astype(y.dtype))
     y = rmsnorm(params["norm"], y, cfg.norm_eps)
-    out = _proj(params, "wo", y, cfg, proj)
+    out = _proj(params, "wo", y, cfg, proj, with_stats=with_stats)
+    if with_stats:
+        out, count, ratio = out
     out = ctx.constrain(out, "batch", "seq_sp", None)
+    if with_stats:
+        return out, count, ratio
     if return_inner:  # the wo input — what projection calibration observes
         return out, y
     return out
@@ -363,26 +417,45 @@ def mamba_block(params, cfg, ctx: Ctx, x: jax.Array,
 
 
 def mamba_decode(
-    params, cfg, ctx: Ctx, x: jax.Array, state: Dict, pcilt=None
-) -> Tuple[jax.Array, Dict]:
+    params, cfg, ctx: Ctx, x: jax.Array, state: Dict, pcilt=None,
+    with_stats: bool = False
+):
     """One-token step.  x [B,1,d]; state {conv [B,k-1,C], ssd [B,H,N,P]}.
 
     ``pcilt`` (from :func:`build_pcilt_conv`) replaces the conv frontend's
     tap-dot with one fused PCILT fetch per channel; a ``pcilt["proj"]``
     bundle (``MambaLM.build_pcilt(proj_scales=...)``) additionally routes
     every projection through the layer-stacked fused PCILT GEMV via
-    :func:`_proj` — the decode step is then fetch-bound end to end."""
+    :func:`_proj` — the decode step is then fetch-bound end to end.
+
+    ``with_stats=True`` additionally returns the layer's saturation
+    statistics ``{"in"|"conv"|"out": {"count", "ratio"}}`` — one entry per
+    *distinct* quantizer the step runs: ``wz``/``wx``/``wB``/``wC``/``wdt``
+    all quantize the same block input at the same ``"in"`` scale, so ``wx``
+    stands in for the whole input grid; ``"conv"`` is the conv-frontend
+    window; ``"out"`` is the post-norm gated ``wo`` input.  ``out`` and the
+    new state are bit-identical to the ``with_stats=False`` step."""
     s = cfg.ssm
     d_inner, H, _ = _dims(cfg)
     proj = None if pcilt is None else pcilt.get("proj")
+    stats = {}
     z = _proj(params, "wz", x, cfg, proj)
-    xi = _proj(params, "wx", x, cfg, proj)
+    xi = _proj(params, "wx", x, cfg, proj, with_stats=with_stats)
+    if with_stats:
+        xi, count, ratio = xi
+        stats["in"] = {"count": count, "ratio": ratio}
     Bi = _proj(params, "wB", x, cfg, proj)
     Ci = _proj(params, "wC", x, cfg, proj)
     dt = _proj(params, "wdt", x, cfg, proj).astype(jnp.float32)
 
     xBC = jnp.concatenate([xi, Bi, Ci], axis=-1)
-    xBC, conv_state = _conv1d(params, cfg, xBC, state["conv"], pcilt=pcilt)
+    conv = _conv1d(params, cfg, xBC, state["conv"], pcilt=pcilt,
+                   with_stats=with_stats)
+    if with_stats:
+        xBC, conv_state, count, ratio = conv
+        stats["conv"] = {"count": count, "ratio": ratio}
+    else:
+        xBC, conv_state = conv
     xBC = jax.nn.silu(xBC)
     xi, Bi, Ci = jnp.split(
         xBC, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1
@@ -399,9 +472,15 @@ def mamba_decode(
         "bhn,bhp->bhnp", Bm1 * dt[..., None], xh1
     )
     y = jnp.einsum("bhn,bhnp->bhp", Cm1, h)[:, None]  # [B,1,H,P]
-    out = _finish(params, cfg, ctx, y.astype(cfg.dtype), xh, z, proj=proj)
-    return out, {"conv": conv_state.astype(state["conv"].dtype),
+    out = _finish(params, cfg, ctx, y.astype(cfg.dtype), xh, z, proj=proj,
+                  with_stats=with_stats)
+    new_state = {"conv": conv_state.astype(state["conv"].dtype),
                  "ssd": h.astype(state["ssd"].dtype)}
+    if with_stats:
+        out, count, ratio = out
+        stats["out"] = {"count": count, "ratio": ratio}
+        return out, new_state, stats
+    return out, new_state
 
 
 def ssm_cache_specs(cfg, batch: int, n_layers: int, layer_axis: bool = True):

@@ -14,6 +14,10 @@ response):
   ``seg_idx`` pointers at wrong (possibly out-of-range) pool rows;
 * **activation poisoning** — :meth:`poison` plants NaN/Inf in decode
   activations or recurrent cache state;
+* **calibration drift** — :meth:`drift_scale` multiplies rows of a
+  parameter (e.g. one layer's norm gain) so the live activation
+  distribution walks away from the range the PCILTs were calibrated on —
+  the only fault class that corrupts *no* bytes, only the statistics;
 * **file garbling** — :meth:`garble_file` truncates or overwrites the
   persistent autotune JSON (or any on-disk artifact) in place.
 
@@ -119,6 +123,26 @@ class FaultInjector:
         flat[idx] = flat.dtype.type(val)
         self._record("activation_poison", poison=kind,
                      sites=[int(i) for i in idx], shape=tuple(a.shape))
+        return jnp.asarray(a)
+
+    # -- calibration drift ----------------------------------------------------
+
+    def drift_scale(self, x, gamma: float, rows: Optional[Sequence[int]] = None):
+        """Scale ``x`` (or just ``rows`` of its leading axis) by ``gamma``;
+        returns the drifted copy.  Unlike every other injection this leaves
+        all table bytes intact — checksums still pass, the dense oracle still
+        agrees — so only the saturation sentinel can catch it."""
+        import jax.numpy as jnp
+
+        a = np.asarray(x).copy()
+        if rows is None:
+            a *= a.dtype.type(gamma)
+            sites = "all"
+        else:
+            sites = [int(r) for r in rows]
+            a[sites] *= a.dtype.type(gamma)
+        self._record("calibration_drift", gamma=float(gamma), rows=sites,
+                     shape=tuple(a.shape))
         return jnp.asarray(a)
 
     # -- on-disk artifact garbling -------------------------------------------

@@ -32,7 +32,9 @@ def test_every_family_is_covered():
     assert names == {"gemv_host", "fused_gemv", "fused_gemv_stacked",
                      "fused_gemv_paired", "fused_gemv_paired_stacked",
                      "fused_gemv_plan", "conv2d_host", "fused_conv2d",
-                     "shared_gemv", "shared_conv2d", "fused_dwconv1d"}
+                     "shared_gemv", "shared_conv2d", "fused_dwconv1d",
+                     "fused_gemv_stacked_sat", "fused_gemv_paired_sat",
+                     "fused_gemv_paired_stacked_sat", "fused_dwconv1d_sat"}
 
 
 def test_no_kernel_execution_happens(monkeypatch):

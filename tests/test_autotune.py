@@ -286,10 +286,21 @@ def test_bounded_tunes_select_no_slower_tiles_on_recorded_cases(tune_cache):
     assert winner in unbounded
 
 
+def _quarantined(path):
+    """Timestamp-sorted (oldest first) quarantine files for ``path``."""
+    base = os.path.basename(path) + ".corrupt-"
+    d = os.path.dirname(path) or "."
+    names = [n for n in os.listdir(d) if n.startswith(base)
+             and n[len(base):].isdigit()]
+    return [os.path.join(d, n)
+            for n in sorted(names, key=lambda n: int(n[len(base):]))]
+
+
 def test_corrupt_cache_warns_quarantines_and_recovers(tune_cache, caplog):
     """A truncated/garbled cache file must never crash or silently reset:
     the load warns (naming the path and the parse error), preserves the
-    original bytes at ``<path>.corrupt``, and the cache keeps working."""
+    original bytes at a timestamped ``<path>.corrupt-<ns>``, and the cache
+    keeps working."""
     import logging
 
     from repro.runtime.faults import FaultInjector
@@ -308,7 +319,9 @@ def test_corrupt_cache_warns_quarantines_and_recovers(tune_cache, caplog):
             if r.name == "repro.autotune"]
     assert any(tune_cache in m and "corrupt" in m for m in msgs), msgs
     # original bytes preserved for post-mortem, live path starts empty
-    with open(tune_cache + ".corrupt", "rb") as f:
+    qfiles = _quarantined(tune_cache)
+    assert len(qfiles) == 1, qfiles
+    with open(qfiles[0], "rb") as f:
         assert f.read() == garbled
     assert not os.path.exists(tune_cache)
 
@@ -317,3 +330,27 @@ def test_corrupt_cache_warns_quarantines_and_recovers(tune_cache, caplog):
     ops.pcilt_fused_gemv(x, T, spec, s, group, autotune=True)
     assert atn.TIMING_RUNS > 0  # entry was lost with the corrupt file
     assert cache.lookup(next(iter(json.load(open(tune_cache))))) is not None
+
+
+def test_quarantine_distinct_files_and_keeps_newest_three(tune_cache):
+    """Repeated corruption must (a) never overwrite an earlier incident's
+    post-mortem bytes — every quarantine gets a distinct timestamped name —
+    and (b) never grow unbounded: only the newest
+    ``QUARANTINE_KEEP`` (3) quarantined copies survive."""
+    incidents = []
+    for i in range(5):
+        payload = b"not json at all #%d" % i
+        with open(tune_cache, "wb") as f:
+            f.write(payload)
+        atn.reset_cache(tune_cache)
+        qfiles = _quarantined(tune_cache)
+        assert qfiles, f"incident {i} was not quarantined"
+        with open(qfiles[-1], "rb") as f:
+            assert f.read() == payload  # newest file = this incident's bytes
+        incidents.append(qfiles[-1])
+        assert not os.path.exists(tune_cache)
+    assert len(set(incidents)) == 5  # distinct name per incident
+    survivors = _quarantined(tune_cache)
+    assert len(survivors) == atn.QUARANTINE_KEEP == 3
+    # the survivors are exactly the three newest incidents, oldest pruned
+    assert survivors == incidents[-3:]

@@ -428,14 +428,18 @@ def test_monitor_demotion_with_two_slots_mid_request(donor):
 
 
 def test_per_slot_count_executors_cached_and_dropped_on_rehoist(donor):
-    """The decode engine hoists one jitted executor per slot count (R is a
-    tuned, keyed axis): repeat lookups hit the cache, distinct row counts
-    get distinct executors, and rehoist drops them all for lazy rebuild."""
+    """The decode engine hoists one jitted executor per (slot count, stats)
+    pair (R is a tuned, keyed axis; the counter outputs change the result
+    pytree): repeat lookups hit the cache, distinct row counts and the
+    monitored variant get distinct executors, and rehoist drops them all
+    for lazy rebuild."""
     pd = donor.pdecode
     e1, e2 = pd.executor(1), pd.executor(2)
+    es = pd.executor(1, stats=True)
     assert pd.executor(1) is e1 and pd.executor(2) is e2
-    assert e1 is not e2
-    assert set(pd._execs) == {1, 2}
+    assert pd.executor(1, stats=True) is es
+    assert e1 is not e2 and es is not e1
+    assert set(pd._execs) == {(1, False), (2, False), (1, True)}
     pd.rehoist()
     assert pd._execs == {}  # stale closures dropped, rebuilt on next step
     assert pd.executor(2) is not e2
